@@ -1,0 +1,331 @@
+"""One benchmark function per paper table/figure (DESIGN.md §8 index).
+
+Each returns a derived-metrics dict and emits a ``name,us_per_call,derived``
+CSV row via common.emit.  Dataset scale is container-sized (BENCH_N env to
+grow); dimensionalities match the paper's Table 2.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (BENCH_DATASETS, N_QUERY, cached_index, dataset,
+                               emit, timed)
+from repro.core.angles import sample_angle_profile, theoretical_angle_pdf
+from repro.core.ref_search import search_ref, descend_hierarchy_ref
+from repro.core.search import EngineConfig
+from repro.data.vectors import exact_ground_truth, recall_at_k
+
+
+def _search(idx, queries, router, efs, k=10):
+    ids, dists, info = idx.search(queries, k=k, efs=efs, router=router)
+    return ids, info
+
+
+def _recall_curve(idx, ds, gt, router, efs_grid, k=10):
+    """Returns list of (efs, recall, qps, dist_calls/query)."""
+    out = []
+    for efs in efs_grid:
+        # warm the jit, then time
+        idx.search(ds.queries[:4], k=k, efs=efs, router=router)
+        t0 = time.perf_counter()
+        ids, _, info = idx.search(ds.queries, k=k, efs=efs, router=router)
+        dt = time.perf_counter() - t0
+        out.append((efs, recall_at_k(ids, gt, k),
+                    len(ds.queries) / dt, float(info["dist_calls"].mean())))
+    return out
+
+
+# --------------------------------------------------------------------------
+def fig2_time_breakdown():
+    """Fig. 2: fraction of greedy-search time spent in distance calls."""
+    derived = {}
+    for name in ("sift-synth", "gist-synth"):
+        ds = dataset(name, n_base=3000)
+        idx = cached_index(ds)
+        g = idx.graph
+        import repro.core.ref_search as R
+
+        dist_time = 0.0
+        orig = R._rank_dist
+
+        def timed_dist(q, x, metric):
+            nonlocal dist_time
+            t0 = time.perf_counter()
+            out = orig(q, x, metric)
+            dist_time += time.perf_counter() - t0
+            return out
+
+        R._rank_dist = timed_dist
+        t0 = time.perf_counter()
+        for q in ds.queries[:20]:
+            search_ref(g, q, efs=64)
+        total = time.perf_counter() - t0
+        R._rank_dist = orig
+        derived[name] = {"dist_frac": round(dist_time / total, 3),
+                         "dim": ds.base.shape[1]}
+    emit("fig2_time_breakdown", 0.0, derived)
+    return derived
+
+
+def fig6_8_angles():
+    """Fig. 6/7/8: empirical angle distribution vs dimension + invariance."""
+    derived = {}
+    for name in BENCH_DATASETS:
+        ds = dataset(name, n_base=3000)
+        idx = cached_index(ds)
+        prof = idx.profile
+        d = ds.base.shape[1]
+        eta = np.linspace(0.01, np.pi - 0.01, 2000)
+        pdf = theoretical_angle_pdf(eta, d)
+        derived[name] = {
+            "dim": d,
+            "median_over_pi": round(float(np.median(prof.samples)) / np.pi, 4),
+            "p90_over_pi": round(float(np.percentile(prof.samples, 90)) / np.pi, 4),
+            "std_over_pi": round(float(prof.samples.std()) / np.pi, 4),
+            "theory_mode_over_pi": round(float(eta[np.argmax(pdf)]) / np.pi, 4),
+        }
+    # invariance in query count (Fig. 8)
+    ds = dataset("sift-synth", n_base=3000)
+    idx = cached_index(ds)
+    meds = []
+    for ns in (4, 16, 64):
+        p = sample_angle_profile(idx.graph, n_sample=ns, efs=64, seed=9)
+        meds.append(float(np.median(p.samples)) / np.pi)
+    derived["query_count_invariance_medians"] = [round(m, 4) for m in meds]
+    emit("fig6_8_angles", 0.0, derived)
+    return derived
+
+
+def fig10_recall_qps():
+    """Fig. 10: recall-QPS curves, HNSW & NSG, plain vs CRouting(_O)."""
+    derived = {}
+    efs_grid = (24, 48, 96, 160)
+    for gname in ("hnsw", "nsg"):
+        ds = dataset("sift-synth")
+        idx = cached_index(ds, graph=gname)
+        gt = exact_ground_truth(ds, k=10)
+        rows = {}
+        for router in ("none", "crouting", "crouting_o"):
+            rows[router] = [(e, round(r, 3), round(q, 1), round(c, 1))
+                            for e, r, q, c in
+                            _recall_curve(idx, ds, gt, router, efs_grid)]
+        # iso-recall QPS gain at ~0.9
+        def qps_at(router, target):
+            pts = [(abs(r - target), q) for _, r, q, _ in rows[router]]
+            return min(pts)[1]
+        derived[gname] = {"curves": rows,
+                          "qps_gain_at_0.9": round(
+                              qps_at("crouting", 0.9) / max(qps_at("none", 0.9), 1e-9), 2)}
+    emit("fig10_recall_qps", 0.0,
+         {g: d["qps_gain_at_0.9"] for g, d in derived.items()})
+    return derived
+
+
+def fig11_recall_speedup():
+    """Fig. 11: distance-call speedup (plain calls / CRouting calls) at
+    matched recall."""
+    derived = {}
+    for gname in ("hnsw", "nsg"):
+        ds = dataset("sift-synth")
+        idx = cached_index(ds, graph=gname)
+        gt = exact_ground_truth(ds, k=10)
+        plain = _recall_curve(idx, ds, gt, "none", (24, 48, 96, 160))
+        cr = _recall_curve(idx, ds, gt, "crouting", (24, 48, 96, 160, 256))
+        speedups = []
+        for _, r_p, _, c_p in plain:
+            ok = [(abs(r_c - r_p), c_c) for _, r_c, _, c_c in cr if r_c >= r_p - 0.01]
+            if ok:
+                speedups.append(round(c_p / min(ok)[1], 3))
+        derived[gname] = {"recall_pts": [round(r, 3) for _, r, _, _ in plain],
+                          "call_speedups": speedups}
+    emit("fig11_recall_speedup", 0.0, derived)
+    return derived
+
+
+def table3_efs_ablation():
+    """Table 3: recall + hops (exact distance calls) across efs."""
+    ds = dataset("deep-synth")
+    idx = cached_index(ds)
+    gt = exact_ground_truth(ds, k=10)
+    rows = []
+    for efs in (24, 48, 96, 160, 256):
+        row = {"efs": efs}
+        for router in ("none", "crouting_o", "crouting"):
+            ids, _, info = idx.search(ds.queries, k=10, efs=efs, router=router)
+            row[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
+                           "hops": int(info["dist_calls"].sum())}
+        rows.append(row)
+    emit("table3_efs_ablation", 0.0, {"rows": rows})
+    return rows
+
+
+def table4_5_error_analysis():
+    """Tables 4/5: relative estimation error + incorrect-prune ratio."""
+    derived = {}
+    for name in BENCH_DATASETS:
+        ds = dataset(name, n_base=3000)
+        idx = cached_index(ds)
+        g, prof = idx.graph, idx.profile
+        errs, bad, tot = [], 0, 0
+        for q in ds.queries[:25]:
+            _, _, st_p = search_ref(g, q, efs=64)
+            ids, _, st = search_ref(g, q, efs=64, router="crouting",
+                                    cos_theta=prof.cos_theta_star,
+                                    record_est_error=True)
+            for est, true in st.est_pairs:
+                if true > 1e-9:
+                    errs.append(abs(true - est) / true)
+            tot += max(len(st.pruned_ids), 1)
+            bad += len(st.pruned_ids & st_p.visited_ids
+                       & set(int(x) for x in ids if x >= 0))
+        derived[name] = {"mean_rel_err": round(float(np.mean(errs)), 4),
+                         "incorrect_prune_ratio": round(bad / tot, 4)}
+    emit("table4_5_error_analysis", 0.0, derived)
+    return derived
+
+
+def fig13_threshold():
+    """Fig. 13: pruning-threshold percentile sweep."""
+    ds = dataset("sift-synth")
+    idx = cached_index(ds)
+    gt = exact_ground_truth(ds, k=10)
+    rows = []
+    for pct in (10, 50, 75, 90, 99):
+        prof = idx.profile.at_percentile(pct)
+        ids, _, info = idx.search(ds.queries, k=10, efs=64, router="crouting",
+                                  cos_theta=prof.cos_theta_star)
+        rows.append({"pct": pct,
+                     "recall": round(recall_at_k(ids, gt, 10), 3),
+                     "calls": round(float(info["dist_calls"].mean()), 1)})
+    emit("fig13_threshold", 0.0, {"rows": rows})
+    return rows
+
+
+def fig14_15_neighbors_k():
+    """Fig. 14/15: M sweep and result-number K sweep."""
+    ds = dataset("sift-synth")
+    gt100 = exact_ground_truth(ds, k=100)
+    derived = {"m_sweep": [], "k_sweep": []}
+    for m in (8, 16, 32):
+        idx = cached_index(ds, m=m, efc=8 * m)
+        gt = exact_ground_truth(ds, k=10)
+        r = {}
+        for router in ("none", "crouting"):
+            ids, _, info = idx.search(ds.queries, k=10, efs=64, router=router)
+            r[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
+                         "calls": round(float(info["dist_calls"].mean()), 1)}
+        derived["m_sweep"].append({"m": m, **r})
+    idx = cached_index(ds, m=16, efc=128)
+    for k in (1, 10, 100):
+        r = {}
+        for router in ("none", "crouting"):
+            ids, _, info = idx.search(ds.queries, k=k, efs=max(128, k),
+                                      router=router)
+            r[router] = {"recall": round(recall_at_k(ids, gt100[:, :k], k), 3),
+                         "calls": round(float(info["dist_calls"].mean()), 1)}
+        derived["k_sweep"].append({"k": k, **r})
+    emit("fig14_15_neighbors_k", 0.0, derived)
+    return derived
+
+
+def fig16_metrics():
+    """Fig. 16: generality across l2 / ip / cosine."""
+    derived = {}
+    for metric in ("l2", "cosine", "ip"):
+        ds = dataset("deep-synth", n_base=3000, metric=metric)
+        idx = cached_index(ds)
+        gt = exact_ground_truth(ds, k=10)
+        prof = idx.profile
+        row = {"theta_median_over_pi":
+               round(float(np.median(prof.samples)) / np.pi, 4)}
+        for router in ("none", "crouting"):
+            ids, _, info = idx.search(ds.queries, k=10, efs=64, router=router)
+            row[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
+                           "calls": round(float(info["dist_calls"].mean()), 1)}
+        derived[metric] = row
+    emit("fig16_metrics", 0.0, derived)
+    return derived
+
+
+def fig17_scalability():
+    """Fig. 17: call-speedup holds as N grows."""
+    derived = {}
+    for n in (2000, 8000, 20000):
+        ds = dataset("sift-synth", n_base=n)
+        idx = cached_index(ds)
+        gt = exact_ground_truth(ds, k=10)
+        row = {}
+        for router in ("none", "crouting"):
+            ids, _, info = idx.search(ds.queries, k=10, efs=64, router=router)
+            row[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
+                           "calls": round(float(info["dist_calls"].mean()), 1)}
+        row["call_speedup"] = round(row["none"]["calls"]
+                                    / row["crouting"]["calls"], 3)
+        derived[f"n={n}"] = row
+    emit("fig17_scalability", 0.0,
+         {k: v["call_speedup"] for k, v in derived.items()})
+    return derived
+
+
+def table6_7_construction():
+    """Tables 6/7: construction time + index size across routing strategies."""
+    from repro.core.finger import build_finger
+    from repro.core.togg import build_togg
+
+    ds = dataset("sift-synth", n_base=4000)
+    idx = cached_index(ds)
+    g = idx.graph
+    base_secs = (g.build_stats or {}).get("build_secs", 1.0)
+    prof_secs = (g.build_stats or {}).get("profile_secs", 0.0)
+    if not prof_secs:
+        prof_secs = sample_angle_profile(g, seed=5).sample_secs
+    fi = build_finger(g)
+    ti = build_togg(g)
+    mem = g.memory_bytes()
+    base_bytes = mem["total"] - mem["mem_dist"]
+    derived = {
+        "construction_overhead": {
+            "crouting": round(prof_secs / base_secs, 4),
+            "finger": round(fi.build_secs / base_secs, 4),
+            "togg": round(ti.build_secs / base_secs, 4),
+        },
+        "index_size_overhead": {
+            "crouting": round(mem["mem_dist"] / base_bytes, 4),
+            "finger": round(fi.extra_bytes() / base_bytes, 4),
+            "togg": round(ti.extra_bytes() / base_bytes, 4),
+        },
+    }
+    emit("table6_7_construction", 0.0, derived)
+    return derived
+
+
+def fig18_strategies():
+    """Fig. 18: routing-strategy comparison at fixed efs (recall + calls)."""
+    from repro.core.finger import build_finger, finger_search
+    from repro.core.togg import build_togg, togg_search
+
+    ds = dataset("sift-synth", n_base=4000)
+    idx = cached_index(ds)
+    g = idx.graph
+    gt = exact_ground_truth(ds, k=10)
+    derived = {}
+    ids_c, _, info_c = idx.search(ds.queries, k=10, efs=64, router="crouting")
+    derived["crouting"] = {"recall": round(recall_at_k(ids_c, gt, 10), 3),
+                           "calls": round(float(info_c["dist_calls"].mean()), 1)}
+    fi = build_finger(g)
+    ti = build_togg(g)
+    for name, fn in (("finger", lambda q, e: finger_search(fi, q, e, 64)),
+                     ("togg", lambda q, e: togg_search(ti, q, e, 64))):
+        ids_all, calls = [], 0
+        for q in ds.queries[:50]:
+            e, ec = descend_hierarchy_ref(g, q)
+            ids, _, st = fn(q, e)
+            ids_all.append(ids[:10])
+            calls += st.dist_calls + ec
+        derived[name] = {"recall": round(
+            recall_at_k(np.asarray(ids_all), gt[:50], 10), 3),
+            "calls": round(calls / 50, 1)}
+    emit("fig18_strategies", 0.0, derived)
+    return derived

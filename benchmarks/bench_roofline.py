@@ -1,0 +1,40 @@
+"""§Roofline reporting: read dryrun_results.json, print the per-cell table
+(three terms, dominant bottleneck, model-flop ratio) for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def roofline_table(mesh: str = "16x16"):
+    if not os.path.exists(RESULTS):
+        emit("roofline_table", 0.0, {"error": "run repro.launch.dryrun first"})
+        return {}
+    cache = json.load(open(RESULTS))
+    rows = []
+    for key, r in sorted(cache.items()):
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rows.append({
+            "cell": f"{r['arch']}/{r['shape']}",
+            "step": r["step"],
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "dominant": r["dominant"].replace("_s", ""),
+            "useful_flop_ratio": round(r.get("useful_flop_ratio", 0.0), 3),
+            "mfu_ub": round(r.get("mfu_upper_bound", 0.0), 3),
+            "mem_gb": round(r["mem_total_bytes"] / 1e9, 2),
+        })
+    dom_counts = {}
+    for row in rows:
+        dom_counts[row["dominant"]] = dom_counts.get(row["dominant"], 0) + 1
+    emit("roofline_table", 0.0, {"mesh": mesh, "cells": len(rows),
+                                 "dominant_counts": dom_counts})
+    for row in rows:
+        print("  " + json.dumps(row))
+    return rows

@@ -1,0 +1,76 @@
+"""Shared benchmark plumbing: cached index builds + timing helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.angles import AngleProfile, sample_angle_profile
+from repro.core.hnsw import build_hnsw
+from repro.core.index import AnnIndex
+from repro.core.nsg import build_nsg
+from repro.data.vectors import VectorDataset, make_dataset, exact_ground_truth
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", ".cache")
+os.makedirs(CACHE, exist_ok=True)
+
+# benchmark-scale stand-ins for the paper's datasets (dim preserved)
+BENCH_DATASETS = {
+    "sift-synth": dict(dim=128, n_clusters=64),
+    "deep-synth": dict(dim=256, n_clusters=48),
+    "gist-synth": dict(dim=960, n_clusters=32),
+}
+N_BASE = int(os.environ.get("BENCH_N", 6000))
+N_QUERY = int(os.environ.get("BENCH_Q", 100))
+
+
+def dataset(name: str, n_base: int = None, metric: str = "l2",
+            seed: int = 0) -> VectorDataset:
+    cfg = BENCH_DATASETS[name]
+    return make_dataset(name=name, n_base=n_base or N_BASE, n_query=N_QUERY,
+                        dim=cfg["dim"], n_clusters=cfg["n_clusters"],
+                        metric=metric, seed=seed)
+
+
+def cached_index(ds: VectorDataset, graph: str = "hnsw", m: int = 16,
+                 efc: int = 128, **kw) -> AnnIndex:
+    key = f"{ds.name}_{ds.base.shape[0]}_{ds.metric}_{graph}_m{m}_efc{efc}"
+    path = os.path.join(CACHE, key + ".npz")
+    meta = os.path.join(CACHE, key + ".json")
+    if os.path.exists(path):
+        idx = AnnIndex.load(path)
+        if os.path.exists(meta):
+            idx.graph.build_stats = json.load(open(meta))
+        return idx
+    t0 = time.time()
+    if graph == "hnsw":
+        g = build_hnsw(ds.base, metric=ds.metric, m=m, efc=efc, seed=0)
+    else:
+        g = build_nsg(ds.base, metric=ds.metric, r=2 * m, c=4 * efc // 2,
+                      l=efc // 2, knn_k=2 * m)
+    prof = sample_angle_profile(g, seed=0)
+    idx = AnnIndex(graph=g, profile=prof)
+    idx.save(path)
+    stats = dict(g.build_stats or {})
+    stats["profile_secs"] = prof.sample_secs
+    stats["total_secs"] = time.time() - t0
+    json.dump(stats, open(meta, "w"))
+    idx.graph.build_stats = stats
+    return idx
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> Tuple[float, object]:
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def emit(name: str, us_per_call: float, derived: Dict):
+    """The harness's output contract: ``name,us_per_call,derived`` CSV."""
+    print(f"{name},{us_per_call:.2f},{json.dumps(derived, sort_keys=True)}")

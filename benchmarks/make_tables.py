@@ -1,0 +1,56 @@
+"""Format dryrun_results.json into the EXPERIMENTS.md §Dry-run / §Roofline
+markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.make_tables [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--results", default=RESULTS)
+    args = ap.parse_args()
+    cache = json.load(open(args.results))
+    rows = [r for r in cache.values()
+            if r.get("status") == "ok" and r.get("mesh") == args.mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    print(f"### Roofline — mesh {args.mesh} "
+          f"(TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link)\n")
+    print("| cell | step | compute s | memory s | collective s | dominant | "
+          "MODEL/HLO flops | MFU ub | mem GB/dev | correction |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']}/{r['shape']} | {r['step'].replace('_step','')} "
+              f"| {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+              f"| {fmt(r['collective_s'])} | {r['dominant'].replace('_s','')} "
+              f"| {r.get('useful_flop_ratio', 0):.2f} "
+              f"| {r.get('mfu_upper_bound', 0):.3f} "
+              f"| {r['mem_total_bytes']/1e9:.2f} "
+              f"| {r.get('loop_correction','-')} |")
+
+    print("\n### Collective schedule summary\n")
+    print("| cell | all-reduce | all-gather | reduce-scatter | all-to-all | "
+          "permute | wire GB/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        c = r.get("collective_counts", {})
+        print(f"| {r['arch']}/{r['shape']} | {c.get('all-reduce', 0)} "
+              f"| {c.get('all-gather', 0)} | {c.get('reduce-scatter', 0)} "
+              f"| {c.get('all-to-all', 0)} | {c.get('collective-permute', 0)} "
+              f"| {r['collective_wire_bytes']/1e9:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run [--only X]``.
+
+Covers every table/figure of the paper (DESIGN.md §8) plus kernel micros and
+the dry-run roofline table.  Scale via BENCH_N / BENCH_Q env vars.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import bench_paper as P
+from benchmarks import bench_kernels as K
+from benchmarks import bench_roofline as R
+
+BENCHES = [
+    ("fig2_time_breakdown", P.fig2_time_breakdown),
+    ("fig6_8_angles", P.fig6_8_angles),
+    ("fig10_recall_qps", P.fig10_recall_qps),
+    ("fig11_recall_speedup", P.fig11_recall_speedup),
+    ("table3_efs_ablation", P.table3_efs_ablation),
+    ("table4_5_error_analysis", P.table4_5_error_analysis),
+    ("fig13_threshold", P.fig13_threshold),
+    ("fig14_15_neighbors_k", P.fig14_15_neighbors_k),
+    ("fig16_metrics", P.fig16_metrics),
+    ("fig17_scalability", P.fig17_scalability),
+    ("table6_7_construction", P.table6_7_construction),
+    ("fig18_strategies", P.fig18_strategies),
+    ("kernels_micro", K.kernels_micro),
+    ("roofline_table", R.roofline_table),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    failed = []
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            failed.append(name)
+            print(f"{name},nan,{{\"error\": \"{e!r}\"}}")
+            traceback.print_exc()
+        print(f"#     ({time.time()-t0:.1f}s)", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks ok")
+
+
+if __name__ == '__main__':
+    main()

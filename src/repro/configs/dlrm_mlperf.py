@@ -1,0 +1,13 @@
+"""dlrm-mlperf [recsys] — MLPerf DLRM (Criteo 1TB) [arXiv:1906.00091]."""
+from repro.configs import ArchSpec
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.dlrm import DlrmConfig
+
+SPEC = ArchSpec(
+    arch_id="dlrm-mlperf",
+    family="recsys",
+    model_cfg=DlrmConfig(),
+    shapes=RECSYS_SHAPES,
+    source="arXiv:1906.00091; paper (MLPerf reference config)",
+    smoke_cfg=DlrmConfig(name="dlrm-smoke", vocab_cap=1000),
+)

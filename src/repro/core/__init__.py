@@ -1,0 +1,23 @@
+# The paper's primary contribution: CRouting — cosine-theorem distance-call
+# pruning with error correction, as a plugin over graph-based ANNS search.
+#
+# Layout:
+#   distances.py    metric registry (l2 / ip / cosine) + Euclidean conversions
+#   graph.py        padded TPU-native graph container (+ stored edge dists)
+#   ref_search.py   scalar NumPy oracle of Algorithm 1/2 (tests + construction)
+#   search.py       batched JAX engine (lax.while_loop) with router plugins:
+#                   none | crouting | crouting_o | triangle
+#   angles.py       angle-distribution sampling, theta* selection (Eq. 3)
+#   hnsw.py/nsg.py  index construction (keeps edge distances for CRouting)
+#   knn_graph.py    exact KNN graph (NSG substrate, brute-force oracle)
+#   finger.py/togg.py/kdtree.py   comparison routing strategies (paper §5.7)
+#   index.py        user-facing AnnIndex (build/search/save/load)
+#   sharded_index.py  multi-device dataset-sharded serving (shard_map)
+
+from repro.core.distances import get_metric, METRICS  # noqa: F401
+from repro.core.graph import GraphIndex  # noqa: F401
+from repro.core.search import EngineConfig, SearchResult, search_batch  # noqa: F401
+from repro.core.angles import AngleProfile, sample_angle_profile, theoretical_angle_pdf  # noqa: F401
+from repro.core.index import AnnIndex  # noqa: F401
+
+ROUTERS = ("none", "triangle", "crouting", "crouting_o")

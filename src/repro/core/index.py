@@ -1,0 +1,119 @@
+"""High-level ANNS index API: build -> profile angles -> search.
+
+This is the user-facing entry point of the CRouting system:
+
+    idx = AnnIndex.build(base, graph="hnsw", metric="l2")
+    ids, dists, info = idx.search(queries, k=10, efs=100, router="crouting")
+
+Index persistence is a plain .npz (content-addressed in benchmarks' cache);
+a replacement serving node re-pulls only its shard (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import distances as D
+from repro.core.angles import AngleProfile, sample_angle_profile
+from repro.core.graph import GraphIndex
+from repro.core.hnsw import build_hnsw
+from repro.core.nsg import build_nsg
+from repro.core.knn_graph import build_knn_graph
+from repro.core.search import EngineConfig, SearchResult, build_search_fn
+
+GRAPH_BUILDERS = {"hnsw": build_hnsw, "nsg": build_nsg, "knn": build_knn_graph}
+
+
+@dataclasses.dataclass
+class AnnIndex:
+    graph: GraphIndex
+    profile: Optional[AngleProfile] = None
+    _engines: Dict = dataclasses.field(default_factory=dict)
+
+    # --- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, base: np.ndarray, graph: str = "hnsw", metric: str = "l2",
+              profile_percentile: float = 90.0, seed: int = 0,
+              profile: bool = True, **graph_kw) -> "AnnIndex":
+        g = GRAPH_BUILDERS[graph](base, metric=metric, seed=seed, **graph_kw) \
+            if graph != "knn" else build_knn_graph(base, metric=metric, **graph_kw)
+        prof = sample_angle_profile(g, percentile=profile_percentile, seed=seed) \
+            if profile else None
+        return cls(graph=g, profile=prof)
+
+    # --- search ---------------------------------------------------------------
+    def _engine(self, cfg: EngineConfig):
+        key = dataclasses.astuple(cfg)
+        if key not in self._engines:
+            self._engines[key] = build_search_fn(self.graph, cfg)
+        return self._engines[key]
+
+    def search(self, queries: np.ndarray, k: int = 10, efs: int = 100,
+               router: str = "crouting", cos_theta: Optional[float] = None,
+               max_hops: int = 4096) -> Tuple[np.ndarray, np.ndarray, dict]:
+        import jax.numpy as jnp
+
+        queries = D.preprocess_vectors(
+            np.ascontiguousarray(queries, np.float32), self.graph.metric)
+        if cos_theta is None:
+            cos_theta = self.profile.cos_theta_star if self.profile else 0.0
+        cfg = EngineConfig(efs=max(efs, k), router=router,
+                           metric=self.graph.metric, max_hops=max_hops,
+                           use_hierarchy=self.graph.upper_neighbors is not None)
+        _, fn = self._engine(cfg)
+        res: SearchResult = fn(jnp.asarray(queries), jnp.asarray(cos_theta, jnp.float32))
+        ids = np.asarray(res.ids[:, :k]).astype(np.int64)
+        ids[ids >= self.graph.n] = -1
+        info = {
+            "dist_calls": np.asarray(res.dist_calls),
+            "est_calls": np.asarray(res.est_calls),
+            "hops": np.asarray(res.hops),
+        }
+        return ids, np.asarray(res.dists[:, :k]), info
+
+    # --- persistence ----------------------------------------------------------
+    def save(self, path: str):
+        g = self.graph
+        payload = dict(
+            vectors=g.vectors, neighbors=g.neighbors, edge_eu_dist=g.edge_eu_dist,
+            entry_point=np.asarray(g.entry_point), metric=np.asarray(g.metric),
+            kind=np.asarray(g.kind),
+        )
+        if g.norms is not None:
+            payload["norms"] = g.norms
+        if g.upper_neighbors:
+            payload["n_upper"] = np.asarray(len(g.upper_neighbors))
+            for i, (ids, mat) in enumerate(zip(g.upper_ids, g.upper_neighbors)):
+                payload[f"upper_ids_{i}"] = ids
+                payload[f"upper_nbrs_{i}"] = mat
+        if self.profile is not None:
+            payload["theta_samples"] = self.profile.samples
+            payload["theta_star"] = np.asarray(self.profile.theta_star)
+            payload["theta_pct"] = np.asarray(self.profile.percentile)
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        np.savez_compressed(path, **payload)
+
+    @classmethod
+    def load(cls, path: str) -> "AnnIndex":
+        z = np.load(path, allow_pickle=False)
+        upper_ids = upper_nbrs = None
+        if "n_upper" in z:
+            k = int(z["n_upper"])
+            upper_ids = [z[f"upper_ids_{i}"] for i in range(k)]
+            upper_nbrs = [z[f"upper_nbrs_{i}"] for i in range(k)]
+        g = GraphIndex(
+            vectors=z["vectors"], neighbors=z["neighbors"],
+            edge_eu_dist=z["edge_eu_dist"], entry_point=int(z["entry_point"]),
+            metric=str(z["metric"]), norms=z.get("norms"),
+            upper_ids=upper_ids, upper_neighbors=upper_nbrs, kind=str(z["kind"]))
+        prof = None
+        if "theta_samples" in z:
+            th = float(z["theta_star"])
+            prof = AngleProfile(theta_star=th, cos_theta_star=float(np.cos(th)),
+                                percentile=float(z["theta_pct"]),
+                                samples=z["theta_samples"],
+                                n_sample_queries=0, sample_secs=0.0)
+        return cls(graph=g, profile=prof)

@@ -1,0 +1,126 @@
+"""NSG construction (Fu et al., VLDB'19) with CRouting bookkeeping.
+
+Pipeline (faithful to the paper at container scale):
+  1. exact K-NN graph (knn_graph.py);
+  2. medoid = navigating node;
+  3. per node p: candidate pool = search(p, on KNN graph, pool C) — batched on
+     device through the JAX engine (all nodes at once, DESIGN.md §7 note on
+     vectorized construction);
+  4. MRNG edge selection over the candidates (keep c iff no kept s has
+     dist(c, s) < dist(c, p));
+  5. grow a spanning tree from the medoid to guarantee connectivity.
+
+Defaults follow the paper §5.1: R=70 (degree), C=500 (candidates), L=60
+(search pool).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import distances as D
+from repro.core.graph import GraphIndex, pad_adjacency
+from repro.core.knn_graph import build_knn_graph
+from repro.core.search import EngineConfig, search_batch
+
+
+def _mrng_select(p: int, cand_ids: np.ndarray, cand_rank: np.ndarray,
+                 base: np.ndarray, metric: str, r: int):
+    """MRNG pruning: candidates in ascending distance; keep c iff for all
+    already-kept s: dist(c, s) >= dist(c, p)."""
+    order = np.argsort(cand_rank, kind="stable")
+    cand_ids, cand_rank = cand_ids[order], cand_rank[order]
+    cvecs = base[cand_ids]
+    pw = D.pairwise_np(cvecs, cvecs, metric)
+    kept: List[int] = []
+    kept_rank: List[float] = []
+    for pos in range(len(cand_ids)):
+        if len(kept) >= r:
+            break
+        ok = True
+        for kpos in kept:
+            if pw[pos, kpos] < cand_rank[pos]:
+                ok = False
+                break
+        if ok:
+            kept.append(pos)
+            kept_rank.append(float(cand_rank[pos]))
+    return cand_ids[kept], np.asarray(kept_rank, np.float32)
+
+
+def build_nsg(base: np.ndarray, metric: str = "l2", r: int = 70, c: int = 500,
+              l: int = 60, knn_k: int = 64, seed: int = 0,
+              search_batch_size: int = 512) -> GraphIndex:
+    t0 = time.time()
+    base = D.preprocess_vectors(np.ascontiguousarray(base, np.float32), metric)
+    n = base.shape[0]
+    knn = build_knn_graph(base, k=knn_k, metric=metric)
+    norms = knn.norms
+    medoid = knn.entry_point
+
+    # --- step 3: batched candidate acquisition on the KNN graph -------------
+    pool = max(l, min(c, n - 1))
+    cfg = EngineConfig(efs=pool, router="none", metric=metric,
+                       max_hops=4 * pool, use_hierarchy=False)
+    cand_ids = np.empty((n, pool), np.int64)
+    cand_rank = np.empty((n, pool), np.float32)
+    from repro.core.search import build_search_fn
+    import jax.numpy as jnp
+    _, fn = build_search_fn(knn, cfg)
+    for s in range(0, n, search_batch_size):
+        res = fn(jnp.asarray(base[s : s + search_batch_size]), jnp.asarray(0.0))
+        cand_ids[s : s + search_batch_size] = np.asarray(res.ids)
+        cand_rank[s : s + search_batch_size] = np.asarray(res.dists)
+
+    # --- step 4: MRNG selection ---------------------------------------------
+    adj: List[np.ndarray] = [None] * n
+    dists: List[np.ndarray] = [None] * n
+    for p in range(n):
+        ids, rank = cand_ids[p], cand_rank[p]
+        mask = (ids != p) & (ids < n)
+        # merge the KNN neighbors in (the NSG paper unions search results with
+        # the node's KNN list)
+        kn = knn.neighbors[p][knn.neighbors[p] < n].astype(np.int64)
+        kn_rank = D.pairwise_np(base[p : p + 1], base[kn], metric)[0]
+        ids = np.concatenate([ids[mask], kn])
+        rank = np.concatenate([rank[mask], kn_rank])
+        ids, uniq = np.unique(ids, return_index=True)
+        rank = rank[uniq]
+        kept, kept_rank = _mrng_select(p, ids, rank, base, metric, r)
+        adj[p] = kept.astype(np.int64)
+        dists[p] = D.rank_to_eu_np(kept_rank, norms[p], norms[kept], metric)
+
+    # --- step 5: connectivity (spanning tree from medoid) -------------------
+    seen = np.zeros(n, bool)
+    stack = [medoid]
+    seen[medoid] = True
+    order = []
+    while stack:
+        u = stack.pop()
+        order.append(u)
+        for v in adj[u]:
+            if not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    n_orphans = 0
+    for p in np.nonzero(~seen)[0]:
+        # attach orphan to its nearest reachable node
+        reach = np.nonzero(seen)[0]
+        dd = D.pairwise_np(base[p : p + 1], base[reach], metric)[0]
+        tgt = int(reach[np.argmin(dd)])
+        eu = D.rank_to_eu_np(np.asarray([dd.min()]), norms[tgt], norms[p : p + 1], metric)[0]
+        adj[tgt] = np.concatenate([adj[tgt], [p]])
+        dists[tgt] = np.concatenate([dists[tgt], [eu]])
+        seen[p] = True
+        n_orphans += 1
+
+    max_deg = max(len(a) for a in adj)
+    nb, ed = pad_adjacency(adj, dists, n, max(max_deg, r))
+    return GraphIndex(vectors=base, neighbors=nb, edge_eu_dist=ed,
+                      entry_point=medoid, metric=metric, norms=norms,
+                      kind="nsg",
+                      build_stats={"build_secs": time.time() - t0, "r": r,
+                                   "c": c, "l": l, "knn_k": knn_k,
+                                   "orphans": n_orphans})

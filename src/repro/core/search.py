@@ -1,0 +1,270 @@
+"""Batched best-first graph search in JAX (the TPU-native serving hot path).
+
+Re-derivation of the paper's Algorithm 1/2 for fixed-shape SPMD execution
+(DESIGN.md §3):
+
+* the candidate queue C and result queue T collapse into ONE sorted pool of
+  size ``efs`` with per-slot expanded flags — provably equivalent to the
+  two-heap formulation for expansion/termination decisions;
+* per-node state is a dense uint8 status array (0 unvisited / 1 visited /
+  2 pruned) — the pruned state doubles as CRouting's error-correction flag;
+* one `lax.while_loop` iteration expands one node per query lane; all M
+  neighbors are processed vector-wide: estimate + prune on the VPU path,
+  exact distances on the MXU path, pool merge as a static sort.
+
+Semantic note (tested in tests/test_engine_equivalence.py): within one
+expansion the batched engine evaluates all M neighbors against the
+*expansion-start* upper bound ("frozen bound"), whereas the scalar Algorithm 1
+updates the bound after every insertion.  The final pool per expansion is
+identical either way (merge-then-truncate == insert-with-evolving-bound); only
+CRouting prune decisions can differ, strictly toward *fewer* prunes (frozen
+bound >= evolving bound), i.e. toward accuracy.  The NumPy oracle exposes
+``stale_bound=True`` to check exact equivalence, and live-vs-frozen deltas are
+measured in benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as D
+from repro.core.graph import GraphIndex
+
+STATUS_UNVISITED = 0
+STATUS_VISITED = 1
+STATUS_PRUNED = 2
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array        # [B, efs] int32, N = empty
+    dists: jax.Array      # [B, efs] ranking distance
+    dist_calls: jax.Array  # [B] int32 exact distance evaluations
+    est_calls: jax.Array   # [B] int32 cosine-theorem estimates
+    hops: jax.Array        # [B] int32 node expansions
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    efs: int = 100
+    router: str = "none"          # none | crouting | crouting_o | triangle
+    metric: str = "l2"
+    max_hops: int = 4096
+    use_hierarchy: bool = True
+
+
+def graph_device_arrays(g: GraphIndex) -> Dict[str, Any]:
+    """Pack a GraphIndex into device arrays with a sentinel pad row at index N."""
+    n, d = g.n, g.dim
+    vecs = np.concatenate([g.vectors, np.zeros((1, d), np.float32)], axis=0)
+    nbrs = np.concatenate([g.neighbors, np.full((1, g.max_degree), n, np.int32)], axis=0)
+    ed = np.concatenate([g.edge_eu_dist, np.full((1, g.max_degree), np.inf, np.float32)], axis=0)
+    norms = g.norms if g.norms is not None else np.linalg.norm(g.vectors, axis=1)
+    norms = np.concatenate([norms.astype(np.float32), np.ones(1, np.float32)])
+    out = {
+        "vectors": jnp.asarray(vecs),
+        "neighbors": jnp.asarray(nbrs),
+        "edge_eu": jnp.asarray(ed),
+        "norms": jnp.asarray(norms),
+        "entry": jnp.asarray(g.entry_point, jnp.int32),
+        "n": n,
+    }
+    # HNSW hierarchy: id->row maps + per-layer adjacency (top..1).
+    if g.upper_neighbors:
+        pos_maps, layer_nbrs = [], []
+        for ids, mat in zip(g.upper_ids, g.upper_neighbors):
+            pos = np.full(n + 1, -1, dtype=np.int32)
+            pos[ids] = np.arange(len(ids), dtype=np.int32)
+            pos_maps.append(jnp.asarray(pos))
+            layer_nbrs.append(jnp.asarray(np.concatenate(
+                [mat, np.full((1, mat.shape[1]), n, np.int32)], axis=0)))
+        out["upper_pos"] = pos_maps
+        out["upper_nbrs"] = layer_nbrs
+    return out
+
+
+def _rank_many(q, X, metric):
+    """q [d], X [m, d] -> ranking distances [m]."""
+    if metric == "l2":
+        diff = X - q[None, :]
+        return jnp.sum(diff * diff, axis=-1)
+    return 1.0 - X @ q
+
+
+def _rank_to_eu(rank, nq, nx, metric):
+    if metric == "l2":
+        return jnp.sqrt(jnp.maximum(rank, 0.0))
+    return jnp.sqrt(jnp.maximum(nx * nx + nq * nq + 2.0 * rank - 2.0, 0.0))
+
+
+def _eu2_to_rank(eu2, nq, nx, metric):
+    if metric == "l2":
+        return eu2
+    return (eu2 - nx * nx - nq * nq + 2.0) / 2.0
+
+
+def _descend(arrays, q, cfg: EngineConfig):
+    """Greedy 1-NN descent through HNSW upper layers. Returns (entry, dist_calls)."""
+    metric = cfg.metric
+    cur = arrays["entry"]
+    d_cur = _rank_many(q, arrays["vectors"][cur][None, :], metric)[0]
+    calls = jnp.asarray(1, jnp.int32)
+    if "upper_nbrs" not in arrays:
+        return cur, d_cur, calls
+    n = arrays["n"]
+    for pos_map, lnbrs in zip(arrays["upper_pos"], arrays["upper_nbrs"]):
+        def cond(s):
+            cur, d_cur, calls, improved = s
+            return improved
+
+        def body(s):
+            cur, d_cur, calls, _ = s
+            row = pos_map[cur]
+            nbrs = lnbrs[jnp.where(row >= 0, row, lnbrs.shape[0] - 1)]
+            valid = nbrs < n
+            dists = _rank_many(q, arrays["vectors"][nbrs], metric)
+            dists = jnp.where(valid, dists, jnp.inf)
+            calls = calls + jnp.sum(valid.astype(jnp.int32))
+            j = jnp.argmin(dists)
+            better = dists[j] < d_cur
+            return (jnp.where(better, nbrs[j], cur).astype(jnp.int32),
+                    jnp.where(better, dists[j], d_cur), calls, better)
+
+        cur, d_cur, calls, _ = jax.lax.while_loop(
+            cond, body, (cur, d_cur, calls, jnp.asarray(True)))
+    return cur, d_cur, calls
+
+
+def _search_one(arrays, q, cos_theta, cfg: EngineConfig):
+    """Single-query Algorithm 1/2; vmapped over the query batch."""
+    metric, efs, n = cfg.metric, cfg.efs, arrays["n"]
+    router = cfg.router
+    nq = jnp.linalg.norm(q) if metric != "l2" else jnp.asarray(1.0, jnp.float32)
+
+    if cfg.use_hierarchy:
+        entry, d_entry, calls0 = _descend(arrays, q, cfg)
+    else:
+        entry = arrays["entry"]
+        d_entry = _rank_many(q, arrays["vectors"][entry][None, :], metric)[0]
+        calls0 = jnp.asarray(1, jnp.int32)
+
+    pool_d = jnp.full((efs,), jnp.inf, jnp.float32).at[0].set(d_entry)
+    pool_id = jnp.full((efs,), n, jnp.int32).at[0].set(entry)
+    pool_exp = jnp.zeros((efs,), bool)
+    status = jnp.zeros((n + 1,), jnp.uint8).at[entry].set(STATUS_VISITED)
+
+    State = (pool_d, pool_id, pool_exp, status, calls0,
+             jnp.asarray(0, jnp.int32),  # est_calls
+             jnp.asarray(0, jnp.int32),  # hops
+             jnp.asarray(False))         # done
+
+    def cond(s):
+        *_, hops, done = s
+        return (~done) & (hops < cfg.max_hops)
+
+    def body(s):
+        pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done = s
+        cand = (~pool_exp) & (pool_id < n)
+        cand_d = jnp.where(cand, pool_d, jnp.inf)
+        best = jnp.argmin(cand_d)
+        has = jnp.any(cand)
+        dc = pool_d[best]
+        pool_full = pool_id[efs - 1] < n
+        upper = jnp.where(pool_full, pool_d[efs - 1], jnp.inf)
+        stop = (~has) | (dc > upper)
+        live = ~stop
+
+        c = pool_id[best]
+        pool_exp = pool_exp.at[best].set(pool_exp[best] | live)
+
+        nbrs = arrays["neighbors"][c]                 # [M]
+        # stored edge distances may be bf16 (§Perf HC3); estimate math in f32
+        ed = arrays["edge_eu"][c].astype(jnp.float32)  # [M]  Euclidean d(c, n)
+        st = status[nbrs]                             # [M]
+        in_range = nbrs < n
+        valid = in_range & (st != STATUS_VISITED) & live
+
+        # --- router: estimate + prune (no vector fetch on this path) -------
+        if router in ("crouting", "crouting_o"):
+            d_cq_eu = _rank_to_eu(dc, nq, arrays["norms"][c], metric)
+            est2 = ed * ed + d_cq_eu * d_cq_eu - 2.0 * ed * d_cq_eu * cos_theta
+            est_rank = _eu2_to_rank(jnp.maximum(est2, 0.0), nq, arrays["norms"][nbrs], metric)
+            try_prune = valid & (st == STATUS_UNVISITED) & pool_full
+            prune = try_prune & (est_rank >= upper)
+            ecalls = ecalls + jnp.sum(try_prune.astype(jnp.int32))
+            if router == "crouting_o":
+                # no error correction: previously-pruned lanes stay skipped
+                valid = valid & (st != STATUS_PRUNED)
+            compute = valid & ~prune
+        elif router == "triangle":
+            d_cq_eu = _rank_to_eu(dc, nq, arrays["norms"][c], metric)
+            lb = jnp.abs(ed - d_cq_eu)
+            lb_rank = _eu2_to_rank(lb * lb, nq, arrays["norms"][nbrs], metric)
+            try_prune = valid & (st == STATUS_UNVISITED) & pool_full
+            prune = try_prune & (lb_rank >= upper)
+            # exact lower bound => discard is permanent (mark visited below)
+            compute = valid & ~prune
+        else:
+            prune = jnp.zeros_like(valid)
+            compute = valid
+
+        # --- exact distances (masked; the Pallas gather kernel skips the
+        # HBM row fetch for ~compute lanes on real TPU) ----------------------
+        gathered = arrays["vectors"][jnp.where(compute, nbrs, n)]
+        exact = _rank_many(q, gathered, metric)
+        dcalls = dcalls + jnp.sum(compute.astype(jnp.int32))
+
+        # --- status scatter --------------------------------------------------
+        if router == "triangle":
+            new_st = jnp.where(compute | prune, STATUS_VISITED, st).astype(jnp.uint8)
+        else:
+            new_st = jnp.where(compute, STATUS_VISITED,
+                               jnp.where(prune, STATUS_PRUNED, st)).astype(jnp.uint8)
+        status = status.at[jnp.where(in_range & live, nbrs, n)].set(
+            jnp.where(in_range & live, new_st, status[n]))
+
+        # --- pool merge (merge-then-truncate == evolving-bound insertion) ---
+        new_d = jnp.where(compute, exact, jnp.inf)
+        new_id = jnp.where(compute, nbrs, n).astype(jnp.int32)
+        md = jnp.concatenate([pool_d, new_d])
+        mi = jnp.concatenate([pool_id, new_id])
+        me = jnp.concatenate([pool_exp, jnp.zeros_like(compute)])
+        order = jnp.argsort(md, stable=True)[:efs]
+        pool_d, pool_id, pool_exp = md[order], mi[order], me[order]
+
+        hops = hops + live.astype(jnp.int32)
+        done = done | stop
+        return (pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done)
+
+    pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done = \
+        jax.lax.while_loop(cond, body, State)
+    return SearchResult(ids=pool_id, dists=pool_d, dist_calls=dcalls,
+                        est_calls=ecalls, hops=hops)
+
+
+def build_search_fn(g: GraphIndex, cfg: EngineConfig):
+    """Returns (arrays, jitted fn(queries [B,d], cos_theta) -> SearchResult)."""
+    arrays = graph_device_arrays(g)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def run(queries, cos_theta):
+        queries = queries.astype(jnp.float32)
+        return jax.vmap(lambda q: _search_one(arrays, q, cos_theta, cfg))(queries)
+
+    return arrays, run
+
+
+def search_batch(g: GraphIndex, queries: np.ndarray, cfg: EngineConfig,
+                 cos_theta: float = 0.0, k: Optional[int] = None) -> SearchResult:
+    """Convenience one-shot batched search (jit per (graph, cfg))."""
+    _, fn = build_search_fn(g, cfg)
+    res = fn(jnp.asarray(queries), jnp.asarray(cos_theta, jnp.float32))
+    if k is not None:
+        res = SearchResult(ids=res.ids[:, :k], dists=res.dists[:, :k],
+                           dist_calls=res.dist_calls, est_calls=res.est_calls,
+                           hops=res.hops)
+    return res

@@ -1,0 +1,171 @@
+"""Dataset-sharded distributed ANNS serving (DESIGN.md §6).
+
+The billion-vector layout: every device owns one shard of the base vectors
+plus a search graph built *over that shard*.  A query batch is replicated,
+each device runs the batched CRouting engine on its shard, and the global
+top-k is a cheap merge of per-shard top-k lists (k x n_shards candidates —
+one small all-gather, not a vector-data collective).
+
+Straggler mitigation: the per-shard search runs a *fixed hop budget*
+(EngineConfig.max_hops), so one slow shard cannot stall the merge barrier —
+quality degrades gracefully instead of latency (tested in
+tests/test_sharded_index.py).
+
+`serve_step` is the function the multi-pod dry-run lowers for the ANNS
+configs; it is pure pjit (shard_map inside) and scales to any mesh by
+flattening all mesh axes into the shard axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import distances as D
+from repro.core.angles import sample_angle_profile
+from repro.core.graph import GraphIndex
+from repro.core.search import EngineConfig, _search_one
+
+
+@dataclasses.dataclass
+class ShardedIndexArrays:
+    """Stacked per-shard device arrays (leading axis = shard)."""
+
+    vectors: np.ndarray      # [S, ns+1, d]
+    neighbors: np.ndarray    # [S, ns+1, M]
+    edge_eu: np.ndarray      # [S, ns+1, M]
+    norms: np.ndarray        # [S, ns+1]
+    entries: np.ndarray      # [S]
+    offsets: np.ndarray      # [S] global id of local id 0
+    ns: int                  # local shard capacity (excl. pad row)
+    metric: str
+    cos_theta: float
+
+
+def shard_dataset(base: np.ndarray, n_shards: int, metric: str = "l2",
+                  graph: str = "hnsw", seed: int = 0,
+                  profile_percentile: float = 90.0, **graph_kw
+                  ) -> ShardedIndexArrays:
+    """Round-robin-partition the base set; build one sub-graph per shard."""
+    from repro.core.hnsw import build_hnsw
+    from repro.core.nsg import build_nsg
+
+    base = D.preprocess_vectors(np.ascontiguousarray(base, np.float32), metric)
+    n, d = base.shape
+    ns = (n + n_shards - 1) // n_shards
+    builder = {"hnsw": build_hnsw, "nsg": build_nsg}[graph]
+
+    graphs: List[GraphIndex] = []
+    offsets = []
+    cos_thetas = []
+    for s in range(n_shards):
+        lo, hi = s * ns, min((s + 1) * ns, n)
+        sub = base[lo:hi]
+        g = builder(sub, metric=metric, seed=seed + s, **graph_kw)
+        graphs.append(g)
+        offsets.append(lo)
+        prof = sample_angle_profile(g, percentile=profile_percentile, seed=seed)
+        cos_thetas.append(prof.cos_theta_star)
+
+    m = max(g.max_degree for g in graphs)
+    vecs = np.zeros((n_shards, ns + 1, d), np.float32)
+    nbrs = np.full((n_shards, ns + 1, m), ns, np.int32)
+    ed = np.full((n_shards, ns + 1, m), np.inf, np.float32)
+    norms = np.ones((n_shards, ns + 1), np.float32)
+    entries = np.zeros((n_shards,), np.int32)
+    for s, g in enumerate(graphs):
+        k = g.n
+        vecs[s, :k] = g.vectors
+        # remap pad ids (== k) to the stacked pad slot (== ns)
+        nb = g.neighbors.copy()
+        nb[nb >= k] = ns
+        nbrs[s, :k, : g.max_degree] = nb
+        ed[s, :k, : g.max_degree] = g.edge_eu_dist
+        norms[s, :k] = g.norms if g.norms is not None else np.linalg.norm(g.vectors, axis=1)
+        entries[s] = g.entry_point
+    return ShardedIndexArrays(
+        vectors=vecs, neighbors=nbrs, edge_eu=ed, norms=norms, entries=entries,
+        offsets=np.asarray(offsets, np.int64), ns=ns, metric=metric,
+        cos_theta=float(np.median(cos_thetas)))
+
+
+def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
+                    shard_axes: Optional[Tuple[str, ...]] = None):
+    """Build the pjit-able distributed serve step.
+
+    shard_axes: mesh axes flattened into the shard dimension (default: all).
+    Returns (serve_step, in_shardings, out_shardings) ready for jit/lower.
+    """
+    axes = tuple(shard_axes or mesh.axis_names)
+
+    def local_search(vectors, neighbors, edge_eu, norms, entries, offsets,
+                     queries, cos_theta):
+        # shard_map gives the local shard with a leading axis of size 1
+        arrays = {
+            "vectors": vectors[0], "neighbors": neighbors[0],
+            "edge_eu": edge_eu[0], "norms": norms[0],
+            "entry": entries[0], "n": ns,
+        }
+        res = jax.vmap(lambda q: _search_one(arrays, q, cos_theta, cfg))(queries)
+        loc_d, loc_i = res.dists[:, :k], res.ids[:, :k]
+        # int32 global ids (enable_x64 is off; fine below 2^31 vectors/shard set)
+        glob_i = jnp.where(loc_i < ns, loc_i + offsets[0].astype(jnp.int32), -1)
+        # merge: gather per-shard top-k along the shard axis, then re-top-k
+        all_d = jax.lax.all_gather(loc_d, axes, tiled=False)   # [S, B, k]
+        all_i = jax.lax.all_gather(glob_i, axes, tiled=False)
+        S = all_d.shape[0]
+        flat_d = jnp.moveaxis(all_d, 0, 1).reshape(queries.shape[0], S * k)
+        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(queries.shape[0], S * k)
+        neg, pos = jax.lax.top_k(-flat_d, k)
+        ids = jnp.take_along_axis(flat_i, pos, axis=1)
+        calls = jax.lax.psum(jnp.sum(res.dist_calls), axes)
+        return -neg, ids, calls
+
+    pspec_data = P(axes)      # shard leading axis over all shard axes
+    pspec_rep = P()           # queries replicated
+
+    serve = shard_map(
+        local_search, mesh=mesh,
+        in_specs=(pspec_data, pspec_data, pspec_data, pspec_data, pspec_data,
+                  pspec_data, pspec_rep, pspec_rep),
+        out_specs=(pspec_rep, pspec_rep, pspec_rep),
+        check_rep=False,
+    )
+    in_sh = tuple(NamedSharding(mesh, s) for s in
+                  (pspec_data,) * 6 + (pspec_rep, pspec_rep))
+    out_sh = tuple(NamedSharding(mesh, s) for s in (pspec_rep,) * 3)
+    return serve, in_sh, out_sh
+
+
+class ShardedAnnIndex:
+    """Runtime wrapper: place shards on a mesh and serve batched queries."""
+
+    def __init__(self, arrays: ShardedIndexArrays, mesh: Mesh,
+                 efs: int = 100, k: int = 10, router: str = "crouting",
+                 max_hops: int = 2048):
+        self.arrays = arrays
+        self.mesh = mesh
+        self.k = k
+        self.cfg = EngineConfig(efs=efs, router=router, metric=arrays.metric,
+                                max_hops=max_hops, use_hierarchy=False)
+        serve, in_sh, _ = make_serve_step(mesh, self.cfg, arrays.ns, k)
+        self._serve = jax.jit(serve, in_shardings=in_sh)
+        dev = lambda a, sh: jax.device_put(a, sh)
+        self._placed = tuple(
+            dev(getattr(arrays, f), s) for f, s in
+            zip(("vectors", "neighbors", "edge_eu", "norms", "entries", "offsets"),
+                in_sh[:6]))
+
+    def search(self, queries: np.ndarray, cos_theta: Optional[float] = None):
+        q = D.preprocess_vectors(np.ascontiguousarray(queries, np.float32),
+                                 self.arrays.metric)
+        ct = self.arrays.cos_theta if cos_theta is None else cos_theta
+        d, i, calls = self._serve(*self._placed, jnp.asarray(q),
+                                  jnp.asarray(ct, jnp.float32))
+        return np.asarray(i), np.asarray(d), int(calls)

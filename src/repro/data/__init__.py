@@ -1,0 +1,1 @@
+from repro.data import vectors  # noqa: F401

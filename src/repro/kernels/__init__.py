@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the paper's compute hot spots (distance evaluation
+# is >=83% of ANNS query time — Fig. 2).  Each kernel: <name>.py (pallas_call
+# + BlockSpec), validated in interpret mode against ref.py oracles; ops.py is
+# the jit'd public wrapper layer.
+#
+#   l2_distance.py      tiled distance matrix (MXU)           [brute force/KNN/DLRM retrieval]
+#   crouting_prune.py   fused cosine-estimate + prune (VPU)   [paper Alg. 2 inner loop]
+#   gather_distance.py  fused gather + distance (scalar-prefetch DMA)
+#   pool_merge.py       bitonic sorted-pool merge (VPU network)
+
+from repro.kernels import ops  # noqa: F401

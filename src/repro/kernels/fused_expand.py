@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: FUSED CRouting expansion step.
+
+One kernel per query lane performs the paper's whole inner loop (Alg. 2,
+lines 7-16 minus the pool update):
+
+    est2 = ed^2 + dcq^2 - 2*ed*dcq*cos(theta*)        (VPU, no vector data)
+    prune = valid & (est2 >= bound2)
+    for m in range(M):
+        if not prune[m]:          <-- the point: the HBM row DMA for the
+            row = table[nbr[m]]       neighbor vector is *conditionally
+            dist2[m] = |q - row|^2    skipped* for pruned lanes
+        else:
+            dist2[m] = +inf
+
+This is the kernel-level realization of "CRouting skips the distance call":
+on TPU the savings are the skipped random HBM reads (DESIGN.md §3).  The
+conditional DMA is expressed with lax.cond inside a fori_loop over neighbor
+slots; the estimate lives entirely in VMEM/registers.
+
+Grid: (B,).  Per-step VMEM: q (1,d) + one table row (1,d) + the M-wide
+scalars — tiny; the table stays in ANY/HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _expand_kernel(nbr_ref, q_ref, ed_ref, dcq_ref, bound2_ref, ct_ref,
+                   table_ref, dist_ref, mask_ref, *, m_slots: int,
+                   n_rows: int):
+    b = pl.program_id(0)
+    q = q_ref[0, :].astype(jnp.float32)                # [d]
+    dcq = dcq_ref[0]
+    b2 = bound2_ref[0]
+    ct = ct_ref[0]
+
+    ed = ed_ref[0, :]                                  # [M] stored d(c,n)
+    est2 = jnp.maximum(ed * ed + dcq * dcq - 2.0 * ed * dcq * ct, 0.0)
+    valid = nbr_ref[b, :] < n_rows                     # scalar-prefetched ids
+    prune = valid & (est2 >= b2)
+    mask_ref[0, :] = prune.astype(jnp.int8)
+
+    def per_slot(m, _):
+        def fetch(_):
+            row = pl.load(table_ref,
+                          (pl.dslice(nbr_ref[b, m], 1), slice(None)))
+            diff = q - row[0, :].astype(jnp.float32)
+            return jnp.sum(diff * diff)
+
+        def skip(_):
+            return jnp.float32(jnp.inf)
+
+        do_fetch = valid[m] & ~prune[m]
+        d2 = jax.lax.cond(do_fetch, fetch, skip, operand=0)
+        dist_ref[0, m] = d2
+        return 0
+
+    jax.lax.fori_loop(0, m_slots, per_slot, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_expand_pallas(nbrs, queries, ed, dcq, bound2, cos_theta, table, *,
+                        interpret: bool = True):
+    """nbrs [B,M] int32, queries [B,d], ed [B,M], dcq [B], bound2 [B],
+    table [N,d] -> (dist2 [B,M] with +inf for pruned/invalid, prune [B,M])."""
+    B, M = nbrs.shape
+    d = queries.shape[1]
+    N = table.shape[0]
+    ct = jnp.asarray(cos_theta, jnp.float32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, idx: (b, 0)),     # query row
+            pl.BlockSpec((1, M), lambda b, idx: (b, 0)),     # edge dists
+            pl.BlockSpec((1,), lambda b, idx: (b,)),         # d(c,q)
+            pl.BlockSpec((1,), lambda b, idx: (b,)),         # bound^2
+            pl.BlockSpec((1,), lambda b, idx: (0,)),         # cos theta*
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # table in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, M), lambda b, idx: (b, 0)),
+            pl.BlockSpec((1, M), lambda b, idx: (b, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_expand_kernel, m_slots=M, n_rows=N),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, M), jnp.float32),
+                   jax.ShapeDtypeStruct((B, M), jnp.int8)],
+        interpret=interpret,
+    )(nbrs, queries, ed, dcq, bound2, ct, table)

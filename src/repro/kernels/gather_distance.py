@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused gather + squared-L2 distance (scalar prefetch).
+
+The exact-distance path of one expansion: for each (query b, neighbor slot m)
+the neighbor's vector row is DMA'd from the HBM-resident table straight into
+VMEM — the row choice is driven by the scalar-prefetched index array via the
+BlockSpec index_map (PrefetchScalarGridSpec), the idiomatic TPU pattern for
+data-dependent gathers.
+
+CRouting integration: callers remap pruned lanes' indices to a single
+sentinel row (ops.gather_distance does this from the prune mask).  Repeated
+block indices are *not re-fetched* (the pipeline skips the DMA when the block
+index is unchanged), so pruned lanes cost no HBM traffic — the kernel-level
+realization of "skipping the distance call" (DESIGN.md §3).
+
+Grid: (B, M/bm) — per step a (bm, d) row-gather... rows are gathered one at a
+time within the step via a fori_loop of dynamic loads from the table ref kept
+in ANY/HBM memory space, computing dist2 against the (1, d) query tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, q_ref, table_ref, o_ref):
+    b = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)          # [1, d]
+    row = idx_ref[b, pl.program_id(1)]          # scalar-prefetched index
+    v = pl.load(table_ref, (pl.dslice(row, 1), slice(None)))  # row DMA
+    diff = q[0, :] - v[0, :].astype(jnp.float32)
+    o_ref[0, 0] = jnp.sum(diff * diff)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_distance_pallas(indices, queries, table, *, interpret: bool = True):
+    """indices [B, M] int32 (rows of table), queries [B, d], table [N, d]
+    -> dist2 [B, M] float32."""
+    B, M = indices.shape
+    _, d = queries.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, m, idx: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # table in HBM
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, m, idx: (b, m)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        interpret=interpret,
+    )(indices, queries, table)

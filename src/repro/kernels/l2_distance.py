@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: tiled squared-L2 / inner-product distance matrix.
+
+The paper's hot spot — batched exact distance evaluation — as an MXU matmul:
+
+    dist2[i, j] = |q_i|^2 + |x_j|^2 - 2 <q_i, x_j>
+
+Tiling: grid (Q/bq, C/bc, D/bd).  Per step, a (bq, bd) query tile and a
+(bc, bd) candidate tile are DMA'd to VMEM, the partial -2*q@x^T accumulates
+into the (bq, bc) output tile (revisited across the d-axis grid dim), and the
+precomputed norms are added on the final d-step.  Block sizes default to
+MXU-aligned 128/256/512 so q-tile + x-tile + out-tile fit comfortably in the
+~16 MB v5e VMEM: 128*512*4 + 256*512*4 + 128*256*4 ≈ 0.9 MB.
+
+Used by: brute-force ground truth, KNN-graph construction, DLRM
+retrieval_cand scoring.  Validated in interpret mode vs ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_kernel(q_ref, x_ref, qn_ref, xn_ref, o_ref, *, n_d_steps: int, mode: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # [bq, bd]
+    x = x_ref[...].astype(jnp.float32)          # [bc, bd]
+    acc = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if mode == "l2":
+        o_ref[...] += -2.0 * acc
+    else:  # ip
+        o_ref[...] += -acc
+
+    @pl.when(k == n_d_steps - 1)
+    def _fin():
+        if mode == "l2":
+            o_ref[...] = jnp.maximum(
+                o_ref[...] + qn_ref[...].reshape(-1, 1) + xn_ref[...].reshape(1, -1),
+                0.0)
+        else:
+            o_ref[...] += 1.0  # IPDist = 1 - <q, x>
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bc", "bd", "mode", "interpret"))
+def l2_distance_pallas(q, x, *, bq: int = 128, bc: int = 256, bd: int = 512,
+                       mode: str = "l2", interpret: bool = True):
+    """q [Q, d], x [C, d] -> dist [Q, C] (squared L2, or IP distance)."""
+    Q, d = q.shape
+    C = x.shape[0]
+    bq, bc, bd = min(bq, Q), min(bc, C), min(bd, d)
+    assert Q % bq == 0 and C % bc == 0 and d % bd == 0, (
+        "pad inputs to block multiples (ops.l2_distance handles padding)")
+    n_d = d // bd
+    qn = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1)
+    xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+    grid = (Q // bq, C // bc, n_d)
+    return pl.pallas_call(
+        functools.partial(_dist_kernel, n_d_steps=n_d, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bc, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bq,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bc,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, C), jnp.float32),
+        interpret=interpret,
+    )(q, x, qn, xn)

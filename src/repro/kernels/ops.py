@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, dtype plumbing, and the CPU/TPU switch:
+on this container the kernels execute in interpret mode (Python semantics,
+bit-accurate vs the TPU lowering's math); on a real TPU backend set
+``interpret=False`` (the default flips automatically off-CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.l2_distance import l2_distance_pallas
+from repro.kernels.crouting_prune import crouting_prune_pallas
+from repro.kernels.gather_distance import gather_distance_pallas
+from repro.kernels.pool_merge import pool_merge_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis, value):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def l2_distance(q, x, mode: str = "l2", bq: int = 128, bc: int = 256,
+                bd: int = 512, interpret=None):
+    """Distance matrix [Q, C]; pads freely, slices back."""
+    interpret = _default_interpret() if interpret is None else interpret
+    Q, d = q.shape
+    C = x.shape[0]
+    bq_, bc_, bd_ = min(bq, Q), min(bc, C), min(bd, d)
+    qp = _pad_to(q, bq_, 0, 0.0)
+    xp = _pad_to(x, bc_, 0, 0.0)
+    qp = _pad_to(qp, bd_, 1, 0.0)
+    xp = _pad_to(xp, bd_, 1, 0.0)
+    out = l2_distance_pallas(qp, xp, bq=bq_, bc=bc_, bd=bd_, mode=mode,
+                             interpret=interpret)
+    return out[:Q, :C]
+
+
+def crouting_prune(ed, dcq, bound2, valid, cos_theta, bb: int = 8,
+                   interpret=None):
+    """Fused estimate + prune mask; pads B to the row-block, M to lanes."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, M = ed.shape
+    edp = _pad_to(_pad_to(ed, 128, 1, jnp.inf), bb, 0, jnp.inf)
+    vp = _pad_to(_pad_to(valid.astype(jnp.int8), 128, 1, 0), bb, 0, 0)
+    dcqp = _pad_to(dcq, bb, 0, 0.0)
+    b2p = _pad_to(bound2, bb, 0, 0.0)
+    est2, mask = crouting_prune_pallas(edp, dcqp, b2p, vp, cos_theta,
+                                       bb=bb, interpret=interpret)
+    return est2[:B, :M], mask[:B, :M]
+
+
+def gather_distance(indices, queries, table, interpret=None):
+    """Fused gather+distance; prune-masked callers remap lanes to row 0."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return gather_distance_pallas(indices.astype(jnp.int32), queries, table,
+                                  interpret=interpret)
+
+
+def gather_distance_pruned(nbr_ids, prune_mask, queries, table, interpret=None):
+    """CRouting-integrated exact path: pruned lanes fetch the sentinel row 0
+    (de-duplicated DMA on TPU) and report +inf."""
+    idx = jnp.where(prune_mask != 0, 0, nbr_ids).astype(jnp.int32)
+    d2 = gather_distance(idx, queries, table, interpret=interpret)
+    return jnp.where(prune_mask != 0, jnp.inf, d2)
+
+
+def pool_merge(pool_d, pool_i, new_d, new_i, bb: int = 8, interpret=None):
+    """Merge new candidates into sorted pools, keep best P."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B = pool_d.shape[0]
+    args = [pool_d, pool_i.astype(jnp.int32), new_d, new_i.astype(jnp.int32)]
+    args = [_pad_to(a, bb, 0, v) for a, v in zip(args, (jnp.inf, -1, jnp.inf, -1))]
+    d, i = pool_merge_pallas(*args, bb=bb, interpret=interpret)
+    return d[:B], i[:B]
+
+
+def fused_expand(nbrs, queries, ed, dcq, bound2, cos_theta, table,
+                 interpret=None):
+    """Fused CRouting expansion: estimate + prune + conditional gather +
+    exact distance in one kernel (the paper's Alg. 2 inner loop)."""
+    from repro.kernels.fused_expand import fused_expand_pallas
+    interpret = _default_interpret() if interpret is None else interpret
+    return fused_expand_pallas(nbrs.astype(jnp.int32), queries, ed, dcq,
+                               bound2, cos_theta, table, interpret=interpret)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: sorted-pool merge via an in-VMEM bitonic network.
+
+The second hot spot of best-first search: merging M freshly-computed
+candidate distances into the sorted size-P result pool each hop.  XLA lowers
+the naive concat+argsort to a full sort; here the merge is a fixed
+compare-exchange network over a power-of-two padded buffer held in VREGs —
+data-independent control flow, exactly what the VPU wants.
+
+Payload trick: ids ride along as the low 32 bits of a float64-free packing —
+we sort a single int32 "key" tensor built as (quantized dist, id) pairs?  No:
+Pallas TPU has no 64-bit sort lanes; instead we run the compare-exchange on
+the distance tensor and apply identical where-swaps to the id tensor.
+
+Grid: one program per batch row block (bb rows), network length L = pow2(P+M).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _bitonic_stages(L: int):
+    """Yield (stride, block) pairs of a full bitonic sort network of length L."""
+    k = 2
+    while k <= L:
+        j = k // 2
+        while j >= 1:
+            yield j, k
+            j //= 2
+        k *= 2
+
+
+def _merge_kernel(pool_d_ref, pool_i_ref, new_d_ref, new_i_ref,
+                  out_d_ref, out_i_ref, *, L: int, P: int):
+    d = jnp.concatenate([pool_d_ref[...], new_d_ref[...]], axis=1)  # [bb, P+M]
+    i = jnp.concatenate([pool_i_ref[...], new_i_ref[...]], axis=1)
+    pad = L - d.shape[1]
+    if pad:
+        d = jnp.concatenate([d, jnp.full((d.shape[0], pad), jnp.inf, d.dtype)], axis=1)
+        i = jnp.concatenate([i, jnp.full((i.shape[0], pad), -1, i.dtype)], axis=1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+    for j, k in _bitonic_stages(L):
+        partner = idx ^ j
+        pd = jnp.take_along_axis(d, jnp.broadcast_to(partner, d.shape), axis=1)
+        pi = jnp.take_along_axis(i, jnp.broadcast_to(partner, i.shape), axis=1)
+        up = (idx & k) == 0           # ascending block?
+        is_lo = partner > idx         # this lane holds the smaller slot
+        keep_min = jnp.where(up, is_lo, ~is_lo)
+        take_min = jnp.minimum(d, pd)
+        take_max = jnp.maximum(d, pd)
+        sel_min = jnp.where(d < pd, i, jnp.where(pd < d, pi, jnp.minimum(i, pi)))
+        sel_max = jnp.where(d < pd, pi, jnp.where(pd < d, i, jnp.maximum(i, pi)))
+        d = jnp.where(keep_min, take_min, take_max)
+        i = jnp.where(keep_min, sel_min, sel_max)
+    out_d_ref[...] = d[:, :P]
+    out_i_ref[...] = i[:, :P]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def pool_merge_pallas(pool_d, pool_i, new_d, new_i, *, bb: int = 8,
+                      interpret: bool = True):
+    """pool_d/i [B, P] sorted asc, new_d/i [B, M] -> best-P of the union, sorted.
+
+    Ties on distance resolve to the smaller id (deterministic).
+    """
+    B, P = pool_d.shape
+    M = new_d.shape[1]
+    bb = min(bb, B)
+    assert B % bb == 0
+    L = _next_pow2(P + M)
+    grid = (B // bb,)
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, L=L, P=P),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, P), lambda r: (r, 0)),
+            pl.BlockSpec((bb, P), lambda r: (r, 0)),
+            pl.BlockSpec((bb, M), lambda r: (r, 0)),
+            pl.BlockSpec((bb, M), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, P), lambda r: (r, 0)),
+            pl.BlockSpec((bb, P), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, P), pool_d.dtype),
+            jax.ShapeDtypeStruct((B, P), pool_i.dtype),
+        ],
+        interpret=interpret,
+    )(pool_d, pool_i, new_d, new_i)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_distance_ref(q, x, mode: str = "l2"):
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if mode == "l2":
+        qn = jnp.sum(q * q, axis=-1, keepdims=True)
+        xn = jnp.sum(x * x, axis=-1)
+        return jnp.maximum(qn + xn[None, :] - 2.0 * q @ x.T, 0.0)
+    return 1.0 - q @ x.T
+
+
+def crouting_prune_ref(ed, dcq, bound2, valid, cos_theta):
+    ed = ed.astype(jnp.float32)
+    dcq = dcq.astype(jnp.float32)[:, None]
+    est2 = jnp.maximum(ed * ed + dcq * dcq - 2.0 * ed * dcq * cos_theta, 0.0)
+    mask = (valid != 0) & (est2 >= bound2[:, None])
+    return est2, mask.astype(jnp.int8)
+
+
+def gather_distance_ref(indices, queries, table):
+    rows = table[indices]                       # [B, M, d]
+    diff = rows.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pool_merge_ref(pool_d, pool_i, new_d, new_i):
+    d = jnp.concatenate([pool_d, new_d], axis=1)
+    i = jnp.concatenate([pool_i, new_i], axis=1)
+    # tie-break on smaller id to match the kernel's deterministic network
+    order = jnp.lexsort((i, d), axis=1)
+    P = pool_d.shape[1]
+    return (jnp.take_along_axis(d, order, axis=1)[:, :P],
+            jnp.take_along_axis(i, order, axis=1)[:, :P])
+
+
+def fused_expand_ref(nbrs, queries, ed, dcq, bound2, cos_theta, table):
+    """Oracle for the fused CRouting expansion kernel."""
+    n = table.shape[0]
+    est2, _ = crouting_prune_ref(ed, dcq, bound2,
+                                 jnp.ones_like(ed, dtype=jnp.int8), cos_theta)
+    valid = nbrs < n
+    prune = valid & (est2 >= bound2[:, None])
+    safe = jnp.where(valid, nbrs, 0)
+    d2 = gather_distance_ref(safe, queries, table)
+    d2 = jnp.where(valid & ~prune, d2, jnp.inf)
+    return d2, prune.astype(jnp.int8)

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable (e)).
+
+For every (architecture x input shape x mesh) cell: build the Cell, lower the
+step with the production shardings, .compile(), and record
+memory_analysis/cost_analysis/collective schedule + the three roofline terms.
+Results append to an incremental JSON cache (reruns skip completed cells).
+
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --include-anns
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_cell
+from repro.roofline.analysis import analyze_compiled
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "dryrun_results.json")
+
+
+def _compile_cell(cell, mesh):
+    with mesh:   # ambient mesh so activation shard_hints bind (layers.py)
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+        lowered = jitted.lower(*cell.arg_specs)
+        return lowered.compile()
+
+
+def _raw_terms(compiled):
+    from repro.roofline.analysis import parse_collectives
+    cost = compiled.cost_analysis()
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            parse_collectives(compiled.as_text()).ring_bytes)
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool) -> dict:
+    from repro.roofline.analysis import roofline_terms
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+    spec = get_arch(arch_id)
+    cell = build_cell(spec, shape_id, mesh)
+    t0 = time.time()
+    compiled = _compile_cell(cell, mesh)
+    t_compile = time.time() - t0
+    rec = analyze_compiled(compiled, n_dev, cell.model_flops)
+
+    # ---- loop-corrected accounting (cost_analysis counts scan bodies once;
+    # EXPERIMENTS.md §Roofline methodology) ---------------------------------
+    flops, nbytes, coll = (rec["hlo_flops_per_dev"], rec["hlo_bytes_per_dev"],
+                           rec["collective_wire_bytes"])
+    correction = "none"
+    if cell.loop_fit is not None:
+        L, build = cell.loop_fit
+        f1 = _raw_terms(_compile_cell(build(1), mesh))
+        f2 = _raw_terms(_compile_cell(build(2), mesh))
+        body = tuple(max(b - a, 0.0) for a, b in zip(f1, f2))
+        outer = tuple(max(a - d, 0.0) for a, d in zip(f1, body))
+        flops, nbytes, coll = (o + L * b for o, b in zip(outer, body))
+        correction = f"2pt-fit L={L}"
+    elif cell.body_multiplier != 1.0:
+        flops *= cell.body_multiplier
+        nbytes *= cell.body_multiplier
+        coll *= cell.body_multiplier
+        correction = f"body x{cell.body_multiplier:.0f}"
+    if cell.analytic_extra:
+        flops += cell.analytic_extra.get("flops", 0.0)
+        nbytes += cell.analytic_extra.get("bytes", 0.0)
+        correction += " +analytic(attn,loss)"
+    terms = roofline_terms(flops, nbytes, coll,
+                           model_flops_per_dev=cell.model_flops / n_dev)
+    rec.update(terms)
+    rec.update({
+        "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": nbytes,
+        "collective_wire_bytes": coll,
+        "raw_flops_per_dev_body_once": _raw_terms(compiled)[0],
+        "loop_correction": correction,
+        "arch": arch_id, "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev, "step": cell.step_name,
+        "model_flops_total": cell.model_flops,
+        "compile_s": round(t_compile, 2),
+        "notes": cell.notes, "status": "ok",
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.abspath(DEFAULT_OUT))
+    ap.add_argument("--include-anns", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cache = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            cache = json.load(f)
+
+    archs = [args.arch] if args.arch else list_archs(include_anns=args.include_anns)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch_id in archs:
+        spec = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else [s.shape_id for s in spec.shapes]
+        for shape_id in shapes:
+            for mp in meshes:
+                key = f"{arch_id}|{shape_id}|{'2x16x16' if mp else '16x16'}"
+                if key in cache and cache[key].get("status") == "ok" and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[run ] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch_id, shape_id, mp)
+                    print(f"   ok: mem={rec['mem_total_bytes']/1e9:.2f}GB/dev "
+                          f"flops={rec['hlo_flops_per_dev']:.3e} "
+                          f"dom={rec['dominant']} "
+                          f"t=({rec['compute_s']:.2e},{rec['memory_s']:.2e},"
+                          f"{rec['collective_s']:.2e})s "
+                          f"compile={rec['compile_s']}s", flush=True)
+                except Exception as e:
+                    rec = {"arch": arch_id, "shape": shape_id,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"   ERROR: {e!r}", flush=True)
+                cache[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(cache, f, indent=1)
+
+    n_ok = sum(1 for v in cache.values() if v.get("status") == "ok")
+    print(f"\n{n_ok}/{len(cache)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""ANNS serving launcher: build (or load) a CRouting index sharded over the
+local devices and serve batched queries.
+
+  PYTHONPATH=src python -m repro.launch.serve --n-base 20000 --batches 10
+
+On a multi-chip slice this is the production layout of DESIGN.md §6 (one
+shard per device); here it runs over however many devices exist.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
+from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
+from repro.launch.mesh import make_local_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-base", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--graph", default="hnsw", choices=["hnsw", "nsg"])
+    ap.add_argument("--router", default="crouting")
+    ap.add_argument("--efs", type=int, default=100)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--m", type=int, default=16)
+    ap.add_argument("--efc", type=int, default=128)
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev}")
+    ds = make_dataset(n_base=args.n_base, n_query=args.batch * args.batches,
+                      dim=args.dim, seed=0)
+    t0 = time.time()
+    arrays = shard_dataset(ds.base, n_shards=max(n_dev, 1), graph=args.graph,
+                           m=args.m, efc=args.efc)
+    print(f"index built in {time.time()-t0:.1f}s "
+          f"(theta*={np.arccos(arrays.cos_theta)/np.pi:.3f}pi)")
+    mesh = make_local_mesh(n_dev, "shards")
+    idx = ShardedAnnIndex(arrays, mesh, efs=args.efs, k=args.k,
+                          router=args.router)
+
+    gt = exact_ground_truth(ds, k=args.k)
+    lat, total_calls, all_ids = [], 0, []
+    for b in range(args.batches):
+        q = ds.queries[b * args.batch:(b + 1) * args.batch]
+        t0 = time.time()
+        ids, dists, calls = idx.search(q)
+        lat.append(time.time() - t0)
+        total_calls += calls
+        all_ids.append(ids)
+    rec = recall_at_k(np.concatenate(all_ids), gt, args.k)
+    qps = args.batch / np.median(lat)
+    print(f"router={args.router}: recall@{args.k}={rec:.3f} "
+          f"QPS={qps:.0f} p50={np.median(lat)*1e3:.1f}ms "
+          f"dist_calls/query={total_calls/(args.batch*args.batches):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Per-family parameter/batch sharding rules (DESIGN.md §6).
+
+2-D FSDP x TP scheme for LMs: weight matrices shard (reduction dim -> 'data',
+output dim -> 'model'); optimizer state mirrors params (ZeRO-3); activations
+shard batch over ('pod','data').  MoE experts shard over 'model' (EP).  GNN
+node/edge arrays shard over the data axes.  DLRM embedding tables row-shard
+over 'model' (table parallel).
+
+Rules are *name-based* over pytree paths so they apply to params, grads, and
+optimizer moments identically.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return "/".join(out)
+
+
+# --------------------------------------------------------------------------
+# LM rules
+# --------------------------------------------------------------------------
+def lm_param_sharding(mesh: Mesh, params_spec) -> Any:
+    """Map a param pytree (of ShapeDtypeStruct or arrays) to NamedShardings."""
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if "embed" in name:
+            return _ns(mesh, "model", None)
+        if "lm_head" in name:
+            return _ns(mesh, None, "model")
+        if name.endswith("final_norm") or "norm" in name:
+            return _ns(mesh, *([None] * nd))
+        if any(k in name for k in ("we_gate", "we_up")):      # [L, E, D, F]
+            return _ns(mesh, None, "model", "data", None)
+        if "we_down" in name:                                  # [L, E, F, D]
+            return _ns(mesh, None, "model", None, "data")
+        if name.endswith("/gate"):
+            return _ns(mesh, None, "data", None)               # router [L, D, E]
+        if any(k in name for k in ("wq", "wk", "wv", "w_gate", "w_up", "wr_gate", "wr_up")):
+            return _ns(mesh, None, "data", "model")            # [L, D, out]
+        if any(k in name for k in ("wo", "w_down", "wr_down")):
+            return _ns(mesh, None, "model", "data")            # [L, in, D]
+        if any(k in name for k in ("bq", "bk", "bv")):
+            return _ns(mesh, None, "model")
+        return _ns(mesh, *([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_spec)
+
+
+def lm_opt_sharding(mesh: Mesh, opt_spec, param_shardings) -> Any:
+    """AdamWState(step, mu, nu): moments mirror the param rule."""
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step=_ns(mesh),
+                      mu=param_shardings, nu=param_shardings)
+
+
+def lm_batch_sharding(mesh: Mesh) -> Any:
+    d = data_axes(mesh)
+    return {"tokens": _ns(mesh, d, None), "labels": _ns(mesh, d, None)}
+
+
+def lm_cache_sharding(mesh: Mesh, batch: int, seq: int) -> Any:
+    """KV cache [L, B, T, Hkv, dh]: shard B over data axes when divisible,
+    otherwise shard the sequence axis (long-context decode, DESIGN.md §5)."""
+    d = data_axes(mesh)
+    ndev = 1
+    for a in d:
+        ndev *= mesh.shape[a]
+    if batch % ndev == 0 and batch >= ndev:
+        spec = _ns(mesh, None, d, "model", None, None) \
+            if seq % mesh.shape["model"] == 0 else _ns(mesh, None, d, None, None, None)
+    else:
+        spec = _ns(mesh, None, None, d + ("model",), None, None) \
+            if seq % (ndev * mesh.shape["model"]) == 0 else _ns(mesh, None, None, d, None, None)
+    return {"k": spec, "v": spec}
+
+
+def lm_token_sharding(mesh: Mesh, batch: int) -> Any:
+    d = data_axes(mesh)
+    ndev = 1
+    for a in d:
+        ndev *= mesh.shape[a]
+    return _ns(mesh, d, None) if batch % ndev == 0 and batch >= ndev \
+        else _ns(mesh, None, None)
+
+
+# --------------------------------------------------------------------------
+# GNN rules
+# --------------------------------------------------------------------------
+def gnn_param_sharding(mesh: Mesh, params_spec) -> Any:
+    # GNN params are tiny (<1M): replicate.
+    def rule(path, leaf):
+        return _ns(mesh, *([None] * len(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(rule, params_spec)
+
+
+def gnn_batch_sharding(mesh: Mesh, batch_spec) -> Any:
+    d = data_axes(mesh)
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name.startswith("edge_"):
+            return _ns(mesh, d + ("model",))      # edges over every device
+        if name in ("node_feat", "pos"):
+            return _ns(mesh, d, None)             # nodes over data axes
+        if name in ("atom_z", "node_mask", "labels", "label_mask", "graph_ids"):
+            return _ns(mesh, d)
+        return _ns(mesh, *([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_spec)
+
+
+# --------------------------------------------------------------------------
+# DLRM rules
+# --------------------------------------------------------------------------
+def dlrm_param_sharding(mesh: Mesh, params_spec) -> Any:
+    """Tables row-shard over EVERY mesh axis (§Perf HC1: model-only row
+    sharding replicated 96 GB of tables+grads+moments 16x over 'data')."""
+    all_axes = tuple(mesh.axis_names)
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        # matches params AND optimizer moments (paths: tables/0, mu/tables/0)
+        if "tables/" in name + "/":
+            rows = leaf.shape[0]
+            ndev = 1
+            for a in all_axes:
+                ndev *= mesh.shape[a]
+            if rows % ndev == 0:
+                return _ns(mesh, all_axes, None)
+            return _ns(mesh, "model", None)       # small tables: model only
+        if nd == 2:
+            return _ns(mesh, None, None)          # small MLPs replicated
+        return _ns(mesh, *([None] * nd))
+    return jax.tree_util.tree_map_with_path(rule, params_spec)
+
+
+def dlrm_batch_sharding(mesh: Mesh, batch: int) -> Any:
+    # §Perf HC1: the batch is REPLICATED — sparse ids must be visible to every
+    # table shard for the masked-gather + psum lookup, and the whole batch is
+    # ~10 MB vs 96 GB of tables.  The (tiny) MLP compute is replicated too.
+    return {"dense": _ns(mesh, None, None),
+            "sparse_ids": _ns(mesh, None, None),
+            "labels": _ns(mesh, None)}
+
+
+def replicate(mesh: Mesh, spec) -> Any:
+    return jax.tree_util.tree_map(
+        lambda l: _ns(mesh, *([None] * len(l.shape))), spec)

@@ -1,0 +1,6 @@
+# Model substrate: the 10 assigned architectures as selectable configs.
+#   layers.py       transformer blocks (RMSNorm/RoPE/GQA/SwiGLU/MoE)
+#   transformer.py  dense + MoE decoder LMs (scan-over-layers)
+#   gnn.py          GIN / GAT / SchNet / EGNN via segment ops
+#   dlrm.py         DLRM w/ manual EmbeddingBag (take + segment_sum)
+#   api.py          (arch x shape) -> lowerable Cell + smoke builders

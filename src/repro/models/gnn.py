@@ -1,0 +1,241 @@
+"""GNN substrate: message passing via segment ops (no sparse formats needed).
+
+JAX has no CSR/CSC — adjacency is an edge list (src [E], dst [E]) and
+aggregation is ``jax.ops.segment_sum`` / segment-softmax over the dst index
+(DESIGN.md: "this IS part of the system").  Covers the four assigned archs:
+
+  gin-tu   5L d=64 sum-agg, learnable eps (GIN, arXiv:1810.00826)
+  gat-cora 2L d_hidden=8, 8 heads, edge-softmax attention (arXiv:1710.10903)
+  schnet   3 interactions, d=64, 300 RBF, cutoff 10 (arXiv:1706.08566)
+  egnn     4L d=64, E(n)-equivariant coordinate updates (arXiv:2102.09844)
+
+All models share one GraphBatch layout (padded edge lists, masks) so every
+(arch x graph-shape) dry-run cell lowers from the same input_specs builder.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import optimizer as opt
+
+
+# --------------------------------------------------------------------------
+# graph batch + segment helpers
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GnnConfig:
+    name: str
+    arch: str                  # gin | gat | schnet | egnn
+    n_layers: int
+    d_hidden: int
+    n_heads: int = 1
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_classes: int = 16
+    task: str = "node_class"   # node_class | graph_reg
+    dtype: str = "float32"
+
+
+def segment_softmax(scores, seg_ids, num_segments):
+    smax = jax.ops.segment_max(scores, seg_ids, num_segments=num_segments)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[seg_ids])
+    den = jax.ops.segment_sum(ex, seg_ids, num_segments=num_segments)
+    return ex / jnp.maximum(den[seg_ids], 1e-12)
+
+
+def _mlp_init(key, dims, dt):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": (jax.random.normal(k, (a, b)) / np.sqrt(a)).astype(dt),
+             "b": jnp.zeros((b,), dt)} for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(params, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(params):
+        x = x @ l["w"] + l["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# --------------------------------------------------------------------------
+# per-arch forward passes. batch dict:
+#   node_feat [N, F] | atom_z [N] int32, pos [N, 3]
+#   edge_src [E], edge_dst [E] int32; node_mask [N]; edge_mask [E]
+#   labels [N] int32 (node_class) | graph_ids [N] + g_labels [G] (graph_reg)
+# --------------------------------------------------------------------------
+def init_gnn(cfg: GnnConfig, d_in: int, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    p: Dict[str, Any] = {}
+    if cfg.arch == "gin":
+        p["embed"] = _mlp_init(ks[0], (d_in, d), dt)
+        p["eps"] = jnp.zeros((cfg.n_layers,), dt)
+        p["mlps"] = [_mlp_init(ks[i + 1], (d, d, d), dt) for i in range(cfg.n_layers)]
+        p["out"] = _mlp_init(ks[-1], (d, cfg.n_classes), dt)
+    elif cfg.arch == "gat":
+        dims_in = d_in
+        p["layers"] = []
+        for i in range(cfg.n_layers):
+            last = i == cfg.n_layers - 1
+            heads = 1 if last else cfg.n_heads
+            dout = cfg.n_classes if last else d
+            k1, k2, k3 = jax.random.split(ks[i], 3)
+            p["layers"].append({
+                "w": (jax.random.normal(k1, (dims_in, heads, dout)) / np.sqrt(dims_in)).astype(dt),
+                "a_l": (0.1 * jax.random.normal(k2, (heads, dout))).astype(dt),
+                "a_r": (0.1 * jax.random.normal(k3, (heads, dout))).astype(dt),
+            })
+            dims_in = heads * dout
+    elif cfg.arch == "schnet":
+        p["embed"] = (jax.random.normal(ks[0], (100, d)) * 0.1).astype(dt)  # z -> d
+        p["interactions"] = []
+        for i in range(cfg.n_layers):
+            k1, k2, k3 = jax.random.split(ks[i + 1], 3)
+            p["interactions"].append({
+                "filter": _mlp_init(k1, (cfg.n_rbf, d, d), dt),
+                "in_lin": _mlp_init(k2, (d, d), dt),
+                "out": _mlp_init(k3, (d, d, d), dt),
+            })
+        p["head"] = _mlp_init(ks[-1], (d, d // 2, 1), dt)
+    elif cfg.arch == "egnn":
+        p["embed"] = _mlp_init(ks[0], (d_in, d), dt)
+        p["layers"] = []
+        for i in range(cfg.n_layers):
+            k1, k2, k3 = jax.random.split(ks[i + 1], 3)
+            p["layers"].append({
+                "phi_e": _mlp_init(k1, (2 * d + 1, d, d), dt),
+                "phi_x": _mlp_init(k2, (d, d, 1), dt),
+                "phi_h": _mlp_init(k3, (2 * d, d, d), dt),
+            })
+        p["head"] = _mlp_init(ks[-1], (d, d // 2, 1), dt)
+    else:
+        raise ValueError(cfg.arch)
+    return p
+
+
+def _rbf_expand(dist, n_rbf, cutoff):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 10.0 / cutoff
+    return jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2)
+
+
+def gnn_forward(params, batch, cfg: GnnConfig):
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch["edge_mask"][:, None]
+    n = batch["node_mask"].shape[0]
+
+    if cfg.arch == "gin":
+        h = _mlp(params["embed"], batch["node_feat"], final_act=True)
+        for i in range(cfg.n_layers):
+            agg = jax.ops.segment_sum(h[src] * emask, dst, num_segments=n)
+            h = _mlp(params["mlps"][i], (1.0 + params["eps"][i]) * h + agg)
+            h = jax.nn.relu(h)
+        if cfg.task == "graph_class":
+            pooled = jax.ops.segment_sum(h * batch["node_mask"][:, None],
+                                         batch["graph_ids"],
+                                         num_segments=batch["g_labels"].shape[0])
+            return _mlp(params["out"], pooled)
+        return _mlp(params["out"], h)
+
+    if cfg.arch == "gat":
+        h = batch["node_feat"]
+        for li, lp in enumerate(params["layers"]):
+            z = jnp.einsum("nf,fhd->nhd", h, lp["w"])         # [N, H, D]
+            el = jnp.einsum("nhd,hd->nh", z, lp["a_l"])
+            er = jnp.einsum("nhd,hd->nh", z, lp["a_r"])
+            e = jax.nn.leaky_relu(el[src] + er[dst], 0.2)     # [E, H]
+            e = jnp.where(batch["edge_mask"][:, None] > 0, e, -jnp.inf)
+            # edge-softmax per (dst, head): fold head into segment id
+            H = e.shape[1]
+            seg = dst[:, None] * H + jnp.arange(H)[None, :]
+            alpha = segment_softmax(e.reshape(-1), seg.reshape(-1), n * H)
+            alpha = alpha.reshape(-1, H) * batch["edge_mask"][:, None]
+            msg = alpha[..., None] * z[src]                   # [E, H, D]
+            out = jax.ops.segment_sum(msg, dst, num_segments=n)
+            last = li == len(params["layers"]) - 1
+            h = out.mean(axis=1) if last else jax.nn.elu(out.reshape(n, -1))
+        if cfg.task == "graph_class":
+            cnt = jax.ops.segment_sum(batch["node_mask"], batch["graph_ids"],
+                                      num_segments=batch["g_labels"].shape[0])
+            pooled = jax.ops.segment_sum(h * batch["node_mask"][:, None],
+                                         batch["graph_ids"],
+                                         num_segments=batch["g_labels"].shape[0])
+            return pooled / jnp.maximum(cnt, 1.0)[:, None]
+        return h
+
+    if cfg.arch == "schnet":
+        pos = batch["pos"]
+        h = params["embed"][batch["atom_z"]]
+        dvec = pos[src] - pos[dst]
+        dist = jnp.sqrt(jnp.maximum(jnp.sum(dvec * dvec, axis=-1), 1e-12))
+        rbf = _rbf_expand(dist, cfg.n_rbf, cfg.cutoff)
+        # cosine cutoff envelope
+        env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+        for ip in params["interactions"]:
+            w = _mlp(ip["filter"], rbf) * (env * batch["edge_mask"])[:, None]
+            xin = _mlp(ip["in_lin"], h)
+            m = jax.ops.segment_sum(xin[src] * w, dst, num_segments=n)
+            h = h + _mlp(ip["out"], m)
+        atom_e = _mlp(params["head"], h)[:, 0] * batch["node_mask"]
+        return jax.ops.segment_sum(atom_e, batch["graph_ids"],
+                                   num_segments=batch["g_labels"].shape[0])
+
+    if cfg.arch == "egnn":
+        pos = batch["pos"]
+        h = _mlp(params["embed"], batch["node_feat"], final_act=True)
+        for lp in params["layers"]:
+            dvec = pos[src] - pos[dst]
+            d2 = jnp.sum(dvec * dvec, axis=-1, keepdims=True)
+            m = _mlp(lp["phi_e"], jnp.concatenate([h[src], h[dst], d2], -1),
+                     final_act=True) * emask
+            coef = jnp.tanh(_mlp(lp["phi_x"], m))             # bounded update
+            pos = pos + jax.ops.segment_sum(dvec * coef * emask, dst,
+                                            num_segments=n) / 16.0
+            magg = jax.ops.segment_sum(m, dst, num_segments=n)
+            h = h + _mlp(lp["phi_h"], jnp.concatenate([h, magg], -1))
+        atom_e = _mlp(params["head"], h)[:, 0] * batch["node_mask"]
+        return jax.ops.segment_sum(atom_e, batch["graph_ids"],
+                                   num_segments=batch["g_labels"].shape[0])
+
+    raise ValueError(cfg.arch)
+
+
+def gnn_loss(params, batch, cfg: GnnConfig):
+    out = gnn_forward(params, batch, cfg)
+    if cfg.task == "node_class":
+        logits = out.astype(jnp.float32)
+        mask = batch["label_mask"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+        return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.task == "graph_class":
+        logits = out.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, batch["g_labels"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+    # graph regression (energy): MSE
+    pred = out.astype(jnp.float32)
+    return jnp.mean((pred - batch["g_labels"].astype(jnp.float32)) ** 2)
+
+
+def make_gnn_train_step(cfg: GnnConfig, ocfg: opt.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(gnn_loss)(params, batch, cfg)
+        newp, news, metrics = opt.adamw_update(grads, opt_state, params, ocfg)
+        metrics["loss"] = loss
+        return newp, news, metrics
+    return train_step
+
+
+def make_gnn_serve_step(cfg: GnnConfig):
+    def serve_step(params, batch):
+        return gnn_forward(params, batch, cfg)
+    return serve_step

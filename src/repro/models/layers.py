@@ -1,0 +1,348 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (blockwise
+train path + KV-cache decode path), SwiGLU, and the token-sorted MoE layer.
+
+Everything is pure jnp + lax (SPMD-partitionable under pjit); parameters are
+plain pytrees (no flax).  Shapes follow [batch, seq, heads, head_dim].
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    return (scale / np.sqrt(fan_in)) * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# activation-sharding hints (MaxText-style). No-ops without a mesh context,
+# and silently drop axes that are absent or don't divide the dimension —
+# so the same model code runs in smoke tests (1 device) and the 512-chip
+# dry-run unchanged.
+# --------------------------------------------------------------------------
+BATCH_AXES = ("pod", "data")
+
+
+def shard_hint(x, *spec):
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+    except Exception:
+        return x
+    if mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+
+    def clean(dim, entry):
+        if entry is None:
+            return None
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        axes = tuple(a for a in axes if a in names)
+        if not axes:
+            return None
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size != 0 or dim < size:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    assert len(spec) == x.ndim, (spec, x.shape)
+    pspec = jax.sharding.PartitionSpec(
+        *[clean(d, e) for d, e in zip(x.shape, spec)])
+    return jax.lax.with_sharding_constraint(x, pspec)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [B, S, H, dh], positions [B, S] -> rotated x."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                                  # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs         # [B, S, dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def _gqa_scores(q, k):
+    """q [B, S, Hkv, G, dh], k [B, T, Hkv, dh] -> scores [B, Hkv, G, S, T]."""
+    return jnp.einsum("bshgd,bthd->bhgst", q, k)
+
+
+def _fa_fwd_core(q, k, v, block_q: int, block_k: int):
+    """Causal flash forward. q/k/v [B, S, H, dh] (kv pre-repeated to H).
+    Returns (o [B,S,H,dh], lse [B,S,H] fp32).  Double scan over (q x kv)
+    blocks with an online-softmax carry; largest temp is one
+    [B, H, bq, bk] tile."""
+    B, S, H, dh = q.shape
+    scale = 1.0 / np.sqrt(dh)
+    nq, nk = S // block_q, S // block_k
+    qb = jnp.moveaxis(q.reshape(B, nq, block_q, H, dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, block_k, H, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, block_k, H, dh), 1, 0)
+    qpos = jnp.arange(block_q)
+    kpos = jnp.arange(block_k)
+
+    def per_qblock(_, inp):
+        qi, iq = inp                                      # [B, bq, H, dh]
+        qi32 = qi.astype(jnp.float32) * scale
+        m0 = jnp.full((B, H, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        o0 = jnp.zeros((B, H, block_q, dh), jnp.float32)
+
+        def per_kblock(carry, kin):
+            m, l, o = carry
+            ki, vi, ik = kin
+            s = jnp.einsum("bshd,bthd->bhst", qi32, ki.astype(jnp.float32))
+            causal = (iq * block_q + qpos)[:, None] >= (ik * block_k + kpos)[None, :]
+            s = jnp.where(causal[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            o = o * corr[..., None] + jnp.einsum("bhst,bthd->bhsd", p,
+                                                 vi.astype(jnp.float32))
+            return (m_new, l, o), 0.0
+
+        (m, l, o), _ = jax.lax.scan(per_kblock, (m0, l0, o0),
+                                    (kb, vb, jnp.arange(nk)))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(l > 0, jnp.log(jnp.maximum(l, 1e-30))
+                        + jnp.where(jnp.isfinite(m), m, 0.0), -jnp.inf)
+        return 0, (jnp.moveaxis(o, 2, 1), jnp.moveaxis(lse, 2, 1))
+
+    _, (ob, lseb) = jax.lax.scan(per_qblock, 0, (qb, jnp.arange(nq)))
+    o = jnp.moveaxis(ob, 0, 1).reshape(B, S, H, dh).astype(q.dtype)
+    lse = jnp.moveaxis(lseb, 0, 1).reshape(B, S, H)
+    return o, lse
+
+
+def _fa_bwd_core(q, k, v, o, lse, do, block_q: int, block_k: int):
+    """Flash backward: recompute p per (q,kv) tile from lse; never stores the
+    probability stack (the memory fix the custom_vjp exists for)."""
+    B, S, H, dh = q.shape
+    scale = 1.0 / np.sqrt(dh)
+    nq, nk = S // block_q, S // block_k
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # [B,S,H]
+    qb = jnp.moveaxis(q.reshape(B, nq, block_q, H, dh), 1, 0)
+    dob = jnp.moveaxis(do.reshape(B, nq, block_q, H, dh), 1, 0)
+    lseb = jnp.moveaxis(lse.reshape(B, nq, block_q, H), 1, 0)
+    deltab = jnp.moveaxis(delta.reshape(B, nq, block_q, H), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, block_k, H, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, block_k, H, dh), 1, 0)
+    qpos = jnp.arange(block_q)
+    kpos = jnp.arange(block_k)
+
+    def per_kvblock(dq_acc, kin):
+        ki, vi, ik = kin
+        ki32 = ki.astype(jnp.float32)
+        vi32 = vi.astype(jnp.float32)
+
+        def per_qblock(carry, qin):
+            dk, dv = carry
+            qi, doi, lsei, di, iq = qin
+            qi32 = qi.astype(jnp.float32) * scale
+            s = jnp.einsum("bshd,bthd->bhst", qi32, ki32)
+            causal = (iq * block_q + qpos)[:, None] >= (ik * block_k + kpos)[None, :]
+            lsei_safe = jnp.where(jnp.isfinite(lsei), lsei, 0.0)
+            p = jnp.where(causal[None, None],
+                          jnp.exp(s - jnp.moveaxis(lsei_safe, 2, 1)[..., None]), 0.0)
+            do32 = doi.astype(jnp.float32)
+            dv = dv + jnp.einsum("bhst,bshd->bthd", p, do32)
+            dp = jnp.einsum("bshd,bthd->bhst", do32, vi32)
+            ds = p * (dp - jnp.moveaxis(di, 2, 1)[..., None])
+            dq_i = jnp.einsum("bhst,bthd->bshd", ds, ki32) * scale
+            dk = dk + jnp.einsum("bhst,bshd->bthd", ds, qi32)
+            return (dk, dv), dq_i
+
+        zer = jnp.zeros((B, block_k, H, dh), jnp.float32)
+        (dk, dv), dq_stack = jax.lax.scan(
+            per_qblock, (zer, zer), (qb, dob, lseb, deltab, jnp.arange(nq)))
+        return dq_acc + dq_stack, (dk, dv)
+
+    dq0 = jnp.zeros((nq, B, block_q, H, dh), jnp.float32)
+    dq_stack, (dkb, dvb) = jax.lax.scan(per_kvblock, dq0,
+                                        (kb, vb, jnp.arange(nk)))
+    dq = jnp.moveaxis(dq_stack, 0, 1).reshape(B, S, H, dh)
+    # dk carried the *scaled* q contribution; undo nothing (ds@q uses scaled q
+    # => dk already includes the 1/sqrt(dh) factor exactly once).
+    dk = jnp.moveaxis(dkb, 0, 1).reshape(B, S, H, dh)
+    dv = jnp.moveaxis(dvb, 0, 1).reshape(B, S, H, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attention(q, k, v, block_q: int, block_k: int):
+    return _fa_fwd_core(q, k, v, block_q, block_k)[0]
+
+
+def _fa_fwd_rule(q, k, v, block_q, block_k):
+    o, lse = _fa_fwd_core(q, k, v, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd_rule(block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    return _fa_bwd_core(q, k, v, o, lse, do, block_q, block_k)
+
+
+_flash_attention.defvjp(_fa_fwd_rule, _fa_bwd_rule)
+
+
+def blockwise_causal_attention(q, k, v, *, block_q: int = 256,
+                               block_k: int = 1024) -> jax.Array:
+    """Causal GQA flash attention (custom-VJP, DESIGN.md §6).
+
+    q [B, S, H, dh]; k/v [B, S, Hkv, dh].  KV heads are repeated to H (the
+    flat-H layout keeps the head axis shardable over 'model' when H divides);
+    the custom VJP saves only (q, k, v, o, lse) and recomputes probability
+    tiles in the backward — the [nq*nk, ...] tile stack never materializes.
+    """
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    s_orig = S
+    lcm = int(np.lcm(block_q, block_k))
+    pad = (-S) % lcm
+    if pad:
+        # pad keys land at positions > any real query => causally masked out
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    q = shard_hint(q, BATCH_AXES, None, "model", None)
+    k = shard_hint(k, BATCH_AXES, None, "model", None)
+    v = shard_hint(v, BATCH_AXES, None, "model", None)
+    out = _flash_attention(q, k, v, block_q, block_k)
+    return out[:, :s_orig]
+
+
+def decode_attention(q, k_cache, v_cache, kv_len_mask) -> jax.Array:
+    """Single-token decode: q [B, 1, H, dh], caches [B, T, Hkv, dh].
+
+    kv_len_mask [B, T] marks valid cache slots.  Softmax reductions over T
+    partition cleanly when the cache is sequence-sharded (flash-decoding
+    semantics emerge from SPMD partial reductions; DESIGN.md §5 long_500k).
+    """
+    B, _, H, dh = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, 1, Hkv, G, dh) * scale
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k_cache).astype(jnp.float32)
+    scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, dh)
+
+
+# --------------------------------------------------------------------------
+# FFN / SwiGLU
+# --------------------------------------------------------------------------
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# --------------------------------------------------------------------------
+# MoE: token-sorted dispatch with static capacity (DESIGN.md §6)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+def moe_dispatch_indices(top_idx, n_experts: int, capacity: int):
+    """top_idx [T, k] expert choices -> (dest [T, k], keep [T, k], src [E*C]).
+
+    dest = e*C + position-within-expert; src is the inverse map (gather list
+    for building the per-expert token buffers), pad slots point at T (callers
+    append a zero row).
+    """
+    T, k = top_idx.shape
+    flat_e = top_idx.reshape(-1)                                     # [T*k]
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)      # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot                        # rank within expert
+    pos = jnp.sum(pos * onehot, axis=-1)                             # [T*k]
+    keep = pos < capacity
+    dest = jnp.where(keep, flat_e * capacity + pos, n_experts * capacity)
+    src = jnp.full((n_experts * capacity + 1,), T, dtype=jnp.int32)
+    token_of = jnp.arange(T * k, dtype=jnp.int32) // k
+    src = src.at[dest].set(jnp.where(keep, token_of, T))
+    return dest.reshape(T, k), keep.reshape(T, k), src[:-1]
+
+
+def moe_layer(x, gate_w, w_gate, w_up, w_down, cfg: MoeConfig):
+    """x [T, D]; expert weights [E, D, F] / [E, F, D]. Returns [T, D].
+
+    Token-sorted static-capacity dispatch: gather tokens into [E, C, D]
+    buffers, batched per-expert SwiGLU einsum, weighted combine.  With experts
+    sharded over 'model' and tokens over 'data', XLA inserts the dispatch
+    all-to-all (EP); hillclimbed in EXPERIMENTS.md §Perf.
+    """
+    T, Dm = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(8, int(cfg.capacity_factor * k * T / E))
+    x = shard_hint(x, ("pod", "data", "model"), None)
+    logits = (x @ gate_w).astype(jnp.float32)                        # [T, E]
+    top_val, top_idx = jax.lax.top_k(logits, k)
+    probs = jax.nn.softmax(top_val, axis=-1).astype(x.dtype)         # [T, k]
+
+    dest, keep, src = moe_dispatch_indices(top_idx, E, cap)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, Dm), x.dtype)], axis=0)
+    # §Perf HC2: gather with EP-sharded *indices* so the dispatched buffer is
+    # born sharded over 'model' (an unsharded [E*cap, D] gather output was
+    # the arctic-480b memory blow-up; EXPERIMENTS.md §Perf)
+    src2 = shard_hint(src.reshape(E, cap), "model", None)
+    xe = x_pad[src2]                                                 # [E, cap, D]
+    xe = shard_hint(xe, "model", None, None)                         # EP layout
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) \
+        * jnp.einsum("ecd,edf->ecf", xe, w_up)
+    h = shard_hint(h, "model", None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)                       # [E, cap, D]
+    # combine via slot-indexed scatter-add: per expert slot we already know
+    # its source token (`src`) — scatter ye rows into token space directly.
+    # The gather-combine formulation all-gathers ye when its rows are
+    # model-sharded (37 GB/dev at arctic scale); the scatter keeps the
+    # updates expert-sharded (§Perf HC2 iter 2).
+    wslot = jnp.zeros((E * cap + 1,), ye.dtype).at[
+        jnp.where(keep.reshape(-1), dest.reshape(-1), E * cap)].set(
+        (probs * keep).reshape(-1).astype(ye.dtype))                 # [E*cap]
+    upd = ye.reshape(E * cap, Dm) * wslot[:-1, None]
+    upd = shard_hint(upd.reshape(E, cap, Dm), "model", None, None)
+    y = jnp.zeros((T + 1, Dm), ye.dtype).at[src.reshape(E, cap)].add(
+        upd.reshape(E, cap, Dm))
+    return y[:T].astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.roofline.hw import TPU_V5E  # noqa: F401
+from repro.roofline.analysis import analyze_compiled, roofline_terms  # noqa: F401

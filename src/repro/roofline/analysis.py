@@ -1,0 +1,147 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+  compute    = HLO_FLOPs(per-device) / peak_FLOP/s
+  memory     = HLO_bytes(per-device) / HBM_bw
+  collective = collective_bytes(per-device, ring-model) / link_bw
+
+cost_analysis() reports per-device (post-SPMD) flops/bytes.  Collective bytes
+are NOT in cost_analysis: we parse the partitioned HLO text and apply ring
+cost models per op:
+
+  all-reduce      2·X·(n−1)/n   (X = per-device tensor bytes)
+  all-gather      X_out·(n−1)/n
+  reduce-scatter  X_in ·(n−1)/n
+  all-to-all      X·(n−1)/n
+  collective-permute  X
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+from repro.roofline.hw import HwSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(?)([a-z0-9\[\],{}\s/)(]+?)\)?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    raw_bytes: Dict[str, int]       # per-device tensor bytes by op kind
+    ring_bytes: float               # ring-model wire bytes per device
+    ops: List[dict]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    raw: Dict[str, int] = {}
+    ops: List[dict] = []
+    ring_total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2).lower()
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        nbytes = _shape_bytes(shapes_str)
+        # group size n for the ring discount
+        g = _GROUP_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUP_RE2.search(line)
+            n = int(g2.group(2)) if g2 else 2
+        n = max(n, 2)
+        disc = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2.0 * nbytes * disc
+        elif kind == "collective-permute":
+            wire = float(nbytes)
+        else:
+            wire = nbytes * disc
+        counts[kind] = counts.get(kind, 0) + 1
+        raw[kind] = raw.get(kind, 0) + nbytes
+        ring_total += wire
+        ops.append({"kind": kind, "bytes": nbytes, "group": n, "wire": wire})
+    return CollectiveStats(counts=counts, raw_bytes=raw, ring_bytes=ring_total,
+                           ops=ops)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_wire_bytes: float, hw: HwSpec = TPU_V5E,
+                   model_flops_per_dev: Optional[float] = None) -> dict:
+    t_comp = flops_per_dev / hw.peak_flops_bf16
+    t_mem = bytes_per_dev / hw.hbm_bw
+    t_coll = coll_wire_bytes / hw.ici_link_bw
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_comp, t_mem, t_coll)
+    out = dict(terms)
+    out["dominant"] = dom
+    out["step_time_lb_s"] = bound
+    out["roofline_fraction"] = (t_comp / bound) if bound > 0 else 0.0
+    if model_flops_per_dev is not None:
+        out["model_flops_per_dev"] = model_flops_per_dev
+        out["useful_flop_ratio"] = (model_flops_per_dev / flops_per_dev
+                                    if flops_per_dev else 0.0)
+        out["model_compute_s"] = model_flops_per_dev / hw.peak_flops_bf16
+        out["mfu_upper_bound"] = (out["model_compute_s"] / bound
+                                  if bound > 0 else 0.0)
+    return out
+
+
+def analyze_compiled(compiled, n_devices: int, model_flops_total: float = 0.0,
+                     hw: HwSpec = TPU_V5E) -> dict:
+    """Full §Roofline record for one dry-run cell."""
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text())
+    mem = compiled.memory_analysis()
+    terms = roofline_terms(flops, nbytes, coll.ring_bytes, hw,
+                           model_flops_per_dev=model_flops_total / n_devices
+                           if model_flops_total else None)
+    return {
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": nbytes,
+        "collective_counts": coll.counts,
+        "collective_raw_bytes": coll.raw_bytes,
+        "collective_wire_bytes": coll.ring_bytes,
+        "mem_args_bytes": int(mem.argument_size_in_bytes),
+        "mem_out_bytes": int(mem.output_size_in_bytes),
+        "mem_temp_bytes": int(mem.temp_size_in_bytes),
+        "mem_total_bytes": int(mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes),
+        **terms,
+    }

@@ -1,0 +1,22 @@
+"""Target-hardware constants (TPU v5e) for the roofline terms."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bw: float              # B/s per chip
+    ici_link_bw: float         # B/s per link
+    hbm_bytes: float           # capacity per chip
+
+
+TPU_V5E = HwSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16e9,
+)

@@ -1,0 +1,117 @@
+"""Fault-tolerant training loop (DESIGN.md §6).
+
+Features exercised by tests/test_trainer.py and examples/train_lm.py:
+  * gradient accumulation (microbatching) via lax.scan inside the step;
+  * periodic sharded checkpoints w/ deterministic data cursor;
+  * crash/restart resume that is BIT-EXACT vs an uninterrupted run;
+  * elastic restore onto a different mesh (re-shard at device_put);
+  * straggler/heartbeat hook: a step-deadline watchdog that records
+    slow steps and (in multi-host deployments) triggers re-scheduling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    grad_accum: int = 1
+    log_every: int = 10
+    step_deadline_s: float = 0.0     # >0: watchdog flags stragglers
+    grad_compress: bool = False      # int8 all-reduce on the pod axis
+
+
+def make_accum_train_step(loss_fn, ocfg: opt.AdamWConfig, n_accum: int):
+    """Gradient-accumulation step: batch [A, b, ...] microbatches scanned."""
+
+    def train_step(params, opt_state, batch):
+        def micro(g_acc, mb):
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return jax.tree_util.tree_map(jnp.add, g_acc, g), loss
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        g_sum, losses = jax.lax.scan(micro, zeros, batch)
+        grads = jax.tree_util.tree_map(lambda g: g / n_accum, g_sum)
+        new_p, new_s, metrics = opt.adamw_update(grads, opt_state, params, ocfg)
+        metrics["loss"] = jnp.mean(losses)
+        return new_p, new_s, metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, train_step: Callable,
+                 params, opt_state, data_stream,
+                 shardings: Optional[Any] = None):
+        self.cfg = cfg
+        self.step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+        self.params = params
+        self.opt_state = opt_state
+        self.stream = data_stream
+        self.shardings = shardings
+        self.step = 0
+        self.history: list = []
+        self.straggler_events: list = []
+
+    # ------------------------------------------------------------------
+    def maybe_resume(self) -> bool:
+        last = ckpt.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return False
+        state, cursor, step = ckpt.restore_checkpoint(
+            self.cfg.ckpt_dir,
+            {"params": self.params, "opt": self.opt_state},
+            shardings=self.shardings)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.stream.restore(cursor)
+        self.step = step
+        return True
+
+    def _checkpoint(self):
+        ckpt.save_checkpoint(
+            self.cfg.ckpt_dir, self.step,
+            {"params": self.params, "opt": self.opt_state},
+            data_cursor=self.stream.state())
+        ckpt.gc_checkpoints(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: Optional[int] = None,
+            crash_at: Optional[int] = None) -> Dict:
+        """crash_at: raise after that step (fault-injection for tests)."""
+        target = self.step + (n_steps or self.cfg.total_steps - self.step)
+        while self.step < target:
+            batch = jax.tree_util.tree_map(jnp.asarray, self.stream.next())
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if self.cfg.step_deadline_s and dt > self.cfg.step_deadline_s:
+                # straggler watchdog: in a multi-host deployment this is the
+                # signal to preempt/reschedule the slow host
+                self.straggler_events.append({"step": self.step, "secs": dt})
+            self.step += 1
+            self.history.append(loss)
+            if self.step % self.cfg.log_every == 0:
+                print(f"step {self.step}: loss={loss:.4f} ({dt:.2f}s)")
+            if self.step % self.cfg.ckpt_every == 0:
+                self._checkpoint()
+            if crash_at is not None and self.step >= crash_at:
+                raise RuntimeError(f"injected crash at step {self.step}")
+        self._checkpoint()
+        return {"final_loss": self.history[-1], "history": self.history,
+                "stragglers": self.straggler_events}

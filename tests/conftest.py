@@ -1,0 +1,32 @@
+import numpy as np
+import pytest
+
+from repro.data.vectors import make_dataset, exact_ground_truth
+from repro.core.hnsw import build_hnsw
+from repro.core.nsg import build_nsg
+from repro.core.angles import sample_angle_profile
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    return make_dataset(n_base=1500, n_query=40, dim=48, n_clusters=24, seed=0)
+
+
+@pytest.fixture(scope="session")
+def hnsw_index(small_ds):
+    return build_hnsw(small_ds.base, m=12, efc=80, seed=0)
+
+
+@pytest.fixture(scope="session")
+def nsg_index(small_ds):
+    return build_nsg(small_ds.base, r=24, c=120, l=32, knn_k=24)
+
+
+@pytest.fixture(scope="session")
+def hnsw_profile(hnsw_index):
+    return sample_angle_profile(hnsw_index, n_sample=12, efs=48, seed=1)
+
+
+@pytest.fixture(scope="session")
+def ground_truth(small_ds):
+    return exact_ground_truth(small_ds, k=10)

@@ -1,0 +1,106 @@
+"""Checkpoint/fault-tolerance contracts (DESIGN.md §6)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import LMStream
+from repro.models import transformer as T
+from repro.train import checkpoint as C
+from repro.train import optimizer as opt
+from repro.train.elastic import remesh_plan
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = T.LMConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                 d_ff=64, vocab=128, dtype="float32", block_q=8, block_k=16,
+                 loss_chunk=8)
+OCFG = opt.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+
+
+def _fresh():
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    state = opt.adamw_init(params, OCFG)
+    stream = LMStream(CFG.vocab, 2, 16, seed=0)
+    return params, state, stream
+
+
+def test_roundtrip_bitexact(tmp_path):
+    params, state, stream = _fresh()
+    C.save_checkpoint(str(tmp_path), 7, {"params": params, "opt": state},
+                      data_cursor=stream.state())
+    restored, cursor, step = C.restore_checkpoint(
+        str(tmp_path), {"params": params, "opt": state})
+    assert step == 7 and cursor == stream.state()
+    for a, b in zip(jax.tree_util.tree_leaves(restored["params"]),
+                    jax.tree_util.tree_leaves(params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corruption_detected(tmp_path):
+    params, state, _ = _fresh()
+    d = C.save_checkpoint(str(tmp_path), 1, {"params": params, "opt": state})
+    shard = os.path.join(d, "shard_0.npz")
+    with open(shard, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError):
+        C.restore_checkpoint(str(tmp_path), {"params": params, "opt": state})
+
+
+def test_crash_resume_bitexact(tmp_path):
+    """Kill at step 7, resume, run to 12: losses equal the uninterrupted run."""
+    ck = str(tmp_path / "a")
+
+    def make_trainer(ckdir):
+        params, state, stream = _fresh()
+        return Trainer(TrainerConfig(total_steps=12, ckpt_every=5,
+                                     ckpt_dir=ckdir, log_every=100),
+                       T.make_train_step(CFG, OCFG), params, state, stream)
+
+    # uninterrupted reference
+    t_ref = make_trainer(str(tmp_path / "ref"))
+    ref = t_ref.run()
+
+    t1 = make_trainer(ck)
+    with pytest.raises(RuntimeError):
+        t1.run(crash_at=7)
+    t2 = make_trainer(ck)
+    assert t2.maybe_resume()
+    assert t2.step == 5                    # last checkpoint before the crash
+    out = t2.run()
+    np.testing.assert_allclose(out["history"][-3:], ref["history"][-3:],
+                               rtol=1e-6)
+
+
+def test_gc_keeps_latest(tmp_path):
+    params, state, stream = _fresh()
+    for s in (1, 2, 3, 4, 5):
+        C.save_checkpoint(str(tmp_path), s, {"params": params, "opt": state})
+    C.gc_checkpoints(str(tmp_path), keep=2)
+    assert C.latest_step(str(tmp_path)) == 5
+    kept = [d for d in os.listdir(str(tmp_path)) if d.startswith("step_")]
+    assert len(kept) == 2
+
+
+def test_elastic_remesh_plan():
+    """Global batch preserved across device-count changes."""
+    for ndev in (512, 256, 64, 8, 1):
+        plan = remesh_plan(global_batch=256, new_devices=ndev)
+        assert plan.tokens_per_step_preserved, (ndev, plan)
+
+
+def test_elastic_restore_different_sharding(tmp_path):
+    """Restore under a fresh sharding spec (single device here — the API
+    path is identical for a real re-mesh)."""
+    params, state, _ = _fresh()
+    C.save_checkpoint(str(tmp_path), 3, {"params": params, "opt": state})
+    dev = jax.devices()[0]
+    sh = jax.tree_util.tree_map(
+        lambda _: jax.sharding.SingleDeviceSharding(dev),
+        {"params": params, "opt": state})
+    restored, _, _ = C.restore_checkpoint(
+        str(tmp_path), {"params": params, "opt": state}, shardings=sh)
+    leaf = jax.tree_util.tree_leaves(restored["params"])[0]
+    assert leaf.sharding == jax.sharding.SingleDeviceSharding(dev)

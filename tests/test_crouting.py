@@ -1,0 +1,117 @@
+"""Paper-behavior validation: the claims of CRouting reproduce qualitatively
+on synthetic data (quantitative table in EXPERIMENTS.md)."""
+import numpy as np
+import pytest
+
+from repro.core.angles import sample_angle_profile, theoretical_angle_pdf
+from repro.core.ref_search import search_ref
+from repro.core.search import EngineConfig, search_batch
+from repro.data.vectors import recall_at_k
+
+
+def test_angle_concentration_near_half_pi(hnsw_profile):
+    """§3.3: theta concentrates near 0.5*pi (slightly below, since the search
+    moves toward the query)."""
+    med = np.median(hnsw_profile.samples)
+    assert 0.3 * np.pi < med < 0.6 * np.pi
+    # skew: the distribution has mass on both sides but a single mode
+    assert hnsw_profile.samples.std() < 0.2 * np.pi
+
+
+def test_angle_distribution_graph_invariant(small_ds, hnsw_index, nsg_index):
+    """Fig. 7: the angle distribution is a property of the DATASET, not of the
+    graph algorithm."""
+    p1 = sample_angle_profile(hnsw_index, n_sample=10, efs=48, seed=3)
+    p2 = sample_angle_profile(nsg_index, n_sample=10, efs=48, seed=3)
+    assert abs(np.median(p1.samples) - np.median(p2.samples)) < 0.06 * np.pi
+
+
+def test_theoretical_pdf_integrates_to_one():
+    eta = np.linspace(1e-3, np.pi - 1e-3, 4001)
+    for d in (16, 128, 960):
+        pdf = theoretical_angle_pdf(eta, d)
+        area = np.trapezoid(pdf, eta)
+        assert abs(area - 1.0) < 1e-3, (d, area)
+
+
+def test_crouting_reduces_distance_calls(small_ds, hnsw_index, hnsw_profile):
+    """Headline claim: substantially fewer exact distance calls at the same efs."""
+    g = hnsw_index
+    plain = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="none"))
+    cr = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="crouting"),
+                      cos_theta=hnsw_profile.cos_theta_star)
+    reduction = 1 - np.mean(cr.dist_calls) / np.mean(plain.dist_calls)
+    assert reduction > 0.20, f"only {reduction:.1%} fewer distance calls"
+
+
+def test_error_correction_recovers_recall(small_ds, hnsw_index, hnsw_profile,
+                                          ground_truth):
+    """Table 3: CRouting_O collapses recall; error correction recovers most
+    of it while still saving calls."""
+    g = hnsw_index
+    ct = hnsw_profile.cos_theta_star
+    # efs=16 keeps the pool under pressure so the prune-only collapse shows
+    # (at large efs this tiny dataset saturates recall for every router)
+    cfgs = {r: search_batch(g, small_ds.queries, EngineConfig(efs=16, router=r),
+                            cos_theta=ct)
+            for r in ("none", "crouting", "crouting_o")}
+    rec = {r: recall_at_k(np.asarray(v.ids[:, :10]), ground_truth, 10)
+           for r, v in cfgs.items()}
+    assert rec["crouting_o"] < rec["crouting"] - 0.1, rec
+    # at FIXED efs the paper itself shows a gap (Table 3: 0.954 vs 0.842 at
+    # efs=60); iso-recall speedup is asserted in test_system.py
+    assert rec["crouting"] > rec["none"] - 0.16, rec
+    assert np.mean(cfgs["crouting"].dist_calls) < np.mean(cfgs["none"].dist_calls)
+    assert np.mean(cfgs["crouting_o"].dist_calls) < np.mean(cfgs["crouting"].dist_calls)
+
+
+def test_triangle_inequality_barely_prunes(small_ds, hnsw_index):
+    """§3.2: the triangle lower bound is too loose to prune (~0.08% on SIFT)."""
+    g = hnsw_index
+    plain = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="none"))
+    tri = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="triangle"))
+    reduction = 1 - np.mean(tri.dist_calls) / np.mean(plain.dist_calls)
+    assert reduction < 0.05, f"triangle pruned {reduction:.1%} (too much?)"
+
+
+def test_relative_estimation_error_small(small_ds, hnsw_index, hnsw_profile):
+    """Table 4: mean relative error of the cosine-theorem estimate ~6%."""
+    g = hnsw_index
+    errs = []
+    for q in small_ds.queries[:15]:
+        _, _, st = search_ref(g, q, efs=48, router="crouting",
+                              cos_theta=hnsw_profile.cos_theta_star,
+                              record_est_error=True)
+        for est, true in st.est_pairs:
+            if true > 1e-9:
+                errs.append(abs(true - est) / true)
+    assert np.mean(errs) < 0.20, f"mean rel err {np.mean(errs):.3f}"
+
+
+def test_incorrect_prune_ratio_bounded(small_ds, hnsw_index, hnsw_profile,
+                                       ground_truth):
+    """Table 5: pruned nodes that were actually positive stay a small
+    fraction (paper <6%; we allow <15% on tiny synthetic graphs)."""
+    g = hnsw_index
+    ct = hnsw_profile.cos_theta_star
+    bad = tot = 0
+    for i, q in enumerate(small_ds.queries[:15]):
+        _, _, st_p = search_ref(g, q, efs=48)          # ground-truth positives
+        ids, _, st_c = search_ref(g, q, efs=48, router="crouting", cos_theta=ct)
+        positives = st_p.visited_ids
+        tot += max(len(st_c.pruned_ids), 1)
+        bad += len(st_c.pruned_ids & set(int(x) for x in ids if x >= 0))
+    assert bad / tot < 0.15, f"incorrect prune ratio {bad/tot:.3f}"
+
+
+def test_higher_percentile_prunes_more(small_ds, hnsw_index, hnsw_profile):
+    """Fig. 13: larger theta* (higher percentile) => more pruning."""
+    g = hnsw_index
+    calls = []
+    for pct in (50, 90, 99):
+        prof = hnsw_profile.at_percentile(pct)
+        r = search_batch(g, small_ds.queries[:16],
+                         EngineConfig(efs=48, router="crouting_o"),
+                         cos_theta=prof.cos_theta_star)
+        calls.append(float(np.mean(r.dist_calls)))
+    assert calls[0] >= calls[1] >= calls[2], calls

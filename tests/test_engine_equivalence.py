@@ -1,0 +1,73 @@
+"""The batched JAX engine must match the scalar NumPy oracle (Algorithm 1/2)."""
+import numpy as np
+import pytest
+
+from repro.core.ref_search import search_ref
+from repro.core.search import EngineConfig, search_batch
+
+
+def _pools_match(eng_ids, ref_ids, n):
+    a = sorted(int(x) for x in eng_ids if 0 <= x < n)
+    b = sorted(int(x) for x in ref_ids if x >= 0)
+    return a == b
+
+
+def test_plain_greedy_exact_match(small_ds, hnsw_index):
+    g = hnsw_index
+    res = search_batch(g, small_ds.queries, EngineConfig(efs=40, router="none"))
+    for i, q in enumerate(small_ds.queries):
+        ids, _, st = search_ref(g, q, efs=40, k=40)
+        assert _pools_match(res.ids[i], ids, g.n), f"pool mismatch q{i}"
+        assert int(res.dist_calls[i]) == st.dist_calls, f"call-count mismatch q{i}"
+
+
+def test_crouting_matches_stale_bound_oracle(small_ds, hnsw_index, hnsw_profile):
+    g = hnsw_index
+    ct = hnsw_profile.cos_theta_star
+    res = search_batch(g, small_ds.queries,
+                       EngineConfig(efs=40, router="crouting"), cos_theta=ct)
+    for i, q in enumerate(small_ds.queries):
+        ids, _, st = search_ref(g, q, efs=40, k=40, router="crouting",
+                                cos_theta=ct, stale_bound=True)
+        assert _pools_match(res.ids[i], ids, g.n), f"pool mismatch q{i}"
+        assert int(res.dist_calls[i]) == st.dist_calls
+        assert int(res.est_calls[i]) == st.est_calls
+
+
+def test_crouting_o_matches_oracle(small_ds, hnsw_index, hnsw_profile):
+    g = hnsw_index
+    ct = hnsw_profile.cos_theta_star
+    res = search_batch(g, small_ds.queries[:16],
+                       EngineConfig(efs=40, router="crouting_o"), cos_theta=ct)
+    for i, q in enumerate(small_ds.queries[:16]):
+        ids, _, st = search_ref(g, q, efs=40, k=40, router="crouting_o",
+                                cos_theta=ct, stale_bound=True)
+        assert _pools_match(res.ids[i], ids, g.n)
+        assert int(res.dist_calls[i]) == st.dist_calls
+
+
+def test_triangle_router_is_safe(small_ds, hnsw_index):
+    """Triangle-inequality pruning uses an exact lower bound: the result pool
+    must equal plain greedy's (paper §3.2: correct but barely prunes)."""
+    g = hnsw_index
+    plain = search_batch(g, small_ds.queries, EngineConfig(efs=40, router="none"))
+    tri = search_batch(g, small_ds.queries, EngineConfig(efs=40, router="triangle"))
+    for i in range(len(small_ds.queries)):
+        assert _pools_match(tri.ids[i], np.asarray(plain.ids[i]), g.n)
+        assert int(tri.dist_calls[i]) <= int(plain.dist_calls[i])
+
+
+def test_live_vs_frozen_bound_delta_is_small(small_ds, hnsw_index, hnsw_profile):
+    """DESIGN.md §3: frozen-bound (SPMD) semantics prune slightly less than
+    the paper's live bound; the distance-call delta must be tiny."""
+    g = hnsw_index
+    ct = hnsw_profile.cos_theta_star
+    live = frozen = 0
+    for q in small_ds.queries[:20]:
+        _, _, st1 = search_ref(g, q, efs=40, router="crouting", cos_theta=ct)
+        _, _, st2 = search_ref(g, q, efs=40, router="crouting", cos_theta=ct,
+                               stale_bound=True)
+        live += st1.dist_calls
+        frozen += st2.dist_calls
+    assert frozen >= live * 0.95
+    assert frozen <= live * 1.15, (live, frozen)

@@ -1,0 +1,95 @@
+"""Graph-construction invariants + recall floors + metric generality."""
+import numpy as np
+import pytest
+
+from repro.core.graph import validate_graph
+from repro.core.index import AnnIndex
+from repro.core.search import EngineConfig, search_batch
+from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
+
+
+def test_hnsw_structure(hnsw_index):
+    validate_graph(hnsw_index)
+    assert hnsw_index.kind == "hnsw"
+    assert hnsw_index.upper_neighbors is not None
+    assert hnsw_index.build_stats["levels"] >= 2
+
+
+def test_nsg_structure(nsg_index):
+    validate_graph(nsg_index)
+    assert nsg_index.kind == "nsg"
+    # NSG: medoid entry + connectivity guaranteed via spanning tree
+    n = nsg_index.n
+    seen = np.zeros(n, bool)
+    stack = [nsg_index.entry_point]
+    seen[nsg_index.entry_point] = True
+    while stack:
+        u = stack.pop()
+        for v in nsg_index.neighbors[u]:
+            if v < n and not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    assert seen.all(), f"{(~seen).sum()} unreachable nodes"
+
+
+@pytest.mark.parametrize("which", ["hnsw", "nsg"])
+def test_recall_floor(small_ds, hnsw_index, nsg_index, ground_truth, which):
+    g = hnsw_index if which == "hnsw" else nsg_index
+    res = search_batch(g, small_ds.queries,
+                       EngineConfig(efs=48, router="none",
+                                    use_hierarchy=g.upper_neighbors is not None))
+    rec = recall_at_k(np.asarray(res.ids[:, :10]), ground_truth, 10)
+    # NSG floor is lower: our candidate pools use the final search pool only
+    # (real NSG unions the visited set), which on strongly clustered data
+    # leaves MRNG short of long-range edges (DESIGN.md §7) — recall plateaus
+    # ~0.8 at small R on the hierarchical fixture. HNSW is the primary index.
+    floor = 0.85 if which == "hnsw" else 0.75
+    assert rec > floor, f"{which} recall {rec}"
+
+
+def test_edge_distances_are_stored_euclidean(hnsw_index):
+    """CRouting's extra state: stored d(c,n) must equal true Euclidean."""
+    g = hnsw_index
+    rng = np.random.default_rng(1)
+    for i in rng.integers(0, g.n, size=32):
+        nbrs = g.neighbors[i][g.neighbors[i] < g.n]
+        d = np.linalg.norm(g.vectors[nbrs] - g.vectors[i], axis=1)
+        np.testing.assert_allclose(g.edge_eu_dist[i][: len(nbrs)], d,
+                                   rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", ["cosine", "ip"])
+def test_metric_generality(metric):
+    """§4.3 / Fig. 16: CRouting works under IP and cosine via Eq. 4."""
+    ds = make_dataset(n_base=1200, n_query=30, dim=48, n_clusters=16,
+                      metric=metric, seed=2)
+    idx = AnnIndex.build(ds.base, graph="hnsw", metric=metric, m=12, efc=64)
+    gt = exact_ground_truth(ds, k=10)
+    ids_p, _, info_p = idx.search(ds.queries, k=10, efs=48, router="none")
+    ids_c, _, info_c = idx.search(ds.queries, k=10, efs=48, router="crouting")
+    rec_p = recall_at_k(ids_p, gt, 10)
+    rec_c = recall_at_k(ids_c, gt, 10)
+    assert rec_p > 0.8, (metric, rec_p)
+    assert rec_c > rec_p - 0.15, (metric, rec_c)
+    assert info_c["dist_calls"].mean() < info_p["dist_calls"].mean()
+
+
+def test_index_size_accounting(hnsw_index):
+    """Table 7: mem_dist is the only CRouting overhead, a few % to ~20%."""
+    m = hnsw_index.memory_bytes()
+    base = m["total"] - m["mem_dist"]
+    overhead = m["mem_dist"] / base
+    assert 0.01 < overhead < 0.6, overhead
+
+
+def test_save_load_roundtrip(tmp_path, small_ds, hnsw_index, hnsw_profile):
+    from repro.core.index import AnnIndex
+    idx = AnnIndex(graph=hnsw_index, profile=hnsw_profile)
+    p = str(tmp_path / "idx.npz")
+    idx.save(p)
+    idx2 = AnnIndex.load(p)
+    i1, d1, _ = idx.search(small_ds.queries[:5], k=5)
+    i2, d2, _ = idx2.search(small_ds.queries[:5], k=5)
+    assert np.array_equal(i1, i2)
+    np.testing.assert_allclose(d1, d2)
+    assert abs(idx2.profile.theta_star - hnsw_profile.theta_star) < 1e-9

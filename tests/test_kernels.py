@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("q_n,c_n,d", [(8, 16, 32), (70, 130, 96),
+                                       (128, 256, 128), (33, 257, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["l2", "ip"])
+def test_l2_distance_sweep(q_n, c_n, d, dtype, mode):
+    q = jnp.asarray(RNG.normal(size=(q_n, d)), dtype)
+    x = jnp.asarray(RNG.normal(size=(c_n, d)), dtype)
+    out = ops.l2_distance(q, x, mode=mode, bq=32, bc=64, bd=64)
+    exp = ref.l2_distance_ref(q, x, mode=mode)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=tol, atol=tol * d)
+
+
+@pytest.mark.parametrize("b,m", [(1, 7), (13, 37), (32, 64), (5, 130)])
+def test_crouting_prune_sweep(b, m):
+    ed = jnp.asarray(RNG.uniform(0.1, 2.0, size=(b, m)), jnp.float32)
+    dcq = jnp.asarray(RNG.uniform(0.1, 2.0, size=(b,)), jnp.float32)
+    b2 = jnp.asarray(RNG.uniform(0.5, 4.0, size=(b,)), jnp.float32)
+    valid = jnp.asarray(RNG.integers(0, 2, size=(b, m)), jnp.int8)
+    for ct in (-0.3, 0.0, 0.156, 0.9):
+        e1, m1 = ops.crouting_prune(ed, dcq, b2, valid, ct)
+        e2, m2 = ref.crouting_prune_ref(ed, dcq, b2, valid, ct)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5)
+        assert (np.asarray(m1) == np.asarray(m2)).all()
+
+
+@pytest.mark.parametrize("b,m,n,d", [(2, 5, 50, 16), (7, 31, 300, 64),
+                                     (4, 16, 128, 128)])
+def test_gather_distance_sweep(b, m, n, d):
+    table = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, n, size=(b, m)), jnp.int32)
+    qs = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    out = ops.gather_distance(idx, qs, table)
+    exp = ref.gather_distance_ref(idx, qs, table)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_gather_distance_pruned_lanes():
+    table = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 64, size=(3, 8)), jnp.int32)
+    qs = jnp.asarray(RNG.normal(size=(3, 32)), jnp.float32)
+    mask = jnp.asarray(RNG.integers(0, 2, size=(3, 8)), jnp.int8)
+    out = ops.gather_distance_pruned(idx, mask, qs, table)
+    exp = ref.gather_distance_ref(idx, qs, table)
+    m = np.asarray(mask) != 0
+    assert np.isinf(np.asarray(out)[m]).all()
+    np.testing.assert_allclose(np.asarray(out)[~m], np.asarray(exp)[~m],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("p,m", [(8, 4), (16, 12), (50, 30), (64, 64)])
+def test_pool_merge_sweep(p, m):
+    b = 6
+    pd = jnp.sort(jnp.asarray(RNG.uniform(0, 5, size=(b, p)), jnp.float32), axis=1)
+    pi = jnp.asarray(RNG.permutation(10_000)[: b * p].reshape(b, p), jnp.int32)
+    nd = jnp.asarray(RNG.uniform(0, 5, size=(b, m)), jnp.float32)
+    ni = jnp.asarray((RNG.permutation(10_000)[: b * m] + 20_000).reshape(b, m),
+                     jnp.int32)
+    d1, i1 = ops.pool_merge(pd, pi, nd, ni)
+    d2, i2 = ref.pool_merge_ref(pd, pi, nd, ni)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2))
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+def test_pool_merge_with_inf_padding():
+    pd = jnp.asarray([[0.1, 0.5, jnp.inf, jnp.inf]], jnp.float32)
+    pi = jnp.asarray([[3, 7, -1, -1]], jnp.int32)
+    nd = jnp.asarray([[0.3, jnp.inf]], jnp.float32)
+    ni = jnp.asarray([[9, -1]], jnp.int32)
+    d, i = ops.pool_merge(pd, pi, nd, ni)
+    assert list(np.asarray(i)[0][:3]) == [3, 9, 7]
+
+
+@pytest.mark.parametrize("b,m,n,d", [(3, 8, 100, 16), (5, 16, 400, 64)])
+def test_fused_expand_sweep(b, m, n, d):
+    """Fused estimate+prune+conditional-gather kernel == composed oracle."""
+    table = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    nbrs = jnp.asarray(RNG.integers(0, n + 2, size=(b, m)), jnp.int32)  # some pads
+    qs = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    ed = jnp.asarray(RNG.uniform(0.5, 3.0, size=(b, m)), jnp.float32)
+    dcq = jnp.asarray(RNG.uniform(0.5, 3.0, size=(b,)), jnp.float32)
+    b2 = jnp.asarray(RNG.uniform(2.0, 9.0, size=(b,)), jnp.float32)
+    d1, m1 = ops.fused_expand(nbrs, qs, ed, dcq, b2, 0.156, table)
+    d2, m2 = ref.fused_expand_ref(nbrs, qs, ed, dcq, b2, 0.156, table)
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+    fin = np.isfinite(np.asarray(d2))
+    assert (np.isfinite(np.asarray(d1)) == fin).all()
+    np.testing.assert_allclose(np.asarray(d1)[fin], np.asarray(d2)[fin],
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,115 @@
+"""Per-assigned-architecture smoke tests: a REDUCED config of the same family
+runs one forward/train step on CPU; output shapes + no NaNs (deliverable (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models.api import build_smoke
+
+ALL_ARCHS = list_archs(include_anns=True)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke(arch):
+    out = build_smoke(get_arch(arch))()
+    for k, v in out.items():
+        if hasattr(v, "dtype") and np.asarray(v).dtype.kind == "f":
+            assert np.isfinite(np.asarray(v)).all(), (arch, k)
+    assert np.isfinite(float(out["loss"]))
+
+
+def test_decode_matches_forward():
+    """KV-cache decode logits == full forward logits at the same position."""
+    from repro.models import transformer as T
+    cfg = T.LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                     d_ff=128, vocab=256, dtype="float32", block_q=8,
+                     block_k=16)
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 17), 0, 256)
+    S = 16
+    _, cache = jax.jit(T.make_prefill_step(cfg))(p, toks[:, :S])
+    cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, 16), (0, 0), (0, 0)))
+             for k, v in cache.items()}
+    logits, _ = jax.jit(T.make_serve_step(cfg))(p, cache, toks[:, S:S + 1],
+                                                jnp.asarray(S, jnp.int32))
+    h = T.forward(p, toks, cfg)
+    ref = (h[:, S, :] @ p["lm_head"]).astype(jnp.float32)[:, :cfg.vocab]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_balance_and_grads():
+    """MoE layer: outputs differentiable; capacity dispatch covers most tokens."""
+    from repro.models.layers import MoeConfig, moe_layer, moe_dispatch_indices
+    key = jax.random.PRNGKey(0)
+    T_, D, E, F = 64, 16, 8, 32
+    x = jax.random.normal(key, (T_, D))
+    gw = jax.random.normal(jax.random.PRNGKey(1), (D, E)) * 0.1
+    w1 = jax.random.normal(jax.random.PRNGKey(2), (E, D, F)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(3), (E, D, F)) * 0.1
+    w3 = jax.random.normal(jax.random.PRNGKey(4), (E, F, D)) * 0.1
+    cfg = MoeConfig(n_experts=E, top_k=2)
+
+    def loss(x):
+        return jnp.sum(moe_layer(x, gw, w1, w2, w3, cfg) ** 2)
+
+    g = jax.grad(loss)(x)
+    assert np.isfinite(np.asarray(g)).all()
+    # dispatch bookkeeping: every kept slot maps back to its token
+    logits = x @ gw
+    _, idx = jax.lax.top_k(logits, 2)
+    cap = max(8, int(1.25 * 2 * T_ / E))
+    dest, keep, src = moe_dispatch_indices(idx, E, cap)
+    dest, keep, src = np.asarray(dest), np.asarray(keep), np.asarray(src)
+    assert keep.mean() > 0.8                      # few capacity drops
+    for t in range(T_):
+        for j in range(2):
+            if keep[t, j]:
+                assert src[dest[t, j]] == t
+
+
+def test_vocab_padding_masked():
+    """granite-moe's 49155 vocab pads to /128; pad columns never win."""
+    from repro.models import transformer as T
+    cfg = T.LMConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                     d_ff=64, vocab=100, dtype="float32", block_q=8,
+                     block_k=8, loss_chunk=8)
+    assert cfg.padded_vocab == 128
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    assert p["lm_head"].shape[1] == 128
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 100)
+    loss = T.loss_fn(p, {"tokens": toks, "labels": toks}, cfg)
+    # masked CE can't exceed log(V) by much at random init
+    assert float(loss) < np.log(100) + 1.0
+
+
+def test_gnn_sampler():
+    """minibatch_lg needs a REAL neighbor sampler: check subgraph validity."""
+    from repro.data.synthetic import neighbor_sample
+    rng = np.random.default_rng(0)
+    n, e = 500, 4000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    seeds = rng.choice(n, 16, replace=False)
+    sub = neighbor_sample(src, dst, n, seeds, fanouts=(5, 3), seed=0)
+    ns, es, ed = sub["nodes"], sub["edge_src"], sub["edge_dst"]
+    assert len(ns) <= 16 * (1 + 5 + 15)
+    assert (es < len(ns)).all() and (ed < len(ns)).all()
+    # every sampled edge exists in the original graph
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    for s_, d_ in zip(ns[es], ns[ed]):
+        assert (int(s_), int(d_)) in edge_set
+
+
+def test_dlrm_interaction_shape():
+    from repro.models.dlrm import dot_interaction
+    z = jnp.asarray(np.random.default_rng(0).normal(size=(4, 27, 8)),
+                    jnp.float32)
+    out = dot_interaction(z)
+    assert out.shape == (4, 27 * 26 // 2)
+    # symmetry check vs manual pair
+    zz = np.asarray(z)
+    manual = np.einsum("bd,bd->b", zz[:, 1], zz[:, 0])
+    np.testing.assert_allclose(np.asarray(out[:, 0]), manual, rtol=1e-5)

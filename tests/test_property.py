@@ -1,0 +1,129 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import distances as D
+from repro.kernels import ref as kref
+
+SET = settings(max_examples=25, deadline=None)
+
+vecs = hnp.arrays(np.float32, st.tuples(st.integers(2, 6), st.just(8)),
+                  elements=st.floats(-3, 3, width=32))
+
+
+@SET
+@given(vecs, vecs)
+def test_l2_metric_axioms(a, b):
+    d_ab = D.pairwise_np(a, b, "l2")
+    d_ba = D.pairwise_np(b, a, "l2").T
+    assert np.allclose(d_ab, d_ba, atol=1e-4)          # symmetry
+    assert (d_ab >= -1e-5).all()                       # non-negativity
+    d_aa = np.diag(D.pairwise_np(a, a, "l2"))
+    assert np.allclose(d_aa, 0.0, atol=1e-4)           # identity
+
+
+@SET
+@given(vecs)
+def test_ip_euclid_conversion_roundtrip(a):
+    """Paper Eq. 4 is exact: rank -> eu2 -> rank is the identity."""
+    q = a[:1]
+    rank = D.pairwise_np(q, a, "ip")[0]
+    nq = np.linalg.norm(q)
+    na = np.linalg.norm(a, axis=1)
+    eu = D.rank_to_eu_np(rank, nq, na, "ip")
+    rank2 = (eu**2 - na**2 - nq**2 + 2.0) / 2.0
+    # fp32 cancellation: |a|^2+|q|^2-2<a,q> loses ~1e-3 relative precision
+    scale = 1.0 + float(nq * na.max())
+    assert np.allclose(rank, rank2, atol=1e-3 * scale)
+    direct = np.linalg.norm(a - q, axis=1)
+    assert np.allclose(eu, direct, atol=5e-3 * np.sqrt(scale))
+
+
+@SET
+@given(st.floats(0.05, 3.0), st.floats(0.05, 3.0), st.floats(0.01, 3.1))
+def test_cosine_estimate_exact_at_true_angle(dcq, dcn, theta):
+    """If theta* equals the true angle, the estimate is the true distance."""
+    true2 = dcn**2 + dcq**2 - 2 * dcn * dcq * np.cos(theta)
+    est2, _ = kref.crouting_prune_ref(
+        jnp.asarray([[dcn]], jnp.float32), jnp.asarray([dcq], jnp.float32),
+        jnp.asarray([1e9], jnp.float32), jnp.asarray([[1]], jnp.int8),
+        float(np.cos(theta)))
+    assert abs(float(est2[0, 0]) - max(true2, 0)) < 1e-3 * max(true2, 1)
+
+
+@SET
+@given(st.floats(0.05, 2.0), st.floats(0.05, 2.0),
+       st.floats(0.1, 1.5), st.floats(0.05, 1.4))
+def test_estimate_monotone_in_theta(dcq, dcn, th1, dth):
+    """Fig. 13 mechanism: larger theta* -> larger estimate -> more pruning."""
+    th2 = th1 + dth
+    e1, _ = kref.crouting_prune_ref(
+        jnp.asarray([[dcn]], jnp.float32), jnp.asarray([dcq], jnp.float32),
+        jnp.asarray([1e9], jnp.float32), jnp.asarray([[1]], jnp.int8),
+        float(np.cos(th1)))
+    e2, _ = kref.crouting_prune_ref(
+        jnp.asarray([[dcn]], jnp.float32), jnp.asarray([dcq], jnp.float32),
+        jnp.asarray([1e9], jnp.float32), jnp.asarray([[1]], jnp.int8),
+        float(np.cos(th2)))
+    assert float(e2[0, 0]) >= float(e1[0, 0]) - 1e-5
+
+
+@SET
+@given(hnp.arrays(np.float32, st.tuples(st.integers(1, 4), st.just(6)),
+                  elements=st.floats(0, 10, width=32)),
+       hnp.arrays(np.float32, st.tuples(st.integers(1, 4), st.just(4)),
+                  elements=st.floats(0, 10, width=32)))
+def test_pool_merge_invariants(pool_d, new_d):
+    """Merged pool: sorted, size P, equals top-P of the multiset union."""
+    b = min(pool_d.shape[0], new_d.shape[0])
+    pool_d = np.sort(pool_d[:b], axis=1)
+    new_d = new_d[:b]
+    pi = np.arange(pool_d.size, dtype=np.int32).reshape(pool_d.shape)
+    ni = (np.arange(new_d.size, dtype=np.int32) + 10_000).reshape(new_d.shape)
+    d, i = kref.pool_merge_ref(jnp.asarray(pool_d), jnp.asarray(pi),
+                               jnp.asarray(new_d), jnp.asarray(ni))
+    d = np.asarray(d)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+    for r in range(b):
+        union = np.sort(np.concatenate([pool_d[r], new_d[r]]))
+        assert np.allclose(d[r], union[: pool_d.shape[1]])
+
+
+@SET
+@given(st.integers(1, 40), st.integers(2, 20), st.integers(0, 1_000_000))
+def test_embedding_bag_equals_onehot_matmul(n_ids, vocab, seed):
+    """EmbeddingBag (take + segment_sum) == one-hot matmul."""
+    from repro.models.dlrm import embedding_bag
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(vocab, 8)).astype(np.float32)
+    ids = rng.integers(0, vocab, size=n_ids).astype(np.int32)
+    bags = np.sort(rng.integers(0, 3, size=n_ids)).astype(np.int32)
+    out = embedding_bag(jnp.asarray(table), jnp.asarray(ids),
+                        jnp.asarray(bags), 3)
+    onehot = np.zeros((3, vocab), np.float32)
+    for i, b in zip(ids, bags):
+        onehot[b, i] += 1.0
+    np.testing.assert_allclose(np.asarray(out), onehot @ table, rtol=1e-4,
+                               atol=1e-4)
+
+
+@SET
+@given(st.integers(2, 30), st.integers(0, 10_000))
+def test_segment_softmax_equals_dense(n_edges, seed):
+    """Edge softmax over dst segments == dense row softmax on the
+    materialized adjacency."""
+    from repro.models.gnn import segment_softmax
+    rng = np.random.default_rng(seed)
+    n_nodes = 5
+    dst = rng.integers(0, n_nodes, size=n_edges).astype(np.int32)
+    scores = rng.normal(size=n_edges).astype(np.float32)
+    alpha = np.asarray(segment_softmax(jnp.asarray(scores), jnp.asarray(dst),
+                                       n_nodes))
+    for v in range(n_nodes):
+        m = dst == v
+        if m.sum():
+            expect = np.exp(scores[m] - scores[m].max())
+            expect /= expect.sum()
+            np.testing.assert_allclose(alpha[m], expect, rtol=1e-4, atol=1e-5)
