@@ -1,0 +1,18 @@
+# Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
+
+.PHONY: verify test bench bench-engine
+
+# Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
+# fails loudly instead of wedging CI.
+verify:
+	PYTHONPATH=src timeout 420 python -m pytest -x -q -m "not slow"
+
+# Full tier (the tier-1 command): everything, including slow markers.
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+bench-engine:
+	PYTHONPATH=src python -m benchmarks.run --only engine

@@ -1,0 +1,100 @@
+"""Beam-expansion engine benchmarks.
+
+Two entries:
+
+* ``engine_beam_sweep`` — the tuning sweep behind ``EngineConfig.beam_width``:
+  for W in {1, 2, 4, 8} report hop-loop iterations, recall, per-query exact
+  distance calls and QPS at equal efs.  The headline number is
+  ``iter_reduction``: iterations(W=1) / iterations(W), which should track ~W
+  until the frontier is too shallow to fill the beam.
+* ``engine_pallas_parity`` — jnp vs Pallas engine on a small graph: asserts
+  result parity and reports iterations + dist calls before/after (interpret
+  mode — wall-clock here is NOT TPU performance, the parity + counter
+  deltas are the point).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached_index, dataset, emit, timed
+from repro.data.vectors import exact_ground_truth, recall_at_k
+
+
+def engine_beam_sweep():
+    ds = dataset("sift-synth", n_base=4000)
+    idx = cached_index(ds)
+    gt = exact_ground_truth(ds, k=10)
+    derived = {}
+    base_iters = {}
+    # beam_prune policy only matters for pruning routers (see EngineConfig):
+    # "best" holds the W=1 recall profile, "all" holds the W=1 call savings
+    variants = (("none", "best"), ("crouting", "best"), ("crouting", "all"))
+    for router, pol in variants:
+        key = router if router == "none" else f"{router}_{pol}"
+        rows = []
+        for W in (1, 2, 4, 8):
+            kw = dict(k=10, efs=64, router=router, beam_width=W,
+                      beam_prune=pol)
+            # warm with the full batch shape — jit caches per shape, so a
+            # smaller warm-up batch would leave the compile in the timing
+            idx.search(ds.queries, **kw)
+            t0 = time.perf_counter()
+            ids, _, info = idx.search(ds.queries, **kw)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "beam_width": W,
+                "iters": info["iters"],
+                "recall": round(recall_at_k(ids, gt, 10), 3),
+                "dist_calls": round(float(info["dist_calls"].mean()), 1),
+                "hops": round(float(info["hops"].mean()), 1),
+                "qps": round(len(ds.queries) / dt, 1),
+            })
+            if W == 1:
+                base_iters[key] = info["iters"]
+        for r in rows:
+            r["iter_reduction"] = round(base_iters[key] / max(r["iters"], 1), 2)
+        derived[key] = rows
+    emit("engine_beam_sweep", 0.0, {
+        rt: {f"w{r['beam_width']}": {"iters": r["iters"],
+                                     "x": r["iter_reduction"],
+                                     "recall": r["recall"],
+                                     "calls": r["dist_calls"]}
+             for r in rows_}
+        for rt, rows_ in derived.items()})
+    return derived
+
+
+def engine_pallas_parity():
+    """jnp reference vs kernel-integrated engine: identical results, same
+    dist-call counts, iterations cut by the beam."""
+    from repro.core.index import AnnIndex
+
+    ds = dataset("sift-synth", n_base=1200)
+    ds_q = ds.queries[:8]
+    idx = AnnIndex.build(ds.base, graph="hnsw", m=8, efc=48)
+    derived = {}
+    jnp_ids = {}
+    for name, kw in (
+            ("jnp_w1", dict(engine="jnp", beam_width=1)),
+            ("jnp_w4", dict(engine="jnp", beam_width=4)),
+            ("pallas_w1", dict(engine="pallas", beam_width=1)),
+            ("pallas_w4", dict(engine="pallas", beam_width=4))):
+        dt, out = timed(lambda: idx.search(ds_q, k=10, efs=48,
+                                           router="crouting", **kw))
+        ids, _, info = out
+        row = {"iters": info["iters"],
+               "dist_calls": round(float(info["dist_calls"].mean()), 1),
+               "us_per_query": round(dt / len(ds_q) * 1e6, 1)}
+        if kw["engine"] == "jnp":
+            jnp_ids[kw["beam_width"]] = ids
+        else:
+            # each pallas variant is checked against its jnp twin (same W)
+            row["ids_match_jnp"] = bool(
+                (ids == jnp_ids[kw["beam_width"]]).all())
+        derived[name] = row
+    derived["iter_reduction_w4"] = round(
+        derived["jnp_w1"]["iters"] / max(derived["pallas_w4"]["iters"], 1), 2)
+    emit("engine_pallas_parity", 0.0, derived)
+    return derived

@@ -44,6 +44,15 @@ def kernels_micro():
     dt, _ = timed(lambda: ops.pool_merge(pd, pi, nd, ni)[0].block_until_ready())
     derived["pool_merge"] = {"us": round(dt * 1e6, 1)}
 
+    # beam-shaped fused expansion tile ([B, W*M] = [8, 64], per-lane dcq)
+    nb = jnp.asarray(rng.integers(0, 4096, size=(8, 64)).astype(np.int32))
+    edl = jnp.asarray(rng.uniform(0.1, 2, size=(8, 64)).astype(np.float32))
+    dcl = jnp.asarray(rng.uniform(0.1, 2, size=(8, 64)).astype(np.float32))
+    b2l = jnp.asarray(rng.uniform(1, 4, size=(8, 64)).astype(np.float32))
+    dt, _ = timed(lambda: ops.fused_expand(nb, qs, edl, dcl, b2l, 0.15,
+                                           table)[0].block_until_ready())
+    derived["fused_expand"] = {"us": round(dt * 1e6, 1)}
+
     for name, d in derived.items():
         emit(f"kernel_{name}", d["us"], d)
     return derived

@@ -9,11 +9,14 @@ import sys
 import time
 import traceback
 
+from benchmarks import bench_engine as E
 from benchmarks import bench_paper as P
 from benchmarks import bench_kernels as K
 from benchmarks import bench_roofline as R
 
 BENCHES = [
+    ("engine_beam_sweep", E.engine_beam_sweep),
+    ("engine_pallas_parity", E.engine_pallas_parity),
     ("fig2_time_breakdown", P.fig2_time_breakdown),
     ("fig6_8_angles", P.fig6_8_angles),
     ("fig10_recall_qps", P.fig10_recall_qps),

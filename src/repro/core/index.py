@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -31,7 +31,6 @@ GRAPH_BUILDERS = {"hnsw": build_hnsw, "nsg": build_nsg, "knn": build_knn_graph}
 class AnnIndex:
     graph: GraphIndex
     profile: Optional[AngleProfile] = None
-    _engines: Dict = dataclasses.field(default_factory=dict)
 
     # --- construction --------------------------------------------------------
     @classmethod
@@ -46,14 +45,14 @@ class AnnIndex:
 
     # --- search ---------------------------------------------------------------
     def _engine(self, cfg: EngineConfig):
-        key = dataclasses.astuple(cfg)
-        if key not in self._engines:
-            self._engines[key] = build_search_fn(self.graph, cfg)
-        return self._engines[key]
+        # build_search_fn memoizes per (graph identity, cfg) — no local cache
+        return build_search_fn(self.graph, cfg)
 
     def search(self, queries: np.ndarray, k: int = 10, efs: int = 100,
                router: str = "crouting", cos_theta: Optional[float] = None,
-               max_hops: int = 4096) -> Tuple[np.ndarray, np.ndarray, dict]:
+               max_hops: int = 4096, beam_width: int = 1,
+               engine: str = "jnp", beam_prune: str = "best",
+               ) -> Tuple[np.ndarray, np.ndarray, dict]:
         import jax.numpy as jnp
 
         queries = D.preprocess_vectors(
@@ -62,7 +61,9 @@ class AnnIndex:
             cos_theta = self.profile.cos_theta_star if self.profile else 0.0
         cfg = EngineConfig(efs=max(efs, k), router=router,
                            metric=self.graph.metric, max_hops=max_hops,
-                           use_hierarchy=self.graph.upper_neighbors is not None)
+                           use_hierarchy=self.graph.upper_neighbors is not None,
+                           beam_width=beam_width, engine=engine,
+                           beam_prune=beam_prune)
         _, fn = self._engine(cfg)
         res: SearchResult = fn(jnp.asarray(queries), jnp.asarray(cos_theta, jnp.float32))
         ids = np.asarray(res.ids[:, :k]).astype(np.int64)
@@ -71,6 +72,7 @@ class AnnIndex:
             "dist_calls": np.asarray(res.dist_calls),
             "est_calls": np.asarray(res.est_calls),
             "hops": np.asarray(res.hops),
+            "iters": int(res.iters),
         }
         return ids, np.asarray(res.dists[:, :k]), info
 

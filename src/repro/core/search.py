@@ -1,31 +1,54 @@
-"""Batched best-first graph search in JAX (the TPU-native serving hot path).
+"""Batched beam-expansion graph search in JAX (the TPU-native serving hot path).
 
 Re-derivation of the paper's Algorithm 1/2 for fixed-shape SPMD execution
-(DESIGN.md §3):
+(DESIGN.md §3), restructured as a BATCH-LEVEL loop with per-hop beams:
 
 * the candidate queue C and result queue T collapse into ONE sorted pool of
   size ``efs`` with per-slot expanded flags — provably equivalent to the
   two-heap formulation for expansion/termination decisions;
 * per-node state is a dense uint8 status array (0 unvisited / 1 visited /
   2 pruned) — the pruned state doubles as CRouting's error-correction flag;
-* one `lax.while_loop` iteration expands one node per query lane; all M
-  neighbors are processed vector-wide: estimate + prune on the VPU path,
-  exact distances on the MXU path, pool merge as a static sort.
+* ONE ``lax.while_loop`` drives the whole query batch: each iteration picks
+  the best W (= ``EngineConfig.beam_width``) unexpanded pool entries per
+  query and expands them together, producing a dense ``[B, W*M]`` neighbor
+  tile.  Estimate + prune runs on the VPU path, exact distances on the
+  MXU/DMA path, pool maintenance as one merge — and the fixed per-hop cost
+  (candidate select, status scatter, loop overhead) is amortized ~W×.
+* ``EngineConfig.engine`` dispatches the tile work:
+    - ``"jnp"``     — pure-jnp reference semantics (the oracle path);
+    - ``"pallas"``  — ``ops.fused_expand`` (estimate + prune + conditional
+      row DMA + exact distance in one kernel) and the bitonic
+      ``ops.pool_merge`` network in place of concat+argsort;
+    - ``"pallas_unfused"`` — ``ops.crouting_prune`` + masked
+      ``ops.gather_distance_pruned`` + ``ops.pool_merge`` (the composable
+      kernel pipeline; slower in interpret mode, kept for kernel-level
+      attribution).
 
-Semantic note (tested in tests/test_engine_equivalence.py): within one
-expansion the batched engine evaluates all M neighbors against the
-*expansion-start* upper bound ("frozen bound"), whereas the scalar Algorithm 1
-updates the bound after every insertion.  The final pool per expansion is
-identical either way (merge-then-truncate == insert-with-evolving-bound); only
-CRouting prune decisions can differ, strictly toward *fewer* prunes (frozen
-bound >= evolving bound), i.e. toward accuracy.  The NumPy oracle exposes
-``stale_bound=True`` to check exact equivalence, and live-vs-frozen deltas are
-measured in benchmarks.
+Pad-row sentinel convention (repo-wide): ``graph_device_arrays`` appends one
+zero vector at row index N; every masked/pruned/out-of-range lane gathers
+that row (``ops.gather_distance_pruned`` remaps to the table's last row).
+Pool slots holding no candidate carry id N and distance +inf.
+
+Semantic notes (tested in tests/test_engine_equivalence.py):
+
+* Frozen bound: within one iteration all W*M lanes are evaluated against the
+  *iteration-start* upper bound, whereas the scalar Algorithm 1 updates the
+  bound after every insertion.  At W=1 the final pool per expansion is
+  identical either way (merge-then-truncate == insert-with-evolving-bound);
+  only CRouting prune decisions can differ, strictly toward *fewer* prunes
+  (frozen bound >= evolving bound), i.e. toward accuracy.  The NumPy oracle
+  exposes ``stale_bound=True`` to check exact equivalence.
+* Beam semantics (W>1): the W expansion nodes are the W best unexpanded pool
+  entries whose distance beats the frozen bound; each distinct neighbor id
+  is processed at most once per tile (first-occurrence dedup).  This trades
+  a few extra expansions (the 2nd..Wth choices may be refuted by the 1st's
+  results) for ~W× fewer loop iterations — recall at equal efs is no worse,
+  dist_calls grow mildly; see benchmarks/bench_engine.py for the sweep.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import weakref
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
@@ -39,6 +62,8 @@ STATUS_UNVISITED = 0
 STATUS_VISITED = 1
 STATUS_PRUNED = 2
 
+ENGINES = ("jnp", "pallas", "pallas_unfused")
+
 
 class SearchResult(NamedTuple):
     ids: jax.Array        # [B, efs] int32, N = empty
@@ -46,6 +71,7 @@ class SearchResult(NamedTuple):
     dist_calls: jax.Array  # [B] int32 exact distance evaluations
     est_calls: jax.Array   # [B] int32 cosine-theorem estimates
     hops: jax.Array        # [B] int32 node expansions
+    iters: jax.Array       # [] int32 batch-level hop-loop iterations
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,10 +81,28 @@ class EngineConfig:
     metric: str = "l2"
     max_hops: int = 4096
     use_hierarchy: bool = True
+    beam_width: int = 1           # W frontier nodes expanded per iteration
+    engine: str = "jnp"           # jnp | pallas | pallas_unfused
+    # Which beam slots' lanes are eligible for the router's prune test:
+    #   "best" (default) — only the best slot's neighbors, i.e. exactly the
+    #     lanes sequential Algorithm 2 would test at this moment.  Recall
+    #     matches the W=1 risk profile; call savings dilute as W grows.
+    #   "all" — every slot's neighbors.  Maximum distance-call savings, but
+    #     estimates from the 2nd..Wth-best parents (which sequential search
+    #     would expand later, from closer parents) can mis-prune a doorway
+    #     node and strand a query — use with efs comfortably above k.
+    beam_prune: str = "best"
 
 
 def graph_device_arrays(g: GraphIndex) -> Dict[str, Any]:
-    """Pack a GraphIndex into device arrays with a sentinel pad row at index N."""
+    """Pack a GraphIndex into device arrays with a sentinel pad row at index N.
+
+    Pad-row convention: row N of ``vectors`` (an all-zero vector, norm slot 1)
+    is THE sentinel every masked lane resolves to — adjacency pad slots point
+    at it, dead beam slots expand it (its neighbor list is all-pad), and the
+    Pallas gather kernels remap pruned lanes to it so the skipped DMA is
+    de-duplicated.  Pool slots holding no candidate carry id N.
+    """
     n, d = g.n, g.dim
     vecs = np.concatenate([g.vectors, np.zeros((1, d), np.float32)], axis=0)
     nbrs = np.concatenate([g.neighbors, np.full((1, g.max_degree), n, np.int32)], axis=0)
@@ -93,6 +137,14 @@ def _rank_many(q, X, metric):
         diff = X - q[None, :]
         return jnp.sum(diff * diff, axis=-1)
     return 1.0 - X @ q
+
+
+def _rank_tile(queries, X, metric):
+    """queries [B, d], X [B, L, d] -> ranking distances [B, L]."""
+    if metric == "l2":
+        diff = X - queries[:, None, :]
+        return jnp.sum(diff * diff, axis=-1)
+    return 1.0 - jnp.einsum("bld,bd->bl", X, queries)
 
 
 def _rank_to_eu(rank, nq, nx, metric):
@@ -139,132 +191,339 @@ def _descend(arrays, q, cfg: EngineConfig):
     return cur, d_cur, calls
 
 
-def _search_one(arrays, q, cos_theta, cfg: EngineConfig):
-    """Single-query Algorithm 1/2; vmapped over the query batch."""
+def _first_occurrence(nbrs, valid, n):
+    """Keep only the first valid lane per distinct neighbor id (per row).
+
+    With a beam of W nodes the [B, W*M] tile can name the same neighbor from
+    two expansion nodes; sequential Algorithm 1 would visit it once, so the
+    tile must too (duplicates would double-count dist_calls and insert the
+    id twice into the pool).
+
+    Returns (first_mask, order, sorted_keys); the latter two let
+    _rescue_pruned_duplicates reuse the same O(L log L) sort instead of
+    re-sorting in the hot loop."""
+    key = jnp.where(valid, nbrs, n + 1)
+    order = jnp.argsort(key, axis=1, stable=True)
+    sk = jnp.take_along_axis(key, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((nbrs.shape[0], 1), bool), sk[:, 1:] == sk[:, :-1]], axis=1)
+    rows = jnp.arange(nbrs.shape[0])[:, None]
+    dup = jnp.zeros_like(valid).at[rows, order].set(dup_sorted)
+    return valid & ~dup, order, sk
+
+
+def _rescue_pruned_duplicates(order, sk, prune):
+    """Within-tile error correction, tile-local (O(L), reusing the dedup
+    sort's (order, sorted_keys)).
+
+    Returns (rescued, prune_final): ``rescued`` marks the SECOND valid lane
+    of each id whose first lane was pruned (it must be computed exactly —
+    the paper's PRUNED-revisit rule collapsed into one tile);
+    ``prune_final`` clears the prune mark for such rescued ids.
+
+    The stable sort by id groups each id's valid lanes in lane order, so the
+    group head is the dedup winner (= the only lane ``prune`` can mark) and
+    the slot right after it is the rescue candidate."""
+    rows = jnp.arange(sk.shape[0])[:, None]
+    pr_s = jnp.take_along_axis(prune, order, axis=1)
+    pad = jnp.zeros((sk.shape[0], 1), bool)
+    same = sk[:, 1:] == sk[:, :-1]
+    same_prev = jnp.concatenate([pad, same], axis=1)
+    prev_pruned = jnp.concatenate([pad, pr_s[:, :-1]], axis=1)
+    rescued_s = same_prev & prev_pruned
+    same_next = jnp.concatenate([same, pad], axis=1)
+    keep_prune_s = pr_s & ~same_next      # pruned ids with no second lane
+    zeros = jnp.zeros_like(prune)
+    rescued = zeros.at[rows, order].set(rescued_s)
+    prune_final = zeros.at[rows, order].set(keep_prune_s)
+    return rescued, prune_final
+
+
+def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
+    """Whole-batch Algorithm 1/2 with W-wide beam expansion per iteration."""
     metric, efs, n = cfg.metric, cfg.efs, arrays["n"]
-    router = cfg.router
-    nq = jnp.linalg.norm(q) if metric != "l2" else jnp.asarray(1.0, jnp.float32)
+    router, W, engine = cfg.router, cfg.beam_width, cfg.engine
+    assert engine in ENGINES, f"unknown engine {engine!r}"
+    assert 1 <= W <= efs, "beam_width must be in [1, efs]"
+    assert cfg.beam_prune in ("best", "all"), \
+        f"unknown beam_prune policy {cfg.beam_prune!r}"
+    # pallas pool_merge rides the expanded flag in the id low bit (id*2+exp)
+    assert engine == "jnp" or n < 2 ** 30, \
+        "pallas engines encode ids as id*2+flag in int32: shard below 2^30 " \
+        "vectors or use engine='jnp'"
+    B = queries.shape[0]
+    M = arrays["neighbors"].shape[1]
+    L = W * M
+    rows = jnp.arange(B)
+    use_pallas = engine in ("pallas", "pallas_unfused")
+    if use_pallas:
+        from repro.kernels import ops
+
+    nq = (jnp.linalg.norm(queries, axis=1) if metric != "l2"
+          else jnp.ones((B,), jnp.float32))
 
     if cfg.use_hierarchy:
-        entry, d_entry, calls0 = _descend(arrays, q, cfg)
+        entry, d_entry, calls0 = jax.vmap(
+            lambda q: _descend(arrays, q, cfg))(queries)
     else:
-        entry = arrays["entry"]
-        d_entry = _rank_many(q, arrays["vectors"][entry][None, :], metric)[0]
-        calls0 = jnp.asarray(1, jnp.int32)
+        entry = jnp.broadcast_to(arrays["entry"], (B,)).astype(jnp.int32)
+        ev = jnp.broadcast_to(arrays["vectors"][arrays["entry"]],
+                              (B, queries.shape[1]))
+        d_entry = _rank_tile(queries, ev[:, None, :], metric)[:, 0]
+        calls0 = jnp.ones((B,), jnp.int32)
 
-    pool_d = jnp.full((efs,), jnp.inf, jnp.float32).at[0].set(d_entry)
-    pool_id = jnp.full((efs,), n, jnp.int32).at[0].set(entry)
-    pool_exp = jnp.zeros((efs,), bool)
-    status = jnp.zeros((n + 1,), jnp.uint8).at[entry].set(STATUS_VISITED)
+    pool_d = jnp.full((B, efs), jnp.inf, jnp.float32).at[:, 0].set(d_entry)
+    pool_id = jnp.full((B, efs), n, jnp.int32).at[:, 0].set(entry)
+    pool_exp = jnp.zeros((B, efs), bool)
+    status = jnp.zeros((B, n + 1), jnp.uint8).at[rows, entry].set(STATUS_VISITED)
 
     State = (pool_d, pool_id, pool_exp, status, calls0,
-             jnp.asarray(0, jnp.int32),  # est_calls
-             jnp.asarray(0, jnp.int32),  # hops
-             jnp.asarray(False))         # done
+             jnp.zeros((B,), jnp.int32),   # est_calls
+             jnp.zeros((B,), jnp.int32),   # hops
+             jnp.zeros((B,), bool),        # done
+             jnp.asarray(0, jnp.int32))    # iters
 
     def cond(s):
-        *_, hops, done = s
-        return (~done) & (hops < cfg.max_hops)
+        *_, done, iters = s
+        return jnp.any(~done) & (iters < cfg.max_hops)
 
     def body(s):
-        pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done = s
+        pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done, iters = s
+
+        # --- beam selection: best W unexpanded pool entries per query ------
         cand = (~pool_exp) & (pool_id < n)
         cand_d = jnp.where(cand, pool_d, jnp.inf)
-        best = jnp.argmin(cand_d)
-        has = jnp.any(cand)
-        dc = pool_d[best]
-        pool_full = pool_id[efs - 1] < n
-        upper = jnp.where(pool_full, pool_d[efs - 1], jnp.inf)
-        stop = (~has) | (dc > upper)
-        live = ~stop
+        neg_top, beam_idx = jax.lax.top_k(-cand_d, W)          # [B, W]
+        beam_d = -neg_top
+        pool_full = pool_id[:, efs - 1] < n
+        upper = jnp.where(pool_full, pool_d[:, efs - 1], jnp.inf)  # [B]
+        active = (~done) & (hops < cfg.max_hops)
+        slot_live = jnp.isfinite(beam_d) & (beam_d <= upper[:, None]) \
+            & active[:, None]                                   # [B, W]
+        # keep the per-query hop budget exact: only the first
+        # (max_hops - hops) live slots may expand this iteration
+        budget = cfg.max_hops - hops                            # [B]
+        slot_live = slot_live & (jnp.cumsum(slot_live, axis=1)
+                                 <= budget[:, None])
+        done = done | ~jnp.any(slot_live, axis=1)
 
-        c = pool_id[best]
-        pool_exp = pool_exp.at[best].set(pool_exp[best] | live)
+        c = jnp.where(slot_live,
+                      jnp.take_along_axis(pool_id, beam_idx, axis=1),
+                      n).astype(jnp.int32)                      # [B, W]
+        dc = jnp.take_along_axis(pool_d, beam_idx, axis=1)      # [B, W]
+        pool_exp = pool_exp.at[rows[:, None], beam_idx].set(
+            jnp.take_along_axis(pool_exp, beam_idx, axis=1) | slot_live)
 
-        nbrs = arrays["neighbors"][c]                 # [M]
+        # --- dense [B, W*M] neighbor tile ----------------------------------
+        nbrs = arrays["neighbors"][c].reshape(B, L)             # [B, L]
         # stored edge distances may be bf16 (§Perf HC3); estimate math in f32
-        ed = arrays["edge_eu"][c].astype(jnp.float32)  # [M]  Euclidean d(c, n)
-        st = status[nbrs]                             # [M]
+        ed = arrays["edge_eu"][c].astype(jnp.float32).reshape(B, L)
+        st = jnp.take_along_axis(status, nbrs, axis=1)          # [B, L]
         in_range = nbrs < n
-        valid = in_range & (st != STATUS_VISITED) & live
-
-        # --- router: estimate + prune (no vector fetch on this path) -------
-        if router in ("crouting", "crouting_o"):
-            d_cq_eu = _rank_to_eu(dc, nq, arrays["norms"][c], metric)
-            est2 = ed * ed + d_cq_eu * d_cq_eu - 2.0 * ed * d_cq_eu * cos_theta
-            est_rank = _eu2_to_rank(jnp.maximum(est2, 0.0), nq, arrays["norms"][nbrs], metric)
-            try_prune = valid & (st == STATUS_UNVISITED) & pool_full
-            prune = try_prune & (est_rank >= upper)
-            ecalls = ecalls + jnp.sum(try_prune.astype(jnp.int32))
-            if router == "crouting_o":
-                # no error correction: previously-pruned lanes stay skipped
-                valid = valid & (st != STATUS_PRUNED)
-            compute = valid & ~prune
-        elif router == "triangle":
-            d_cq_eu = _rank_to_eu(dc, nq, arrays["norms"][c], metric)
-            lb = jnp.abs(ed - d_cq_eu)
-            lb_rank = _eu2_to_rank(lb * lb, nq, arrays["norms"][nbrs], metric)
-            try_prune = valid & (st == STATUS_UNVISITED) & pool_full
-            prune = try_prune & (lb_rank >= upper)
-            # exact lower bound => discard is permanent (mark visited below)
-            compute = valid & ~prune
+        lane_live = jnp.broadcast_to(slot_live[:, :, None],
+                                     (B, W, M)).reshape(B, L)
+        valid = in_range & (st != STATUS_VISITED) & lane_live
+        if router == "crouting_o":
+            # no error correction: previously-pruned lanes stay skipped
+            valid = valid & (st != STATUS_PRUNED)
+        if W > 1:
+            first, dd_order, dd_keys = _first_occurrence(nbrs, valid, n)
         else:
-            prune = jnp.zeros_like(valid)
-            compute = valid
+            first = valid
 
-        # --- exact distances (masked; the Pallas gather kernel skips the
-        # HBM row fetch for ~compute lanes on real TPU) ----------------------
-        gathered = arrays["vectors"][jnp.where(compute, nbrs, n)]
-        exact = _rank_many(q, gathered, metric)
-        dcalls = dcalls + jnp.sum(compute.astype(jnp.int32))
+        norms_c = arrays["norms"][c]                            # [B, W]
+        dcq_eu = _rank_to_eu(dc, nq[:, None], norms_c, metric)  # [B, W]
+        dcq_l = jnp.broadcast_to(dcq_eu[:, :, None], (B, W, M)).reshape(B, L)
+        nx = arrays["norms"][nbrs]                              # [B, L]
 
-        # --- status scatter --------------------------------------------------
+        if metric == "l2":
+            bound2 = jnp.broadcast_to(upper[:, None], (B, L))
+        else:
+            # est_rank >= upper  <=>  est2 >= inverse rank->eu^2 per lane
+            bound2 = 2.0 * upper[:, None] + nx * nx \
+                + (nq * nq)[:, None] - 2.0
+
+        # --- router: estimate + prune (no vector fetch on this path).
+        # The fused pallas engine takes the prune decision from inside
+        # fused_expand (est + prune + conditional DMA in one kernel); the
+        # unfused engine from the crouting_prune kernel; jnp computes it
+        # directly.  All three evaluate the identical f32 expression, so the
+        # decisions are bit-equal for l2.  The one exception: the beam
+        # rescue path (W>1, router='crouting') must know prune BEFORE the
+        # fetch set exists, so there jnp decides and the fused kernel's
+        # eligible set is empty (its DMA skip still comes from eval_mask). -
+        prunes = router in ("crouting", "crouting_o", "triangle")
+        ct_eff = 1.0 if router == "triangle" else cos_theta
+        rescue = W > 1 and router == "crouting"
+        kernel_prunes = engine == "pallas" and not rescue
+        if prunes:
+            try_prune = first & (st == STATUS_UNVISITED) & pool_full[:, None]
+            if W > 1 and cfg.beam_prune == "best":
+                # top_k orders slots by distance, so slot 0 = the node
+                # sequential search would be expanding right now; only its
+                # lanes run the estimate test (see EngineConfig.beam_prune)
+                try_prune = try_prune & (jnp.arange(L) < M)[None, :]
+            if router != "triangle":
+                ecalls = ecalls + jnp.sum(try_prune, axis=1, dtype=jnp.int32)
+        else:
+            try_prune = jnp.zeros_like(first)
+
+        if not prunes or kernel_prunes:
+            prune = jnp.zeros_like(first)
+        elif engine == "pallas_unfused":
+            _, prune8 = ops.crouting_prune(ed, dcq_l, bound2, try_prune,
+                                           ct_eff)
+            prune = prune8 != 0
+        else:
+            est2 = jnp.maximum(
+                ed * ed + dcq_l * dcq_l - 2.0 * ed * dcq_l * ct_eff, 0.0)
+            est_rank = _eu2_to_rank(est2, nq[:, None], nx, metric)
+            prune = try_prune & (est_rank >= upper[:, None])
+
+        if rescue:
+            # Within-tile error correction (paper Alg. 2): sequentially, the
+            # second encounter of a just-pruned node recomputes it exactly
+            # (status PRUNED exempts it from re-estimation).  Collapsed into
+            # the tile: a second valid lane of a pruned id computes, and the
+            # id is then VISITED, not PRUNED.  Without this, beam dedup
+            # silently disables error correction and recall drops.
+            rescued, prune_kept = _rescue_pruned_duplicates(dd_order, dd_keys,
+                                                            prune)
+            compute = (first & ~prune) | rescued
+            prune = prune_kept    # rescued ids end VISITED, not PRUNED
+        else:
+            compute = first & ~prune
+
+        # --- exact distances (masked; non-compute lanes skip the HBM row
+        # fetch on real TPU) --------------------------------------------------
+        if engine == "pallas":
+            d2eu, prune8 = ops.fused_expand(
+                nbrs, queries, ed, dcq_l, bound2, ct_eff, arrays["vectors"],
+                eval_mask=compute, prune_eligible=try_prune if kernel_prunes
+                else jnp.zeros_like(try_prune))
+            if kernel_prunes:
+                # the kernel both made the prune decision and skipped those
+                # lanes' DMAs (eval ∩ eligible lanes fetch only if unpruned)
+                prune = prune8 != 0
+                compute = compute & ~prune
+            exact = _eu2_to_rank(d2eu, nq[:, None], nx, metric)
+        elif engine == "pallas_unfused":
+            d2eu = ops.gather_distance_pruned(
+                jnp.where(compute, nbrs, n), (~compute).astype(jnp.int8),
+                queries, arrays["vectors"])
+            exact = _eu2_to_rank(d2eu, nq[:, None], nx, metric)
+        else:
+            gathered = arrays["vectors"][jnp.where(compute, nbrs, n)]
+            exact = _rank_tile(queries, gathered, metric)
+        new_d = jnp.where(compute, exact, jnp.inf)
+        dcalls = dcalls + jnp.sum(compute, axis=1, dtype=jnp.int32)
+
+        # --- status scatter: only lanes whose status changes write; all
+        # other lanes are redirected to the pad column (same-value writes,
+        # so the scatter stays deterministic) -------------------------------
+        change = compute | prune
         if router == "triangle":
-            new_st = jnp.where(compute | prune, STATUS_VISITED, st).astype(jnp.uint8)
+            # exact lower bound => discard is permanent (mark visited)
+            new_st = jnp.full_like(st, STATUS_VISITED)
         else:
-            new_st = jnp.where(compute, STATUS_VISITED,
-                               jnp.where(prune, STATUS_PRUNED, st)).astype(jnp.uint8)
-        status = status.at[jnp.where(in_range & live, nbrs, n)].set(
-            jnp.where(in_range & live, new_st, status[n]))
+            new_st = jnp.where(compute, STATUS_VISITED, STATUS_PRUNED
+                               ).astype(jnp.uint8)
+        pad_val = status[:, n][:, None]
+        status = status.at[rows[:, None], jnp.where(change, nbrs, n)].set(
+            jnp.where(change, new_st, pad_val))
 
         # --- pool merge (merge-then-truncate == evolving-bound insertion) ---
-        new_d = jnp.where(compute, exact, jnp.inf)
         new_id = jnp.where(compute, nbrs, n).astype(jnp.int32)
-        md = jnp.concatenate([pool_d, new_d])
-        mi = jnp.concatenate([pool_id, new_id])
-        me = jnp.concatenate([pool_exp, jnp.zeros_like(compute)])
-        order = jnp.argsort(md, stable=True)[:efs]
-        pool_d, pool_id, pool_exp = md[order], mi[order], me[order]
+        if use_pallas:
+            # expanded flags ride the bitonic network in the id low bit
+            enc_pool = pool_id * 2 + pool_exp.astype(jnp.int32)
+            enc_new = new_id * 2
+            pool_d, enc = ops.pool_merge(pool_d, enc_pool, new_d, enc_new)
+            pool_id = enc // 2
+            pool_exp = (enc & 1) == 1
+        else:
+            md = jnp.concatenate([pool_d, new_d], axis=1)
+            mi = jnp.concatenate([pool_id, new_id], axis=1)
+            me = jnp.concatenate([pool_exp, jnp.zeros_like(compute)], axis=1)
+            # lexicographic (dist, id) — the SAME tie-break as the pallas
+            # pool_merge network, so the engines agree even on exact ties
+            order = jnp.lexsort((mi, md), axis=1)[:, :efs]
+            pool_d = jnp.take_along_axis(md, order, axis=1)
+            pool_id = jnp.take_along_axis(mi, order, axis=1)
+            pool_exp = jnp.take_along_axis(me, order, axis=1)
 
-        hops = hops + live.astype(jnp.int32)
-        done = done | stop
-        return (pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done)
+        hops = hops + jnp.sum(slot_live, axis=1, dtype=jnp.int32)
+        return (pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops,
+                done, iters + 1)
 
-    pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done = \
+    pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done, iters = \
         jax.lax.while_loop(cond, body, State)
     return SearchResult(ids=pool_id, dists=pool_d, dist_calls=dcalls,
-                        est_calls=ecalls, hops=hops)
+                        est_calls=ecalls, hops=hops, iters=iters)
+
+
+# --- compiled-engine cache ---------------------------------------------------
+# search_batch used to re-trace + re-jit on every call; repeated batches (the
+# examples/serve_anns.py serving path, NSG construction) now hit a small
+# keyed cache of compiled executables.  Device arrays are cached per GRAPH
+# (one copy shared by every config sweeping that graph); jitted fns per
+# (graph identity, cfg).  Weakrefs guard against id() reuse after gc, and
+# dead-graph entries are purged on every call so their device buffers don't
+# stay pinned.
+_ARRAYS_CACHE: "dict[int, tuple]" = {}
+_ENGINE_CACHE: "dict[tuple, tuple]" = {}
+_ENGINE_CACHE_MAX = 16
+
+
+def _purge_dead_cache_entries():
+    for cache in (_ARRAYS_CACHE, _ENGINE_CACHE):
+        for k in [k for k, v in cache.items() if v[0]() is None]:
+            del cache[k]
+
+
+def _graph_arrays_cached(g: GraphIndex):
+    hit = _ARRAYS_CACHE.get(id(g))
+    if hit is not None and hit[0]() is g:
+        return hit[1]
+    arrays = graph_device_arrays(g)
+    _ARRAYS_CACHE[id(g)] = (weakref.ref(g), arrays)
+    return arrays
 
 
 def build_search_fn(g: GraphIndex, cfg: EngineConfig):
-    """Returns (arrays, jitted fn(queries [B,d], cos_theta) -> SearchResult)."""
-    arrays = graph_device_arrays(g)
+    """Returns (arrays, jitted fn(queries [B,d], cos_theta) -> SearchResult).
 
-    @functools.partial(jax.jit, static_argnames=())
+    Cached per (graph identity, config): calling twice with the same live
+    graph and an equal config returns the SAME jitted callable, so repeated
+    search_batch calls reuse the compiled executable instead of re-tracing.
+    """
+    _purge_dead_cache_entries()
+    key = (id(g), cfg)
+    hit = _ENGINE_CACHE.get(key)
+    if hit is not None:
+        ref, arrays, fn = hit
+        if ref() is g:
+            return arrays, fn
+        del _ENGINE_CACHE[key]
+
+    arrays = _graph_arrays_cached(g)
+
+    @jax.jit
     def run(queries, cos_theta):
         queries = queries.astype(jnp.float32)
-        return jax.vmap(lambda q: _search_one(arrays, q, cos_theta, cfg))(queries)
+        return _search_batch(arrays, queries, cos_theta, cfg)
 
+    while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+        _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+    _ENGINE_CACHE[key] = (weakref.ref(g), arrays, run)
     return arrays, run
 
 
 def search_batch(g: GraphIndex, queries: np.ndarray, cfg: EngineConfig,
                  cos_theta: float = 0.0, k: Optional[int] = None) -> SearchResult:
-    """Convenience one-shot batched search (jit per (graph, cfg))."""
+    """Convenience one-shot batched search (compiled fn cached per (graph, cfg))."""
     _, fn = build_search_fn(g, cfg)
     res = fn(jnp.asarray(queries), jnp.asarray(cos_theta, jnp.float32))
     if k is not None:
-        res = SearchResult(ids=res.ids[:, :k], dists=res.dists[:, :k],
-                           dist_calls=res.dist_calls, est_calls=res.est_calls,
-                           hops=res.hops)
+        res = res._replace(ids=res.ids[:, :k], dists=res.dists[:, :k])
     return res

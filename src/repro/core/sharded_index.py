@@ -30,7 +30,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core import distances as D
 from repro.core.angles import sample_angle_profile
 from repro.core.graph import GraphIndex
-from repro.core.search import EngineConfig, _search_one
+from repro.core.search import EngineConfig, _search_batch
 
 
 @dataclasses.dataclass
@@ -112,7 +112,7 @@ def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
             "edge_eu": edge_eu[0], "norms": norms[0],
             "entry": entries[0], "n": ns,
         }
-        res = jax.vmap(lambda q: _search_one(arrays, q, cos_theta, cfg))(queries)
+        res = _search_batch(arrays, queries, cos_theta, cfg)
         loc_d, loc_i = res.dists[:, :k], res.ids[:, :k]
         # int32 global ids (enable_x64 is off; fine below 2^31 vectors/shard set)
         glob_i = jnp.where(loc_i < ns, loc_i + offsets[0].astype(jnp.int32), -1)
@@ -148,12 +148,15 @@ class ShardedAnnIndex:
 
     def __init__(self, arrays: ShardedIndexArrays, mesh: Mesh,
                  efs: int = 100, k: int = 10, router: str = "crouting",
-                 max_hops: int = 2048):
+                 max_hops: int = 2048, beam_width: int = 1,
+                 engine: str = "jnp", beam_prune: str = "best"):
         self.arrays = arrays
         self.mesh = mesh
         self.k = k
         self.cfg = EngineConfig(efs=efs, router=router, metric=arrays.metric,
-                                max_hops=max_hops, use_hierarchy=False)
+                                max_hops=max_hops, use_hierarchy=False,
+                                beam_width=beam_width, engine=engine,
+                                beam_prune=beam_prune)
         serve, in_sh, _ = make_serve_step(mesh, self.cfg, arrays.ns, k)
         self._serve = jax.jit(serve, in_shardings=in_sh)
         dev = lambda a, sh: jax.device_put(a, sh)

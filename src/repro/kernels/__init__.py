@@ -7,5 +7,8 @@
 #   crouting_prune.py   fused cosine-estimate + prune (VPU)   [paper Alg. 2 inner loop]
 #   gather_distance.py  fused gather + distance (scalar-prefetch DMA)
 #   pool_merge.py       bitonic sorted-pool merge (VPU network)
+#   fused_expand.py     estimate + prune + conditional gather + distance in
+#                       one kernel — the beam engine's per-iteration tile op
+#                       (core/search.py, EngineConfig.engine="pallas")
 
 from repro.kernels import ops  # noqa: F401

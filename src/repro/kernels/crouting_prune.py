@@ -25,8 +25,8 @@ from jax.experimental import pallas as pl
 
 def _prune_kernel(ed_ref, dcq_ref, bound2_ref, valid_ref, ct_ref, est_ref, mask_ref):
     ed = ed_ref[...]                    # [bb, M]
-    dcq = dcq_ref[...].reshape(-1, 1)   # [bb, 1]
-    b2 = bound2_ref[...].reshape(-1, 1)
+    dcq = dcq_ref[...]                  # [bb, M] per-lane (beam tiles)
+    b2 = bound2_ref[...]                # [bb, M]
     ct = ct_ref[0]
     est2 = ed * ed + dcq * dcq - 2.0 * ed * dcq * ct
     est2 = jnp.maximum(est2, 0.0)
@@ -38,8 +38,14 @@ def _prune_kernel(ed_ref, dcq_ref, bound2_ref, valid_ref, ct_ref, est_ref, mask_
 @functools.partial(jax.jit, static_argnames=("bb", "interpret"))
 def crouting_prune_pallas(ed, dcq, bound2, valid, cos_theta, *,
                           bb: int = 8, interpret: bool = True):
-    """ed [B, M], dcq [B], bound2 [B], valid [B, M] int8, cos_theta scalar
-    -> (est2 [B, M] f32, prune [B, M] int8)."""
+    """ed [B, M], dcq [B, M], bound2 [B, M], valid [B, M] int8, cos_theta
+    scalar -> (est2 [B, M] f32, prune [B, M] int8).
+
+    dcq/bound2 are per-lane: the beam engine packs W expansion nodes per
+    query into one [B, W*M] tile, so the expansion-node query distance (and
+    for non-L2 metrics the rank-space bound) differs lane to lane.  The ops
+    wrapper broadcasts 1-D [B] inputs for the classic single-node case.
+    """
     B, M = ed.shape
     bb = min(bb, B)
     assert B % bb == 0, "pad batch to a block multiple (ops wrapper pads)"
@@ -50,8 +56,8 @@ def crouting_prune_pallas(ed, dcq, bound2, valid, cos_theta, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, M), lambda i: (i, 0)),
-            pl.BlockSpec((bb,), lambda i: (i,)),
-            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, M), lambda i: (i, 0)),
+            pl.BlockSpec((bb, M), lambda i: (i, 0)),
             pl.BlockSpec((bb, M), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (0,)),
         ],

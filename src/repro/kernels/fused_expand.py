@@ -1,23 +1,33 @@
 """Pallas TPU kernel: FUSED CRouting expansion step.
 
 One kernel per query lane performs the paper's whole inner loop (Alg. 2,
-lines 7-16 minus the pool update):
+lines 7-16 minus the pool update) over a flat tile of L neighbor slots —
+for the beam-expansion engine L = W*M (W frontier nodes per hop, each with
+M neighbor slots; see core/search.py):
 
     est2 = ed^2 + dcq^2 - 2*ed*dcq*cos(theta*)        (VPU, no vector data)
-    prune = valid & (est2 >= bound2)
-    for m in range(M):
-        if not prune[m]:          <-- the point: the HBM row DMA for the
-            row = table[nbr[m]]       neighbor vector is *conditionally
-            dist2[m] = |q - row|^2    skipped* for pruned lanes
-        else:
+    prune = prune_eligible & (est2 >= bound2)
+    for m in range(L):
+        if eval_mask[m] and not prune[m]:
+            row = table[nbr[m]]       <-- the point: the HBM row DMA for the
+            dist2[m] = |q - row|^2        neighbor vector is *conditionally
+        else:                             skipped* for pruned lanes
             dist2[m] = +inf
+
+`ed`, `dcq` and `bound2` are per-lane [B, L]: with a beam each lane belongs
+to one of W expansion nodes, so the query distance (and, for non-L2 metrics,
+the rank-space bound) varies across the tile.  `eval_mask` marks lanes whose
+exact distance the caller wants if not pruned (valid + not-visited, computed
+from the status array); `prune_eligible` marks lanes the estimate test
+applies to (unvisited + pool-full).  Both default to "nbr id in range" in
+the ops wrapper for standalone use.
 
 This is the kernel-level realization of "CRouting skips the distance call":
 on TPU the savings are the skipped random HBM reads (DESIGN.md §3).  The
 conditional DMA is expressed with lax.cond inside a fori_loop over neighbor
 slots; the estimate lives entirely in VMEM/registers.
 
-Grid: (B,).  Per-step VMEM: q (1,d) + one table row (1,d) + the M-wide
+Grid: (B,).  Per-step VMEM: q (1,d) + one table row (1,d) + the L-wide
 scalars — tiny; the table stays in ANY/HBM.
 """
 from __future__ import annotations
@@ -31,18 +41,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _expand_kernel(nbr_ref, q_ref, ed_ref, dcq_ref, bound2_ref, ct_ref,
-                   table_ref, dist_ref, mask_ref, *, m_slots: int,
-                   n_rows: int):
+                   eval_ref, elig_ref, table_ref, dist_ref, mask_ref, *,
+                   m_slots: int, n_rows: int):
     b = pl.program_id(0)
     q = q_ref[0, :].astype(jnp.float32)                # [d]
-    dcq = dcq_ref[0]
-    b2 = bound2_ref[0]
+    dcq = dcq_ref[0, :]                                # [L] per-lane d(c,q)
+    b2 = bound2_ref[0, :]                              # [L] per-lane bound
     ct = ct_ref[0]
 
-    ed = ed_ref[0, :]                                  # [M] stored d(c,n)
+    ed = ed_ref[0, :]                                  # [L] stored d(c,n)
     est2 = jnp.maximum(ed * ed + dcq * dcq - 2.0 * ed * dcq * ct, 0.0)
-    valid = nbr_ref[b, :] < n_rows                     # scalar-prefetched ids
-    prune = valid & (est2 >= b2)
+    elig = elig_ref[0, :] != 0
+    prune = elig & (est2 >= b2)
+    evalm = eval_ref[0, :] != 0
     mask_ref[0, :] = prune.astype(jnp.int8)
 
     def per_slot(m, _):
@@ -55,7 +66,7 @@ def _expand_kernel(nbr_ref, q_ref, ed_ref, dcq_ref, bound2_ref, ct_ref,
         def skip(_):
             return jnp.float32(jnp.inf)
 
-        do_fetch = valid[m] & ~prune[m]
+        do_fetch = evalm[m] & ~prune[m]
         d2 = jax.lax.cond(do_fetch, fetch, skip, operand=0)
         dist_ref[0, m] = d2
         return 0
@@ -64,11 +75,13 @@ def _expand_kernel(nbr_ref, q_ref, ed_ref, dcq_ref, bound2_ref, ct_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def fused_expand_pallas(nbrs, queries, ed, dcq, bound2, cos_theta, table, *,
+def fused_expand_pallas(nbrs, queries, ed, dcq, bound2, cos_theta,
+                        eval_mask, prune_eligible, table, *,
                         interpret: bool = True):
-    """nbrs [B,M] int32, queries [B,d], ed [B,M], dcq [B], bound2 [B],
-    table [N,d] -> (dist2 [B,M] with +inf for pruned/invalid, prune [B,M])."""
-    B, M = nbrs.shape
+    """nbrs [B,L] int32, queries [B,d], ed/dcq/bound2 [B,L] f32,
+    eval_mask/prune_eligible [B,L] int8, table [N,d]
+    -> (dist2 [B,L] with +inf for pruned/masked lanes, prune [B,L] int8)."""
+    B, L = nbrs.shape
     d = queries.shape[1]
     N = table.shape[0]
     ct = jnp.asarray(cos_theta, jnp.float32).reshape(1)
@@ -77,21 +90,23 @@ def fused_expand_pallas(nbrs, queries, ed, dcq, bound2, cos_theta, table, *,
         grid=(B,),
         in_specs=[
             pl.BlockSpec((1, d), lambda b, idx: (b, 0)),     # query row
-            pl.BlockSpec((1, M), lambda b, idx: (b, 0)),     # edge dists
-            pl.BlockSpec((1,), lambda b, idx: (b,)),         # d(c,q)
-            pl.BlockSpec((1,), lambda b, idx: (b,)),         # bound^2
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),     # edge dists
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),     # d(c,q) per lane
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),     # bound^2 per lane
             pl.BlockSpec((1,), lambda b, idx: (0,)),         # cos theta*
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # table in HBM
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),     # eval mask
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),     # prune-eligible
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # table in HBM
         ],
         out_specs=[
-            pl.BlockSpec((1, M), lambda b, idx: (b, 0)),
-            pl.BlockSpec((1, M), lambda b, idx: (b, 0)),
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_expand_kernel, m_slots=M, n_rows=N),
+        functools.partial(_expand_kernel, m_slots=L, n_rows=N),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((B, M), jnp.float32),
-                   jax.ShapeDtypeStruct((B, M), jnp.int8)],
+        out_shape=[jax.ShapeDtypeStruct((B, L), jnp.float32),
+                   jax.ShapeDtypeStruct((B, L), jnp.int8)],
         interpret=interpret,
-    )(nbrs, queries, ed, dcq, bound2, ct, table)
+    )(nbrs, queries, ed, dcq, bound2, ct, eval_mask, prune_eligible, table)

@@ -46,7 +46,7 @@ def gather_distance_pallas(indices, queries, table, *, interpret: bool = True):
         grid=(B, M),
         in_specs=[
             pl.BlockSpec((1, d), lambda b, m, idx: (b, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # table in HBM
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # table in HBM
         ],
         out_specs=pl.BlockSpec((1, 1), lambda b, m, idx: (b, m)),
     )

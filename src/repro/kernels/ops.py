@@ -51,29 +51,42 @@ def l2_distance(q, x, mode: str = "l2", bq: int = 128, bc: int = 256,
 
 def crouting_prune(ed, dcq, bound2, valid, cos_theta, bb: int = 8,
                    interpret=None):
-    """Fused estimate + prune mask; pads B to the row-block, M to lanes."""
+    """Fused estimate + prune mask; pads B to the row-block, M to lanes.
+
+    dcq/bound2 may be [B] (classic one-node expansion, broadcast over lanes)
+    or per-lane [B, M] (beam tiles, where each lane's expansion node — and
+    for non-L2 metrics its rank-space bound — differs)."""
     interpret = _default_interpret() if interpret is None else interpret
     B, M = ed.shape
+    if dcq.ndim == 1:
+        dcq = jnp.broadcast_to(dcq[:, None], (B, M))
+    if bound2.ndim == 1:
+        bound2 = jnp.broadcast_to(bound2[:, None], (B, M))
     edp = _pad_to(_pad_to(ed, 128, 1, jnp.inf), bb, 0, jnp.inf)
     vp = _pad_to(_pad_to(valid.astype(jnp.int8), 128, 1, 0), bb, 0, 0)
-    dcqp = _pad_to(dcq, bb, 0, 0.0)
-    b2p = _pad_to(bound2, bb, 0, 0.0)
+    dcqp = _pad_to(_pad_to(dcq, 128, 1, 0.0), bb, 0, 0.0)
+    b2p = _pad_to(_pad_to(bound2, 128, 1, 0.0), bb, 0, 0.0)
     est2, mask = crouting_prune_pallas(edp, dcqp, b2p, vp, cos_theta,
                                        bb=bb, interpret=interpret)
     return est2[:B, :M], mask[:B, :M]
 
 
 def gather_distance(indices, queries, table, interpret=None):
-    """Fused gather+distance; prune-masked callers remap lanes to row 0."""
+    """Fused gather+distance; prune-masked callers remap lanes to the pad
+    row (table's last row, the repo-wide sentinel — see
+    core.search.graph_device_arrays)."""
     interpret = _default_interpret() if interpret is None else interpret
     return gather_distance_pallas(indices.astype(jnp.int32), queries, table,
                                   interpret=interpret)
 
 
 def gather_distance_pruned(nbr_ids, prune_mask, queries, table, interpret=None):
-    """CRouting-integrated exact path: pruned lanes fetch the sentinel row 0
-    (de-duplicated DMA on TPU) and report +inf."""
-    idx = jnp.where(prune_mask != 0, 0, nbr_ids).astype(jnp.int32)
+    """CRouting-integrated exact path: pruned lanes fetch the sentinel pad
+    row — the table's LAST row, matching the engine's pad-row convention
+    (graph_device_arrays appends a zero row at index N) — de-duplicated DMA
+    on TPU — and report +inf."""
+    pad_row = table.shape[0] - 1
+    idx = jnp.where(prune_mask != 0, pad_row, nbr_ids).astype(jnp.int32)
     d2 = gather_distance(idx, queries, table, interpret=interpret)
     return jnp.where(prune_mask != 0, jnp.inf, d2)
 
@@ -89,10 +102,33 @@ def pool_merge(pool_d, pool_i, new_d, new_i, bb: int = 8, interpret=None):
 
 
 def fused_expand(nbrs, queries, ed, dcq, bound2, cos_theta, table,
-                 interpret=None):
+                 eval_mask=None, prune_eligible=None, interpret=None):
     """Fused CRouting expansion: estimate + prune + conditional gather +
-    exact distance in one kernel (the paper's Alg. 2 inner loop)."""
+    exact distance in one kernel (the paper's Alg. 2 inner loop).
+
+    dcq/bound2 may be [B] (broadcast over lanes) or per-lane [B, L] for the
+    beam engine's [B, W*M] tiles.  eval_mask marks lanes to evaluate exactly
+    when not pruned; prune_eligible marks lanes the estimate test applies
+    to.  Both default to "neighbor id in range" (the standalone semantics).
+    """
     from repro.kernels.fused_expand import fused_expand_pallas
     interpret = _default_interpret() if interpret is None else interpret
-    return fused_expand_pallas(nbrs.astype(jnp.int32), queries, ed, dcq,
-                               bound2, cos_theta, table, interpret=interpret)
+    nbrs = nbrs.astype(jnp.int32)
+    B, L = nbrs.shape
+    if dcq.ndim == 1:
+        dcq = jnp.broadcast_to(dcq[:, None], (B, L))
+    if bound2.ndim == 1:
+        bound2 = jnp.broadcast_to(bound2[:, None], (B, L))
+    # always intersect with in-range: the kernel DMAs nbr row indices
+    # unchecked, so an out-of-range id in a caller's mask would be an OOB
+    # HBM read on real TPU
+    in_range = (nbrs < table.shape[0]).astype(jnp.int8)
+    eval_mask = (in_range if eval_mask is None
+                 else eval_mask.astype(jnp.int8) & in_range)
+    prune_eligible = (in_range if prune_eligible is None
+                      else prune_eligible.astype(jnp.int8) & in_range)
+    return fused_expand_pallas(nbrs, queries, ed.astype(jnp.float32),
+                               dcq.astype(jnp.float32),
+                               bound2.astype(jnp.float32), cos_theta,
+                               eval_mask, prune_eligible, table,
+                               interpret=interpret)

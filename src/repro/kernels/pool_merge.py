@@ -46,22 +46,35 @@ def _merge_kernel(pool_d_ref, pool_i_ref, new_d_ref, new_i_ref,
     i = jnp.concatenate([pool_i_ref[...], new_i_ref[...]], axis=1)
     pad = L - d.shape[1]
     if pad:
+        # network pad must sort AFTER every real input under the (dist, id)
+        # tie-break, or +inf pool sentinels get displaced by fake entries —
+        # so pad ids with int32 max, not -1
         d = jnp.concatenate([d, jnp.full((d.shape[0], pad), jnp.inf, d.dtype)], axis=1)
-        i = jnp.concatenate([i, jnp.full((i.shape[0], pad), -1, i.dtype)], axis=1)
-    idx = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+        i = jnp.concatenate([i, jnp.full((i.shape[0], pad),
+                                         jnp.iinfo(jnp.int32).max, i.dtype)], axis=1)
+    bb = d.shape[0]
+    # Gather-free butterfly: lane l = block*2j + half*j + r pairs with l^j,
+    # i.e. the two halves of each reshaped [.., 2, j] group.  Static reshapes
+    # + selects only — XLA's compile time stays linear in the stage count
+    # (take_along_axis-based exchanges blow up superlinearly on this path),
+    # and on real TPU the strided selects map onto VPU shuffles.
     for j, k in _bitonic_stages(L):
-        partner = idx ^ j
-        pd = jnp.take_along_axis(d, jnp.broadcast_to(partner, d.shape), axis=1)
-        pi = jnp.take_along_axis(i, jnp.broadcast_to(partner, i.shape), axis=1)
-        up = (idx & k) == 0           # ascending block?
-        is_lo = partner > idx         # this lane holds the smaller slot
-        keep_min = jnp.where(up, is_lo, ~is_lo)
-        take_min = jnp.minimum(d, pd)
-        take_max = jnp.maximum(d, pd)
-        sel_min = jnp.where(d < pd, i, jnp.where(pd < d, pi, jnp.minimum(i, pi)))
-        sel_max = jnp.where(d < pd, pi, jnp.where(pd < d, i, jnp.maximum(i, pi)))
-        d = jnp.where(keep_min, take_min, take_max)
-        i = jnp.where(keep_min, sel_min, sel_max)
+        nb = L // (2 * j)
+        d4 = d.reshape(bb, nb, 2, j)
+        i4 = i.reshape(bb, nb, 2, j)
+        a_d, b_d = d4[:, :, 0, :], d4[:, :, 1, :]
+        a_i, b_i = i4[:, :, 0, :], i4[:, :, 1, :]
+        # ascending block?  bit k of the lane index is constant per 2j-group
+        base = jax.lax.broadcasted_iota(jnp.int32, (1, nb, 1), 1) * (2 * j)
+        up = (base & k) == 0
+        # lexicographic (dist, id): ties resolve to the smaller id
+        a_min = (a_d < b_d) | ((a_d == b_d) & (a_i <= b_i))
+        mn_d, mx_d = jnp.where(a_min, a_d, b_d), jnp.where(a_min, b_d, a_d)
+        mn_i, mx_i = jnp.where(a_min, a_i, b_i), jnp.where(a_min, b_i, a_i)
+        d = jnp.stack([jnp.where(up, mn_d, mx_d),
+                       jnp.where(up, mx_d, mn_d)], axis=2).reshape(bb, L)
+        i = jnp.stack([jnp.where(up, mn_i, mx_i),
+                       jnp.where(up, mx_i, mn_i)], axis=2).reshape(bb, L)
     out_d_ref[...] = d[:, :P]
     out_i_ref[...] = i[:, :P]
 

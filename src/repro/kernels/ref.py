@@ -15,10 +15,15 @@ def l2_distance_ref(q, x, mode: str = "l2"):
 
 
 def crouting_prune_ref(ed, dcq, bound2, valid, cos_theta):
+    """dcq/bound2: [B] (broadcast) or per-lane [B, M] (beam tiles)."""
     ed = ed.astype(jnp.float32)
-    dcq = dcq.astype(jnp.float32)[:, None]
+    dcq = dcq.astype(jnp.float32)
+    if dcq.ndim == 1:
+        dcq = dcq[:, None]
+    if bound2.ndim == 1:
+        bound2 = bound2[:, None]
     est2 = jnp.maximum(ed * ed + dcq * dcq - 2.0 * ed * dcq * cos_theta, 0.0)
-    mask = (valid != 0) & (est2 >= bound2[:, None])
+    mask = (valid != 0) & (est2 >= bound2)
     return est2, mask.astype(jnp.int8)
 
 
@@ -38,14 +43,19 @@ def pool_merge_ref(pool_d, pool_i, new_d, new_i):
             jnp.take_along_axis(i, order, axis=1)[:, :P])
 
 
-def fused_expand_ref(nbrs, queries, ed, dcq, bound2, cos_theta, table):
-    """Oracle for the fused CRouting expansion kernel."""
+def fused_expand_ref(nbrs, queries, ed, dcq, bound2, cos_theta, table,
+                     eval_mask=None, prune_eligible=None):
+    """Oracle for the fused CRouting expansion kernel (beam-tile general)."""
     n = table.shape[0]
+    if bound2.ndim == 1:
+        bound2 = bound2[:, None]
     est2, _ = crouting_prune_ref(ed, dcq, bound2,
                                  jnp.ones_like(ed, dtype=jnp.int8), cos_theta)
-    valid = nbrs < n
-    prune = valid & (est2 >= bound2[:, None])
-    safe = jnp.where(valid, nbrs, 0)
+    in_range = nbrs < n
+    evalm = in_range if eval_mask is None else (eval_mask != 0)
+    elig = in_range if prune_eligible is None else (prune_eligible != 0)
+    prune = elig & (est2 >= bound2)
+    safe = jnp.where(in_range, nbrs, n - 1)
     d2 = gather_distance_ref(safe, queries, table)
-    d2 = jnp.where(valid & ~prune, d2, jnp.inf)
+    d2 = jnp.where(evalm & ~prune, d2, jnp.inf)
     return d2, prune.astype(jnp.int8)

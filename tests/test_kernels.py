@@ -75,6 +75,80 @@ def test_pool_merge_sweep(p, m):
     assert (np.asarray(i1) == np.asarray(i2)).all()
 
 
+def test_pool_merge_randomized_with_ties():
+    """Quantized distances force ties across pool/new; the kernel must agree
+    with an explicit np.sort of the union under the (dist, id) order."""
+    rng = np.random.default_rng(11)
+    for _ in range(5):
+        b, p, m = 4, 12, 9
+        pd = np.sort(rng.integers(0, 6, size=(b, p)).astype(np.float32) / 2.0,
+                     axis=1)
+        nd = rng.integers(0, 6, size=(b, m)).astype(np.float32) / 2.0
+        perm = rng.permutation(5000)
+        pi = perm[: b * p].reshape(b, p).astype(np.int32)
+        ni = (perm[b * p: b * (p + m)] + 10_000).reshape(b, m).astype(np.int32)
+        d1, i1 = ops.pool_merge(jnp.asarray(pd), jnp.asarray(pi),
+                                jnp.asarray(nd), jnp.asarray(ni))
+        for r in range(b):
+            union = sorted(zip(np.concatenate([pd[r], nd[r]]),
+                               np.concatenate([pi[r], ni[r]])))
+            exp_d = np.asarray([u[0] for u in union[:p]], np.float32)
+            exp_i = np.asarray([u[1] for u in union[:p]], np.int32)
+            np.testing.assert_array_equal(np.asarray(d1)[r], exp_d)
+            np.testing.assert_array_equal(np.asarray(i1)[r], exp_i)
+
+
+@pytest.mark.parametrize("b,m", [(3, 17), (6, 64)])
+def test_crouting_prune_per_lane_dcq(b, m):
+    """Beam tiles carry a per-lane expansion-node distance and bound."""
+    ed = jnp.asarray(RNG.uniform(0.1, 2.0, size=(b, m)), jnp.float32)
+    dcq = jnp.asarray(RNG.uniform(0.1, 2.0, size=(b, m)), jnp.float32)
+    b2 = jnp.asarray(RNG.uniform(0.5, 4.0, size=(b, m)), jnp.float32)
+    valid = jnp.asarray(RNG.integers(0, 2, size=(b, m)), jnp.int8)
+    e1, m1 = ops.crouting_prune(ed, dcq, b2, valid, 0.3)
+    e2, m2 = ref.crouting_prune_ref(ed, dcq, b2, valid, 0.3)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5)
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+
+
+def test_fused_expand_masks_and_per_lane():
+    """eval/prune-eligible masks + per-lane dcq/bound2 (the beam-engine
+    calling convention)."""
+    b, m, n, d = 4, 12, 120, 16
+    table = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    nbrs = jnp.asarray(RNG.integers(0, n + 2, size=(b, m)), jnp.int32)
+    qs = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    ed = jnp.asarray(RNG.uniform(0.5, 3.0, size=(b, m)), jnp.float32)
+    dcq = jnp.asarray(RNG.uniform(0.5, 3.0, size=(b, m)), jnp.float32)
+    b2 = jnp.asarray(RNG.uniform(2.0, 9.0, size=(b, m)), jnp.float32)
+    evalm = jnp.asarray(RNG.integers(0, 2, size=(b, m)), jnp.int8) \
+        & (nbrs < n).astype(jnp.int8)
+    elig = evalm & jnp.asarray(RNG.integers(0, 2, size=(b, m)), jnp.int8)
+    d1, m1 = ops.fused_expand(nbrs, qs, ed, dcq, b2, 0.2, table,
+                              eval_mask=evalm, prune_eligible=elig)
+    d2, m2 = ref.fused_expand_ref(nbrs, qs, ed, dcq, b2, 0.2, table,
+                                  eval_mask=evalm, prune_eligible=elig)
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+    fin = np.isfinite(np.asarray(d2))
+    assert (np.isfinite(np.asarray(d1)) == fin).all()
+    np.testing.assert_allclose(np.asarray(d1)[fin], np.asarray(d2)[fin],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gather_distance_pruned_uses_pad_row_sentinel():
+    """Pruned lanes must remap to the table's LAST row (the engine pad row),
+    not row 0 — unified sentinel convention (graph_device_arrays)."""
+    table = jnp.asarray(RNG.normal(size=(32, 8)), jnp.float32)
+    qs = jnp.asarray(RNG.normal(size=(2, 8)), jnp.float32)
+    idx = jnp.full((2, 4), 31, jnp.int32)   # all lanes point at the pad row
+    mask = jnp.asarray([[1, 1, 0, 1], [1, 0, 1, 1]], jnp.int8)
+    out = np.asarray(ops.gather_distance_pruned(idx, mask, qs, table))
+    exp = np.asarray(ref.gather_distance_ref(idx, qs, table))
+    m = np.asarray(mask) != 0
+    assert np.isinf(out[m]).all()
+    np.testing.assert_allclose(out[~m], exp[~m], rtol=1e-5, atol=1e-5)
+
+
 def test_pool_merge_with_inf_padding():
     pd = jnp.asarray([[0.1, 0.5, jnp.inf, jnp.inf]], jnp.float32)
     pi = jnp.asarray([[3, 7, -1, -1]], jnp.int32)

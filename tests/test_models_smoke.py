@@ -8,6 +8,9 @@ import pytest
 from repro.configs import get_arch, list_archs
 from repro.models.api import build_smoke
 
+# ~2 min for the full arch sweep — excluded from the fast verify tier
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = list_archs(include_anns=True)
 
 

@@ -1,8 +1,16 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (requirements-dev.txt); not in the "
+           "baked container image")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
+
+pytestmark = pytest.mark.slow
 
 from repro.core import distances as D
 from repro.kernels import ref as kref
