@@ -1,6 +1,6 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
-.PHONY: verify test bench bench-engine
+.PHONY: verify test bench bench-engine bench-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -16,3 +16,10 @@ bench:
 
 bench-engine:
 	PYTHONPATH=src python -m benchmarks.run --only engine
+
+# CI tier: tiny-n engine benchmarks in interpret mode so the benchmark
+# entrypoints (and the BENCH_engine.json writer) can't silently rot.
+# Results go to .cache/, never to the committed trajectory file.
+bench-smoke:
+	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
+		python -m benchmarks.run --only engine

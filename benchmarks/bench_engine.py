@@ -1,16 +1,24 @@
 """Beam-expansion engine benchmarks.
 
-Two entries:
+Three entries (each persists its derived dict into ``BENCH_engine.json``
+via ``common.persist_bench`` — the machine-readable perf trajectory):
 
 * ``engine_beam_sweep`` — the tuning sweep behind ``EngineConfig.beam_width``:
   for W in {1, 2, 4, 8} report hop-loop iterations, recall, per-query exact
   distance calls and QPS at equal efs.  The headline number is
   ``iter_reduction``: iterations(W=1) / iterations(W), which should track ~W
   until the frontier is too shallow to fill the beam.
+* ``engine_estimate_sweep`` — the two-stage quantized engine
+  (``EngineConfig.estimate``): exact vs angle vs sq8 vs both at equal efs.
+  The headline: ``exact_rerank_calls`` (fp32 row DMAs on the sq8 path) vs
+  the exact baseline's ``dist_calls``, at recall within 0.01.
 * ``engine_pallas_parity`` — jnp vs Pallas engine on a small graph: asserts
   result parity and reports iterations + dist calls before/after (interpret
   mode — wall-clock here is NOT TPU performance, the parity + counter
   deltas are the point).
+
+``BENCH_SMOKE=1`` (``make bench-smoke``, CI) shrinks every entry to a
+seconds-scale run on the same code path.
 """
 from __future__ import annotations
 
@@ -18,12 +26,13 @@ import time
 
 import numpy as np
 
-from benchmarks.common import cached_index, dataset, emit, timed
+from benchmarks.common import (SMOKE, cached_index, dataset, emit,
+                               persist_bench, smoke_scale, timed)
 from repro.data.vectors import exact_ground_truth, recall_at_k
 
 
 def engine_beam_sweep():
-    ds = dataset("sift-synth", n_base=4000)
+    ds = dataset("sift-synth", n_base=smoke_scale(4000, 800))
     idx = cached_index(ds)
     gt = exact_ground_truth(ds, k=10)
     derived = {}
@@ -31,10 +40,11 @@ def engine_beam_sweep():
     # beam_prune policy only matters for pruning routers (see EngineConfig):
     # "best" holds the W=1 recall profile, "all" holds the W=1 call savings
     variants = (("none", "best"), ("crouting", "best"), ("crouting", "all"))
+    widths = (1, 4) if SMOKE else (1, 2, 4, 8)
     for router, pol in variants:
         key = router if router == "none" else f"{router}_{pol}"
         rows = []
-        for W in (1, 2, 4, 8):
+        for W in widths:
             kw = dict(k=10, efs=64, router=router, beam_width=W,
                       beam_prune=pol)
             # warm with the full batch shape — jit caches per shape, so a
@@ -63,6 +73,49 @@ def engine_beam_sweep():
                                      "calls": r["dist_calls"]}
              for r in rows_}
         for rt, rows_ in derived.items()})
+    derived["n_base"] = int(ds.base.shape[0])
+    persist_bench("engine_beam_sweep", derived)
+    return derived
+
+
+def engine_estimate_sweep():
+    """Two-stage quantized distance engine vs the exact baseline.
+
+    Acceptance tracking (ISSUE 3): ``sq8.recall >= exact.recall - 0.01`` and
+    ``sq8.exact_rerank_calls < exact.dist_calls`` — the fp32 row-DMA
+    reduction, machine-checked from BENCH_engine.json."""
+    ds = dataset("sift-synth", n_base=smoke_scale(4000, 800))
+    idx = cached_index(ds)
+    gt = exact_ground_truth(ds, k=10)
+    variants = (
+        ("exact", dict(router="none", estimate="exact")),
+        ("angle", dict(router="crouting", estimate="angle")),
+        ("sq8", dict(router="none", estimate="sq8")),
+        ("both", dict(router="crouting", estimate="both")),
+    )
+    derived = {}
+    for name, kw in variants:
+        kw = dict(k=10, efs=64, beam_width=4, **kw)
+        idx.search(ds.queries, **kw)             # warm the jit cache
+        t0 = time.perf_counter()
+        ids, _, info = idx.search(ds.queries, **kw)
+        dt = time.perf_counter() - t0
+        derived[name] = {
+            "recall": round(recall_at_k(ids, gt, 10), 4),
+            "dist_calls": round(float(info["dist_calls"].mean()), 1),
+            "exact_rerank_calls": round(float(info["rerank_calls"].mean()), 1),
+            "sq8_calls": round(float(info["sq8_calls"].mean()), 1),
+            "est_calls": round(float(info["est_calls"].mean()), 1),
+            "iters": info["iters"],
+            "wall_s": round(dt, 4),
+        }
+    for name in ("sq8", "both"):
+        derived[name]["fp32_dma_reduction"] = round(
+            derived["exact"]["dist_calls"]
+            / max(derived[name]["dist_calls"], 1e-9), 2)
+    derived["n_base"] = int(ds.base.shape[0])
+    emit("engine_estimate_sweep", 0.0, derived)
+    persist_bench("engine_estimate_sweep", derived)
     return derived
 
 
@@ -71,7 +124,7 @@ def engine_pallas_parity():
     dist-call counts, iterations cut by the beam."""
     from repro.core.index import AnnIndex
 
-    ds = dataset("sift-synth", n_base=1200)
+    ds = dataset("sift-synth", n_base=smoke_scale(1200, 600))
     ds_q = ds.queries[:8]
     idx = AnnIndex.build(ds.base, graph="hnsw", m=8, efc=48)
     derived = {}
@@ -79,22 +132,28 @@ def engine_pallas_parity():
     for name, kw in (
             ("jnp_w1", dict(engine="jnp", beam_width=1)),
             ("jnp_w4", dict(engine="jnp", beam_width=4)),
+            ("jnp_w4_sq8", dict(engine="jnp", beam_width=4, estimate="sq8")),
             ("pallas_w1", dict(engine="pallas", beam_width=1)),
-            ("pallas_w4", dict(engine="pallas", beam_width=4))):
+            ("pallas_w4", dict(engine="pallas", beam_width=4)),
+            ("pallas_w4_sq8", dict(engine="pallas", beam_width=4,
+                                   estimate="sq8"))):
         dt, out = timed(lambda: idx.search(ds_q, k=10, efs=48,
                                            router="crouting", **kw))
         ids, _, info = out
         row = {"iters": info["iters"],
                "dist_calls": round(float(info["dist_calls"].mean()), 1),
                "us_per_query": round(dt / len(ds_q) * 1e6, 1)}
+        key = (kw["beam_width"], kw.get("estimate", "exact"))
         if kw["engine"] == "jnp":
-            jnp_ids[kw["beam_width"]] = ids
+            jnp_ids[key] = ids
         else:
-            # each pallas variant is checked against its jnp twin (same W)
-            row["ids_match_jnp"] = bool(
-                (ids == jnp_ids[kw["beam_width"]]).all())
+            # each pallas variant is checked against its jnp twin (same
+            # beam width + estimate config)
+            row["ids_match_jnp"] = bool((ids == jnp_ids[key]).all())
         derived[name] = row
     derived["iter_reduction_w4"] = round(
         derived["jnp_w1"]["iters"] / max(derived["pallas_w4"]["iters"], 1), 2)
+    derived["n_base"] = int(ds.base.shape[0])
     emit("engine_pallas_parity", 0.0, derived)
+    persist_bench("engine_pallas_parity", derived)
     return derived

@@ -26,6 +26,38 @@ BENCH_DATASETS = {
 N_BASE = int(os.environ.get("BENCH_N", 6000))
 N_QUERY = int(os.environ.get("BENCH_Q", 100))
 
+# BENCH_SMOKE=1 (make bench-smoke / CI): shrink every engine bench to a
+# seconds-scale run that still exercises the full code path, and divert the
+# persisted results away from the committed trajectory file.
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+BENCH_ENGINE_JSON = (os.path.join(CACHE, "BENCH_engine.smoke.json") if SMOKE
+                     else os.path.join(os.path.dirname(__file__), "..",
+                                       "BENCH_engine.json"))
+
+
+def smoke_scale(n: int, smoke_n: int) -> int:
+    """Benchmark size knob: the real size, or the smoke-tier size."""
+    return smoke_n if SMOKE else n
+
+
+def persist_bench(section: str, payload) -> str:
+    """Merge one benchmark's derived dict into BENCH_engine.json.
+
+    The file is the machine-readable perf trajectory across PRs: one JSON
+    object keyed by benchmark name (plus a ``_meta`` stamp written by
+    benchmarks/run.py).  Smoke runs write to .cache/ instead so throwaway
+    numbers never clobber the committed history.
+    """
+    data = {}
+    if os.path.exists(BENCH_ENGINE_JSON):
+        with open(BENCH_ENGINE_JSON) as f:
+            data = json.load(f)
+    data[section] = payload
+    with open(BENCH_ENGINE_JSON, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return BENCH_ENGINE_JSON
+
 
 def dataset(name: str, n_base: int = None, metric: str = "l2",
             seed: int = 0) -> VectorDataset:

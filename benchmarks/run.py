@@ -16,6 +16,7 @@ from benchmarks import bench_roofline as R
 
 BENCHES = [
     ("engine_beam_sweep", E.engine_beam_sweep),
+    ("engine_estimate_sweep", E.engine_estimate_sweep),
     ("engine_pallas_parity", E.engine_pallas_parity),
     ("fig2_time_breakdown", P.fig2_time_breakdown),
     ("fig6_8_angles", P.fig6_8_angles),
@@ -38,7 +39,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
     args = ap.parse_args()
-    failed = []
+    failed, ran = [], []
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -46,11 +47,22 @@ def main() -> None:
         print(f"# === {name} ===", flush=True)
         try:
             fn()
+            ran.append(name)
         except Exception as e:
             failed.append(name)
             print(f"{name},nan,{{\"error\": \"{e!r}\"}}")
             traceback.print_exc()
         print(f"#     ({time.time()-t0:.1f}s)", flush=True)
+    if any(n.startswith("engine") for n in ran):
+        # stamp the persisted perf trajectory (benchmarks/common.py)
+        from benchmarks import common as C
+        path = C.persist_bench("_meta", {
+            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            # dataset sizes are per-bench (each section records its n_base)
+            "bench_q": C.N_QUERY, "smoke": C.SMOKE,
+            "benches": [n for n in ran if n.startswith("engine")],
+        })
+        print(f"# engine results persisted to {path}")
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

@@ -52,6 +52,7 @@ class AnnIndex:
                router: str = "crouting", cos_theta: Optional[float] = None,
                max_hops: int = 4096, beam_width: int = 1,
                engine: str = "jnp", beam_prune: str = "best",
+               estimate: str = "exact",
                ) -> Tuple[np.ndarray, np.ndarray, dict]:
         import jax.numpy as jnp
 
@@ -63,7 +64,7 @@ class AnnIndex:
                            metric=self.graph.metric, max_hops=max_hops,
                            use_hierarchy=self.graph.upper_neighbors is not None,
                            beam_width=beam_width, engine=engine,
-                           beam_prune=beam_prune)
+                           beam_prune=beam_prune, estimate=estimate)
         _, fn = self._engine(cfg)
         res: SearchResult = fn(jnp.asarray(queries), jnp.asarray(cos_theta, jnp.float32))
         ids = np.asarray(res.ids[:, :k]).astype(np.int64)
@@ -71,6 +72,8 @@ class AnnIndex:
         info = {
             "dist_calls": np.asarray(res.dist_calls),
             "est_calls": np.asarray(res.est_calls),
+            "rerank_calls": np.asarray(res.rerank_calls),
+            "sq8_calls": np.asarray(res.sq8_calls),
             "hops": np.asarray(res.hops),
             "iters": int(res.iters),
         }

@@ -52,7 +52,8 @@ def _mrng_select(p: int, cand_ids: np.ndarray, cand_rank: np.ndarray,
 
 def build_nsg(base: np.ndarray, metric: str = "l2", r: int = 70, c: int = 500,
               l: int = 60, knn_k: int = 64, seed: int = 0,
-              search_batch_size: int = 512, beam_width: int = 4) -> GraphIndex:
+              search_batch_size: int = 512, beam_width: int = 4,
+              estimate: str = "exact") -> GraphIndex:
     t0 = time.time()
     base = D.preprocess_vectors(np.ascontiguousarray(base, np.float32), metric)
     n = base.shape[0]
@@ -63,10 +64,13 @@ def build_nsg(base: np.ndarray, metric: str = "l2", r: int = 70, c: int = 500,
     # --- step 3: batched candidate acquisition on the KNN graph -------------
     pool = max(l, min(c, n - 1))
     # beam expansion cuts the candidate-acquisition hop loop ~beam_width x
-    # (construction quality only improves: extra expansions, never fewer)
+    # (construction quality only improves: extra expansions, never fewer);
+    # estimate="sq8" swaps the acquisition searches onto quantized stage-1
+    # distances (cheaper build, slightly noisier candidate pools)
     cfg = EngineConfig(efs=pool, router="none", metric=metric,
                        max_hops=4 * pool, use_hierarchy=False,
-                       beam_width=max(1, min(beam_width, pool)))
+                       beam_width=max(1, min(beam_width, pool)),
+                       estimate=estimate)
     cand_ids = np.empty((n, pool), np.int64)
     cand_rank = np.empty((n, pool), np.float32)
     from repro.core.search import build_search_fn

@@ -29,6 +29,20 @@ zero vector at row index N; every masked/pruned/out-of-range lane gathers
 that row (``ops.gather_distance_pruned`` remaps to the table's last row).
 Pool slots holding no candidate carry id N and distance +inf.
 
+Two-stage quantized distances (``EngineConfig.estimate``, PAPERS.md: VSAG /
+Probabilistic Routing): with ``estimate="sq8"`` or ``"both"`` the surviving
+lanes of a tile do NOT fetch fp32 rows.  Stage 1 reads the uint8 SQ8 code
+row (4x fewer bytes, kernels/sq8_distance.py) and computes an approximate
+distance plus a conservative lower bound (repro/quant/sq8.py); a lane whose
+lower bound already exceeds the pool bound is discarded (status PRUNED)
+without ever touching the fp32 table.  Survivors enter the pool with their
+approximate distance and a per-slot ``approx`` flag; stage 2 (the fp32 row
+DMA + exact distance) runs lazily — when an approx entry is selected for
+beam expansion, and for every approx entry left in the pool at return — so
+candidates displaced from the pool before either event never pay the fp32
+fetch.  ``SearchResult.rerank_calls`` counts stage-2 evaluations,
+``sq8_calls`` stage-1 evaluations.
+
 Semantic notes (tested in tests/test_engine_equivalence.py):
 
 * Frozen bound: within one iteration all W*M lanes are evaluated against the
@@ -63,6 +77,7 @@ STATUS_VISITED = 1
 STATUS_PRUNED = 2
 
 ENGINES = ("jnp", "pallas", "pallas_unfused")
+ESTIMATES = ("exact", "angle", "sq8", "both")
 
 
 class SearchResult(NamedTuple):
@@ -72,6 +87,8 @@ class SearchResult(NamedTuple):
     est_calls: jax.Array   # [B] int32 cosine-theorem estimates
     hops: jax.Array        # [B] int32 node expansions
     iters: jax.Array       # [] int32 batch-level hop-loop iterations
+    rerank_calls: jax.Array  # [B] int32 stage-2 exact reranks (sq8 path)
+    sq8_calls: jax.Array     # [B] int32 stage-1 quantized estimates
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,9 +109,24 @@ class EngineConfig:
     #     would expand later, from closer parents) can mis-prune a doorway
     #     node and strand a query — use with efs comfortably above k.
     beam_prune: str = "best"
+    # Distance-computation strategy for candidate lanes:
+    #   "exact" (default) — every surviving lane fetches its fp32 row and
+    #     computes the exact distance (the classic path; the angle prune
+    #     still applies per `router`).
+    #   "angle" — alias of "exact" that *requires* a pruning router; kept as
+    #     an explicit name for benchmark configs.
+    #   "sq8"   — two-stage: lanes first compute a quantized (uint8 codes,
+    #     4x fewer bytes) estimate + conservative lower bound; lanes whose
+    #     bound beats the pool bound skip the fp32 row entirely, survivors
+    #     enter the pool approximately and are re-ranked exactly only when
+    #     expanded or returned.  Composes with the angle prune when `router`
+    #     prunes (the angle test runs first, on adjacency data alone).
+    #   "both"  — "sq8" + an assertion that a pruning router is configured
+    #     (self-documenting config for the composed setup).
+    estimate: str = "exact"
 
 
-def graph_device_arrays(g: GraphIndex) -> Dict[str, Any]:
+def graph_device_arrays(g: GraphIndex, with_sq8: bool = False) -> Dict[str, Any]:
     """Pack a GraphIndex into device arrays with a sentinel pad row at index N.
 
     Pad-row convention: row N of ``vectors`` (an all-zero vector, norm slot 1)
@@ -102,6 +134,12 @@ def graph_device_arrays(g: GraphIndex) -> Dict[str, Any]:
     at it, dead beam slots expand it (its neighbor list is all-pad), and the
     Pallas gather kernels remap pruned lanes to it so the skipped DMA is
     de-duplicated.  Pool slots holding no candidate carry id N.
+
+    ``with_sq8`` adds the quantized companion tables (same pad-row
+    convention: row N encodes the zero vector).  The default path skips them
+    — exact-only configs shouldn't pay the encode pass or the +25% device
+    memory; ``build_search_fn`` upgrades the cached dict in place the first
+    time an sq8/both config asks (``ensure_sq8_arrays``).
     """
     n, d = g.n, g.dim
     vecs = np.concatenate([g.vectors, np.zeros((1, d), np.float32)], axis=0)
@@ -117,6 +155,8 @@ def graph_device_arrays(g: GraphIndex) -> Dict[str, Any]:
         "entry": jnp.asarray(g.entry_point, jnp.int32),
         "n": n,
     }
+    if with_sq8:
+        ensure_sq8_arrays(g, out)
     # HNSW hierarchy: id->row maps + per-layer adjacency (top..1).
     if g.upper_neighbors:
         pos_maps, layer_nbrs = [], []
@@ -129,6 +169,24 @@ def graph_device_arrays(g: GraphIndex) -> Dict[str, Any]:
         out["upper_pos"] = pos_maps
         out["upper_nbrs"] = layer_nbrs
     return out
+
+
+def ensure_sq8_arrays(g: GraphIndex, arrays: Dict[str, Any]) -> Dict[str, Any]:
+    """Add the SQ8 companion tables to a packed arrays dict (idempotent).
+
+    Grid fit on the real rows; the pad row encodes the zero vector with the
+    same params (its distances are always masked out)."""
+    if "sq8_codes" not in arrays:
+        from repro.quant import sq8 as SQ
+
+        qp = SQ.sq8_train(g.vectors)
+        vecs = np.concatenate(
+            [g.vectors, np.zeros((1, g.dim), np.float32)], axis=0)
+        arrays["sq8_codes"] = jnp.asarray(SQ.sq8_encode(vecs, qp))
+        arrays["sq8_lo"] = jnp.asarray(qp.lo)
+        arrays["sq8_scale"] = jnp.asarray(qp.scale)
+        arrays["sq8_eps"] = jnp.asarray(qp.eps)
+    return arrays
 
 
 def _rank_many(q, X, metric):
@@ -244,12 +302,18 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
     metric, efs, n = cfg.metric, cfg.efs, arrays["n"]
     router, W, engine = cfg.router, cfg.beam_width, cfg.engine
     assert engine in ENGINES, f"unknown engine {engine!r}"
+    assert cfg.estimate in ESTIMATES, f"unknown estimate {cfg.estimate!r}"
     assert 1 <= W <= efs, "beam_width must be in [1, efs]"
     assert cfg.beam_prune in ("best", "all"), \
         f"unknown beam_prune policy {cfg.beam_prune!r}"
-    # pallas pool_merge rides the expanded flag in the id low bit (id*2+exp)
-    assert engine == "jnp" or n < 2 ** 30, \
-        "pallas engines encode ids as id*2+flag in int32: shard below 2^30 " \
+    sq8_on = cfg.estimate in ("sq8", "both")
+    if cfg.estimate in ("angle", "both"):
+        assert router in ("crouting", "crouting_o", "triangle"), \
+            f"estimate={cfg.estimate!r} needs a pruning router, got {router!r}"
+    # pallas pool_merge rides the (approx, expanded) flags in the id low
+    # bits (id*4 + approx*2 + exp)
+    assert engine == "jnp" or n < 2 ** 29, \
+        "pallas engines encode ids as id*4+flags in int32: shard below 2^29 " \
         "vectors or use engine='jnp'"
     B = queries.shape[0]
     M = arrays["neighbors"].shape[1]
@@ -261,6 +325,19 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
 
     nq = (jnp.linalg.norm(queries, axis=1) if metric != "l2"
           else jnp.ones((B,), jnp.float32))
+
+    def _exact_rerank(ids, mask):
+        """Stage-2: masked exact ranking distances for pool entries.  The
+        fp32 row DMA happens HERE (and only here) on the sq8 path; masked
+        lanes resolve to the pad row / +inf."""
+        idx = jnp.where(mask, ids, n).astype(jnp.int32)
+        if use_pallas:
+            eu2 = ops.gather_distance_pruned(
+                idx, (~mask).astype(jnp.int8), queries, arrays["vectors"])
+            r = _eu2_to_rank(eu2, nq[:, None], arrays["norms"][idx], metric)
+        else:
+            r = _rank_tile(queries, arrays["vectors"][idx], metric)
+        return jnp.where(mask, r, jnp.inf)
 
     if cfg.use_hierarchy:
         entry, d_entry, calls0 = jax.vmap(
@@ -275,10 +352,13 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
     pool_d = jnp.full((B, efs), jnp.inf, jnp.float32).at[:, 0].set(d_entry)
     pool_id = jnp.full((B, efs), n, jnp.int32).at[:, 0].set(entry)
     pool_exp = jnp.zeros((B, efs), bool)
+    pool_apx = jnp.zeros((B, efs), bool)   # slot holds a stage-1 estimate
     status = jnp.zeros((B, n + 1), jnp.uint8).at[rows, entry].set(STATUS_VISITED)
 
-    State = (pool_d, pool_id, pool_exp, status, calls0,
+    State = (pool_d, pool_id, pool_exp, pool_apx, status, calls0,
              jnp.zeros((B,), jnp.int32),   # est_calls
+             jnp.zeros((B,), jnp.int32),   # rerank_calls
+             jnp.zeros((B,), jnp.int32),   # sq8_calls
              jnp.zeros((B,), jnp.int32),   # hops
              jnp.zeros((B,), bool),        # done
              jnp.asarray(0, jnp.int32))    # iters
@@ -288,7 +368,8 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
         return jnp.any(~done) & (iters < cfg.max_hops)
 
     def body(s):
-        pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done, iters = s
+        (pool_d, pool_id, pool_exp, pool_apx, status, dcalls, ecalls,
+         rrcalls, sqcalls, hops, done, iters) = s
 
         # --- beam selection: best W unexpanded pool entries per query ------
         cand = (~pool_exp) & (pool_id < n)
@@ -311,6 +392,19 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
                       jnp.take_along_axis(pool_id, beam_idx, axis=1),
                       n).astype(jnp.int32)                      # [B, W]
         dc = jnp.take_along_axis(pool_d, beam_idx, axis=1)      # [B, W]
+        if sq8_on:
+            # stage-2 rerank at expansion: an approx entry selected for the
+            # beam gets its exact distance (and its flag cleared) before its
+            # stored distance is used as d(c, q) for the tile's estimates
+            sel_apx = jnp.take_along_axis(pool_apx, beam_idx, axis=1) \
+                & slot_live
+            dc = jnp.where(sel_apx, _exact_rerank(c, sel_apx), dc)
+            pool_d = pool_d.at[rows[:, None], beam_idx].set(dc)
+            pool_apx = pool_apx.at[rows[:, None], beam_idx].set(
+                jnp.take_along_axis(pool_apx, beam_idx, axis=1) & ~sel_apx)
+            nrr = jnp.sum(sel_apx, axis=1, dtype=jnp.int32)
+            rrcalls = rrcalls + nrr
+            dcalls = dcalls + nrr
         pool_exp = pool_exp.at[rows[:, None], beam_idx].set(
             jnp.take_along_axis(pool_exp, beam_idx, axis=1) | slot_live)
 
@@ -355,7 +449,9 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
         prunes = router in ("crouting", "crouting_o", "triangle")
         ct_eff = 1.0 if router == "triangle" else cos_theta
         rescue = W > 1 and router == "crouting"
-        kernel_prunes = engine == "pallas" and not rescue
+        # with sq8 the fused fp32 kernel never runs, so the angle decision
+        # is made outside it (jnp / crouting_prune — the same f32 math)
+        kernel_prunes = engine == "pallas" and not rescue and not sq8_on
         if prunes:
             try_prune = first & (st == STATUS_UNVISITED) & pool_full[:, None]
             if W > 1 and cfg.beam_prune == "best":
@@ -394,29 +490,60 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
         else:
             compute = first & ~prune
 
-        # --- exact distances (masked; non-compute lanes skip the HBM row
-        # fetch on real TPU) --------------------------------------------------
-        if engine == "pallas":
-            d2eu, prune8 = ops.fused_expand(
-                nbrs, queries, ed, dcq_l, bound2, ct_eff, arrays["vectors"],
-                eval_mask=compute, prune_eligible=try_prune if kernel_prunes
-                else jnp.zeros_like(try_prune))
-            if kernel_prunes:
-                # the kernel both made the prune decision and skipped those
-                # lanes' DMAs (eval ∩ eligible lanes fetch only if unpruned)
-                prune = prune8 != 0
-                compute = compute & ~prune
-            exact = _eu2_to_rank(d2eu, nq[:, None], nx, metric)
-        elif engine == "pallas_unfused":
-            d2eu = ops.gather_distance_pruned(
-                jnp.where(compute, nbrs, n), (~compute).astype(jnp.int8),
-                queries, arrays["vectors"])
-            exact = _eu2_to_rank(d2eu, nq[:, None], nx, metric)
+        # --- distances: stage-1 quantized estimate (sq8) or exact fp32 ------
+        if sq8_on:
+            # stage 1: uint8 code-row gather + dequantized accumulate +
+            # conservative lower bound for EVERY surviving lane — no fp32
+            # row DMA on this path (that is stage 2's job, in _exact_rerank)
+            if use_pallas:
+                ad2, lb2 = ops.sq8_estimate(
+                    nbrs, queries, compute, arrays["sq8_codes"],
+                    arrays["sq8_lo"], arrays["sq8_scale"], arrays["sq8_eps"])
+            else:
+                from repro.quant.sq8 import sq8_dequantize_rows, sq8_estimate
+                xhat = sq8_dequantize_rows(
+                    arrays["sq8_codes"][jnp.where(compute, nbrs, n)],
+                    arrays["sq8_lo"], arrays["sq8_scale"])
+                ad2, lb2 = sq8_estimate(queries, xhat, arrays["sq8_eps"])
+                ad2 = jnp.where(compute, ad2, jnp.inf)
+                lb2 = jnp.where(compute, lb2, jnp.inf)
+            ad_rank = _eu2_to_rank(ad2, nq[:, None], nx, metric)
+            lb_rank = _eu2_to_rank(lb2, nq[:, None], nx, metric)
+            # a lane whose true distance provably cannot beat the pool bound
+            # is discarded without its fp32 row; PRUNED (not VISITED) so a
+            # later encounter may re-estimate it against a tighter bound
+            sq8_skip = compute & pool_full[:, None] \
+                & (lb_rank >= upper[:, None])
+            insert = compute & ~sq8_skip
+            sqcalls = sqcalls + jnp.sum(compute, axis=1, dtype=jnp.int32)
+            new_d = jnp.where(insert, ad_rank, jnp.inf)
         else:
-            gathered = arrays["vectors"][jnp.where(compute, nbrs, n)]
-            exact = _rank_tile(queries, gathered, metric)
-        new_d = jnp.where(compute, exact, jnp.inf)
-        dcalls = dcalls + jnp.sum(compute, axis=1, dtype=jnp.int32)
+            # exact fp32 distances (masked; non-compute lanes skip the HBM
+            # row fetch on real TPU)
+            if engine == "pallas":
+                d2eu, prune8 = ops.fused_expand(
+                    nbrs, queries, ed, dcq_l, bound2, ct_eff,
+                    arrays["vectors"], eval_mask=compute,
+                    prune_eligible=try_prune if kernel_prunes
+                    else jnp.zeros_like(try_prune))
+                if kernel_prunes:
+                    # the kernel both made the prune decision and skipped
+                    # those lanes' DMAs (eval ∩ eligible lanes fetch only if
+                    # unpruned)
+                    prune = prune8 != 0
+                    compute = compute & ~prune
+                exact = _eu2_to_rank(d2eu, nq[:, None], nx, metric)
+            elif engine == "pallas_unfused":
+                d2eu = ops.gather_distance_pruned(
+                    jnp.where(compute, nbrs, n), (~compute).astype(jnp.int8),
+                    queries, arrays["vectors"])
+                exact = _eu2_to_rank(d2eu, nq[:, None], nx, metric)
+            else:
+                gathered = arrays["vectors"][jnp.where(compute, nbrs, n)]
+                exact = _rank_tile(queries, gathered, metric)
+            insert = compute
+            new_d = jnp.where(compute, exact, jnp.inf)
+            dcalls = dcalls + jnp.sum(compute, axis=1, dtype=jnp.int32)
 
         # --- status scatter: only lanes whose status changes write; all
         # other lanes are redirected to the pad column (same-value writes,
@@ -426,40 +553,59 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
             # exact lower bound => discard is permanent (mark visited)
             new_st = jnp.full_like(st, STATUS_VISITED)
         else:
-            new_st = jnp.where(compute, STATUS_VISITED, STATUS_PRUNED
+            new_st = jnp.where(insert, STATUS_VISITED, STATUS_PRUNED
                                ).astype(jnp.uint8)
         pad_val = status[:, n][:, None]
         status = status.at[rows[:, None], jnp.where(change, nbrs, n)].set(
             jnp.where(change, new_st, pad_val))
 
         # --- pool merge (merge-then-truncate == evolving-bound insertion) ---
-        new_id = jnp.where(compute, nbrs, n).astype(jnp.int32)
+        new_id = jnp.where(insert, nbrs, n).astype(jnp.int32)
+        new_apx = insert if sq8_on else jnp.zeros_like(insert)
         if use_pallas:
-            # expanded flags ride the bitonic network in the id low bit
-            enc_pool = pool_id * 2 + pool_exp.astype(jnp.int32)
-            enc_new = new_id * 2
+            # approx + expanded flags ride the bitonic network in the id
+            # low bits
+            enc_pool = pool_id * 4 + pool_apx.astype(jnp.int32) * 2 \
+                + pool_exp.astype(jnp.int32)
+            enc_new = new_id * 4 + new_apx.astype(jnp.int32) * 2
             pool_d, enc = ops.pool_merge(pool_d, enc_pool, new_d, enc_new)
-            pool_id = enc // 2
+            pool_id = enc // 4
+            pool_apx = (enc & 2) == 2
             pool_exp = (enc & 1) == 1
         else:
             md = jnp.concatenate([pool_d, new_d], axis=1)
             mi = jnp.concatenate([pool_id, new_id], axis=1)
-            me = jnp.concatenate([pool_exp, jnp.zeros_like(compute)], axis=1)
+            me = jnp.concatenate([pool_exp, jnp.zeros_like(insert)], axis=1)
+            ma = jnp.concatenate([pool_apx, new_apx], axis=1)
             # lexicographic (dist, id) — the SAME tie-break as the pallas
             # pool_merge network, so the engines agree even on exact ties
             order = jnp.lexsort((mi, md), axis=1)[:, :efs]
             pool_d = jnp.take_along_axis(md, order, axis=1)
             pool_id = jnp.take_along_axis(mi, order, axis=1)
             pool_exp = jnp.take_along_axis(me, order, axis=1)
+            pool_apx = jnp.take_along_axis(ma, order, axis=1)
 
         hops = hops + jnp.sum(slot_live, axis=1, dtype=jnp.int32)
-        return (pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops,
-                done, iters + 1)
+        return (pool_d, pool_id, pool_exp, pool_apx, status, dcalls, ecalls,
+                rrcalls, sqcalls, hops, done, iters + 1)
 
-    pool_d, pool_id, pool_exp, status, dcalls, ecalls, hops, done, iters = \
-        jax.lax.while_loop(cond, body, State)
+    (pool_d, pool_id, pool_exp, pool_apx, status, dcalls, ecalls, rrcalls,
+     sqcalls, hops, done, iters) = jax.lax.while_loop(cond, body, State)
+    if sq8_on:
+        # stage-2 final rerank: every approx survivor still in the pool gets
+        # its exact distance before results can be returned; entries
+        # displaced earlier never paid their fp32 fetch
+        mask = pool_apx & (pool_id < n)
+        pool_d = jnp.where(mask, _exact_rerank(pool_id, mask), pool_d)
+        nrr = jnp.sum(mask, axis=1, dtype=jnp.int32)
+        rrcalls = rrcalls + nrr
+        dcalls = dcalls + nrr
+        order = jnp.lexsort((pool_id, pool_d), axis=1)
+        pool_d = jnp.take_along_axis(pool_d, order, axis=1)
+        pool_id = jnp.take_along_axis(pool_id, order, axis=1)
     return SearchResult(ids=pool_id, dists=pool_d, dist_calls=dcalls,
-                        est_calls=ecalls, hops=hops, iters=iters)
+                        est_calls=ecalls, hops=hops, iters=iters,
+                        rerank_calls=rrcalls, sq8_calls=sqcalls)
 
 
 # --- compiled-engine cache ---------------------------------------------------
@@ -476,9 +622,20 @@ _ENGINE_CACHE_MAX = 16
 
 
 def _purge_dead_cache_entries():
-    for cache in (_ARRAYS_CACHE, _ENGINE_CACHE):
-        for k in [k for k, v in cache.items() if v[0]() is None]:
-            del cache[k]
+    """Drop every cache entry tied to a collected graph.
+
+    The compiled-fn cache needs BOTH checks: its own weakref, and that the
+    graph id its key references still names a live arrays-cache entry — a
+    stale (graph_id, cfg) entry would otherwise keep the fp32 + SQ8 device
+    tables pinned (the jitted fn closes over them) long after the index is
+    gone and its id has been reused (regression-tested in
+    tests/test_engine_equivalence.py::test_engine_cache_does_not_grow...).
+    """
+    for k in [k for k, v in _ARRAYS_CACHE.items() if v[0]() is None]:
+        del _ARRAYS_CACHE[k]
+    for k in [k for k, v in _ENGINE_CACHE.items()
+              if v[0]() is None or k[0] not in _ARRAYS_CACHE]:
+        del _ENGINE_CACHE[k]
 
 
 def _graph_arrays_cached(g: GraphIndex):
@@ -507,6 +664,10 @@ def build_search_fn(g: GraphIndex, cfg: EngineConfig):
         del _ENGINE_CACHE[key]
 
     arrays = _graph_arrays_cached(g)
+    if cfg.estimate in ("sq8", "both"):
+        # lazily upgrade the (shared) cached dict: exact-only graphs never
+        # pay the encode pass or the extra device tables
+        ensure_sq8_arrays(g, arrays)
 
     @jax.jit
     def run(queries, cos_theta):

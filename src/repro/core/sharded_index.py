@@ -31,6 +31,7 @@ from repro.core import distances as D
 from repro.core.angles import sample_angle_profile
 from repro.core.graph import GraphIndex
 from repro.core.search import EngineConfig, _search_batch
+from repro.quant import sq8 as SQ
 
 
 @dataclasses.dataclass
@@ -46,6 +47,11 @@ class ShardedIndexArrays:
     ns: int                  # local shard capacity (excl. pad row)
     metric: str
     cos_theta: float
+    # SQ8 companion tables (per-shard grids; EngineConfig.estimate="sq8")
+    sq8_codes: np.ndarray = None   # [S, ns+1, d] uint8
+    sq8_lo: np.ndarray = None      # [S, d]
+    sq8_scale: np.ndarray = None   # [S, d]
+    sq8_eps: np.ndarray = None     # [S, d]
 
 
 def shard_dataset(base: np.ndarray, n_shards: int, metric: str = "l2",
@@ -79,6 +85,10 @@ def shard_dataset(base: np.ndarray, n_shards: int, metric: str = "l2",
     ed = np.full((n_shards, ns + 1, m), np.inf, np.float32)
     norms = np.ones((n_shards, ns + 1), np.float32)
     entries = np.zeros((n_shards,), np.int32)
+    codes = np.zeros((n_shards, ns + 1, d), np.uint8)
+    sq_lo = np.zeros((n_shards, d), np.float32)
+    sq_scale = np.full((n_shards, d), 1e-12, np.float32)
+    sq_eps = np.zeros((n_shards, d), np.float32)
     for s, g in enumerate(graphs):
         k = g.n
         vecs[s, :k] = g.vectors
@@ -89,10 +99,31 @@ def shard_dataset(base: np.ndarray, n_shards: int, metric: str = "l2",
         ed[s, :k, : g.max_degree] = g.edge_eu_dist
         norms[s, :k] = g.norms if g.norms is not None else np.linalg.norm(g.vectors, axis=1)
         entries[s] = g.entry_point
+        # per-shard SQ8 grid (fit on the shard's real rows; pad rows encode
+        # the zero vector and are always masked)
+        qp = SQ.sq8_train(g.vectors)
+        codes[s] = SQ.sq8_encode(vecs[s], qp)
+        sq_lo[s], sq_scale[s], sq_eps[s] = qp.lo, qp.scale, qp.eps
     return ShardedIndexArrays(
         vectors=vecs, neighbors=nbrs, edge_eu=ed, norms=norms, entries=entries,
         offsets=np.asarray(offsets, np.int64), ns=ns, metric=metric,
-        cos_theta=float(np.median(cos_thetas)))
+        cos_theta=float(np.median(cos_thetas)),
+        sq8_codes=codes, sq8_lo=sq_lo, sq8_scale=sq_scale, sq8_eps=sq_eps)
+
+
+def _backfill_sq8(arrays: ShardedIndexArrays) -> ShardedIndexArrays:
+    """Fill missing SQ8 tables on a pre-existing ShardedIndexArrays."""
+    S, _, d = arrays.vectors.shape
+    codes = np.zeros(arrays.vectors.shape, np.uint8)
+    lo = np.zeros((S, d), np.float32)
+    scale = np.full((S, d), 1e-12, np.float32)
+    eps = np.zeros((S, d), np.float32)
+    for s in range(S):
+        qp = SQ.sq8_train(arrays.vectors[s])
+        codes[s] = SQ.sq8_encode(arrays.vectors[s], qp)
+        lo[s], scale[s], eps[s] = qp.lo, qp.scale, qp.eps
+    return dataclasses.replace(arrays, sq8_codes=codes, sq8_lo=lo,
+                               sq8_scale=scale, sq8_eps=eps)
 
 
 def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
@@ -105,12 +136,15 @@ def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
     axes = tuple(shard_axes or mesh.axis_names)
 
     def local_search(vectors, neighbors, edge_eu, norms, entries, offsets,
+                     sq8_codes, sq8_lo, sq8_scale, sq8_eps,
                      queries, cos_theta):
         # shard_map gives the local shard with a leading axis of size 1
         arrays = {
             "vectors": vectors[0], "neighbors": neighbors[0],
             "edge_eu": edge_eu[0], "norms": norms[0],
             "entry": entries[0], "n": ns,
+            "sq8_codes": sq8_codes[0], "sq8_lo": sq8_lo[0],
+            "sq8_scale": sq8_scale[0], "sq8_eps": sq8_eps[0],
         }
         res = _search_batch(arrays, queries, cos_theta, cfg)
         loc_d, loc_i = res.dists[:, :k], res.ids[:, :k]
@@ -132,13 +166,12 @@ def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
 
     serve = shard_map(
         local_search, mesh=mesh,
-        in_specs=(pspec_data, pspec_data, pspec_data, pspec_data, pspec_data,
-                  pspec_data, pspec_rep, pspec_rep),
+        in_specs=(pspec_data,) * 10 + (pspec_rep, pspec_rep),
         out_specs=(pspec_rep, pspec_rep, pspec_rep),
         check_rep=False,
     )
     in_sh = tuple(NamedSharding(mesh, s) for s in
-                  (pspec_data,) * 6 + (pspec_rep, pspec_rep))
+                  (pspec_data,) * 10 + (pspec_rep, pspec_rep))
     out_sh = tuple(NamedSharding(mesh, s) for s in (pspec_rep,) * 3)
     return serve, in_sh, out_sh
 
@@ -149,21 +182,30 @@ class ShardedAnnIndex:
     def __init__(self, arrays: ShardedIndexArrays, mesh: Mesh,
                  efs: int = 100, k: int = 10, router: str = "crouting",
                  max_hops: int = 2048, beam_width: int = 1,
-                 engine: str = "jnp", beam_prune: str = "best"):
+                 engine: str = "jnp", beam_prune: str = "best",
+                 estimate: str = "exact"):
         self.arrays = arrays
         self.mesh = mesh
         self.k = k
         self.cfg = EngineConfig(efs=efs, router=router, metric=arrays.metric,
                                 max_hops=max_hops, use_hierarchy=False,
                                 beam_width=beam_width, engine=engine,
-                                beam_prune=beam_prune)
+                                beam_prune=beam_prune, estimate=estimate)
+        if arrays.sq8_codes is None:
+            # arrays predating the SQ8 tables (direct construction, old
+            # persisted shards): backfill per-shard grids from the stacked
+            # vectors — the zero pad rows only widen the grid, so the
+            # lower-bound contract is unaffected
+            arrays = _backfill_sq8(arrays)
+            self.arrays = arrays
         serve, in_sh, _ = make_serve_step(mesh, self.cfg, arrays.ns, k)
         self._serve = jax.jit(serve, in_shardings=in_sh)
         dev = lambda a, sh: jax.device_put(a, sh)
         self._placed = tuple(
             dev(getattr(arrays, f), s) for f, s in
-            zip(("vectors", "neighbors", "edge_eu", "norms", "entries", "offsets"),
-                in_sh[:6]))
+            zip(("vectors", "neighbors", "edge_eu", "norms", "entries",
+                 "offsets", "sq8_codes", "sq8_lo", "sq8_scale", "sq8_eps"),
+                in_sh[:10]))
 
     def search(self, queries: np.ndarray, cos_theta: Optional[float] = None):
         q = D.preprocess_vectors(np.ascontiguousarray(queries, np.float32),

@@ -101,6 +101,26 @@ def pool_merge(pool_d, pool_i, new_d, new_i, bb: int = 8, interpret=None):
     return d[:B], i[:B]
 
 
+def sq8_estimate(nbrs, queries, eval_mask, codes, lo, scale, eps,
+                 interpret=None):
+    """Stage-1 quantized distance estimate + conservative lower bound over a
+    neighbor tile (two-stage engine, core/search.py).
+
+    nbrs [B, L] rows of the uint8 code table; lanes with eval_mask == 0 (or
+    out-of-range ids) skip the code-row DMA and report +inf for both
+    outputs.  Returns (ad2, lb2) in squared-Euclidean space.
+    """
+    from repro.kernels.sq8_distance import sq8_distance_pallas
+    interpret = _default_interpret() if interpret is None else interpret
+    nbrs = nbrs.astype(jnp.int32)
+    # same guard as fused_expand: the kernel DMAs row indices unchecked
+    in_range = (nbrs < codes.shape[0]).astype(jnp.int8)
+    eval_mask = (in_range if eval_mask is None
+                 else eval_mask.astype(jnp.int8) & in_range)
+    return sq8_distance_pallas(nbrs, queries.astype(jnp.float32), lo, scale,
+                               eps, eval_mask, codes, interpret=interpret)
+
+
 def fused_expand(nbrs, queries, ed, dcq, bound2, cos_theta, table,
                  eval_mask=None, prune_eligible=None, interpret=None):
     """Fused CRouting expansion: estimate + prune + conditional gather +

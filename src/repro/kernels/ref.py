@@ -43,6 +43,21 @@ def pool_merge_ref(pool_d, pool_i, new_d, new_i):
             jnp.take_along_axis(i, order, axis=1)[:, :P])
 
 
+def sq8_estimate_ref(nbrs, queries, eval_mask, codes, lo, scale, eps):
+    """Oracle for the SQ8 stage-1 kernel: identical bound math via
+    repro.quant.sq8 (the single quantization implementation)."""
+    from repro.quant.sq8 import sq8_dequantize_rows, sq8_estimate
+
+    n = codes.shape[0]
+    in_range = nbrs < n
+    evalm = in_range if eval_mask is None else ((eval_mask != 0) & in_range)
+    safe = jnp.where(in_range, nbrs, n - 1)
+    xhat = sq8_dequantize_rows(codes[safe], lo, scale)      # [B, L, d]
+    ad2, lb2 = sq8_estimate(queries.astype(jnp.float32), xhat, eps)
+    inf = jnp.float32(jnp.inf)
+    return jnp.where(evalm, ad2, inf), jnp.where(evalm, lb2, inf)
+
+
 def fused_expand_ref(nbrs, queries, ed, dcq, bound2, cos_theta, table,
                      eval_mask=None, prune_eligible=None):
     """Oracle for the fused CRouting expansion kernel (beam-tile general)."""

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: SQ8 quantized distance estimate + lower bound.
+
+Stage 1 of the two-stage distance engine (core/search.py,
+``EngineConfig.estimate``): for each candidate lane the kernel DMAs the
+neighbor's **uint8 code row** (d bytes — 4x fewer than the fp32 row the
+exact path fetches), dequantizes it against the per-dimension affine grid
+and emits
+
+    ad2[m] = |q - xhat|^2                     (the quantized estimate)
+    lb2[m] = max(ad2 - 2 * sum|q - xhat|*eps, 0)   (conservative lower bound)
+
+per lane — the identical f32 expression as ``repro.quant.sq8.sq8_estimate``
+(the jnp oracle), so stage-1 skip decisions agree bit-for-bit between the
+jnp and Pallas engines.  Lanes with ``eval_mask == 0`` skip the code-row DMA
+entirely (lax.cond, like fused_expand's conditional fetch) and report +inf.
+
+Grid: (B,).  Per-step VMEM: q/lo/scale/eps (1, d) rows + one code row + the
+L-wide outputs — tiny; the code table stays in ANY/HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sq8_kernel(nbr_ref, q_ref, lo_ref, scale_ref, eps_ref, eval_ref,
+                codes_ref, ad2_ref, lb2_ref, *, m_slots: int):
+    b = pl.program_id(0)
+    q = q_ref[0, :].astype(jnp.float32)                # [d]
+    lo = lo_ref[0, :]                                  # [d]
+    scale = scale_ref[0, :]                            # [d]
+    eps = eps_ref[0, :]                                # [d]
+    evalm = eval_ref[0, :] != 0                        # [L]
+
+    def per_slot(m, _):
+        def fetch(_):
+            row = pl.load(codes_ref,
+                          (pl.dslice(nbr_ref[b, m], 1), slice(None)))
+            xhat = lo + row[0, :].astype(jnp.float32) * scale
+            delta = q - xhat
+            ad2 = jnp.sum(delta * delta)
+            slack = 2.0 * jnp.sum(jnp.abs(delta) * eps)
+            return ad2, jnp.maximum(ad2 - slack, 0.0)
+
+        def skip(_):
+            return jnp.float32(jnp.inf), jnp.float32(jnp.inf)
+
+        ad2, lb2 = jax.lax.cond(evalm[m], fetch, skip, operand=0)
+        ad2_ref[0, m] = ad2
+        lb2_ref[0, m] = lb2
+        return 0
+
+    jax.lax.fori_loop(0, m_slots, per_slot, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sq8_distance_pallas(nbrs, queries, lo, scale, eps, eval_mask, codes, *,
+                        interpret: bool = True):
+    """nbrs [B,L] int32, queries [B,d] f32, lo/scale/eps [d] f32,
+    eval_mask [B,L] int8, codes [N,d] uint8
+    -> (ad2 [B,L] f32, lb2 [B,L] f32), +inf for masked lanes."""
+    B, L = nbrs.shape
+    d = queries.shape[1]
+    lo2 = lo.reshape(1, d).astype(jnp.float32)
+    scale2 = scale.reshape(1, d).astype(jnp.float32)
+    eps2 = eps.reshape(1, d).astype(jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, idx: (b, 0)),     # query row
+            pl.BlockSpec((1, d), lambda b, idx: (0, 0)),     # grid lo
+            pl.BlockSpec((1, d), lambda b, idx: (0, 0)),     # grid scale
+            pl.BlockSpec((1, d), lambda b, idx: (0, 0)),     # error radius
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),     # eval mask
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # codes/HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),
+            pl.BlockSpec((1, L), lambda b, idx: (b, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_sq8_kernel, m_slots=L),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, L), jnp.float32),
+                   jax.ShapeDtypeStruct((B, L), jnp.float32)],
+        interpret=interpret,
+    )(nbrs, queries, lo2, scale2, eps2, eval_mask, codes)

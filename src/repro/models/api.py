@@ -296,6 +296,10 @@ def _anns_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         _sds((n_shards, ns + 1), jnp.float32),
         _sds((n_shards,), jnp.int32),
         _sds((n_shards,), jnp.int32),
+        _sds((n_shards, ns + 1, dim), jnp.uint8),   # SQ8 code table
+        _sds((n_shards, dim), jnp.float32),         # SQ8 grid lo
+        _sds((n_shards, dim), jnp.float32),         # SQ8 grid scale
+        _sds((n_shards, dim), jnp.float32),         # SQ8 error radius
         _sds((B, dim), jnp.float32),
         _sds((), jnp.float32),
     )

@@ -1,0 +1,124 @@
+"""Scalar quantization: SQ8 table codes + distance bounds, int8 helpers.
+
+This module owns every int8 quantizer in the repo:
+
+* **SQ8 (per-dimension affine, uint8)** — the companion representation of the
+  base-vector table used by the two-stage distance engine
+  (``EngineConfig.estimate`` in core/search.py).  Each dimension j stores an
+  affine grid ``x ~ lo[j] + code * scale[j]`` with ``code in [0, 255]``, so a
+  row costs d bytes instead of 4d — the stage-1 estimate reads 4x fewer HBM
+  bytes than the fp32 row DMA it replaces.
+
+* **Symmetric per-tensor int8** — ``quantize_int8``/``dequantize_int8``
+  (amax/127 scale, optional stochastic rounding), used by gradient
+  compression (train/compress.py re-exports them from here).
+
+SQ8 error/bound math (the engine's correctness contract, property-tested in
+tests/test_quant.py):
+
+With ``xhat = lo + code * scale`` the reconstruction error per dimension is
+``|x_j - xhat_j| <= eps_j`` where ``eps_j = scale_j / 2`` (round-to-nearest)
+plus a small float-arithmetic slack.  Writing the true squared Euclidean
+distance through ``x = xhat + e``:
+
+    d2(q, x) = |q - xhat|^2 - 2 <q - xhat, e> + |e|^2
+             >= ad2 - 2 * sum_j |q_j - xhat_j| * eps_j          =: lb2
+
+because ``|e|^2 >= 0`` and ``|<q - xhat, e>| <= sum_j |delta_j| eps_j``.
+``lb2`` is therefore a TRUE lower bound on the squared distance: a candidate
+whose ``lb2`` already exceeds the pool bound can skip its fp32 row fetch
+without (bound-level) risk.  The per-dimension sum is tighter than the
+Cauchy-Schwarz ``|delta| * |eps|`` form and costs one extra VPU accumulate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Relative safety margin on the per-dimension error radius: round-to-nearest
+# guarantees scale/2 in real arithmetic; encode/decode/bound evaluation in
+# float32 adds ulp-level noise, covered many times over by 2^-10.
+EPS_SLACK = 1.0 + 2.0 ** -10
+
+
+@dataclasses.dataclass(frozen=True)
+class SQ8Params:
+    """Per-dimension affine grid: x ~ lo + code * scale, code in [0, 255]."""
+
+    lo: np.ndarray      # [d] float32 grid origin (per-dimension min)
+    scale: np.ndarray   # [d] float32 grid step, strictly positive
+    eps: np.ndarray     # [d] float32 error radius = scale/2 * EPS_SLACK
+
+
+def sq8_train(x: np.ndarray) -> SQ8Params:
+    """Fit the per-dimension grid to the data (min/max range)."""
+    x = np.asarray(x, np.float32)
+    lo = x.min(axis=0)
+    hi = x.max(axis=0)
+    # degenerate (constant) dimensions get a tiny step so scale stays > 0
+    scale = np.maximum((hi - lo) / 255.0, 1e-12).astype(np.float32)
+    eps = (0.5 * scale * EPS_SLACK).astype(np.float32)
+    return SQ8Params(lo=lo.astype(np.float32), scale=scale, eps=eps)
+
+
+def sq8_encode(x: np.ndarray, params: SQ8Params) -> np.ndarray:
+    """Rows -> uint8 codes.  Rows outside the trained range clip (their
+    reconstruction error exceeds eps — only feed rows the grid was fit on,
+    plus sentinel pad rows whose distances are always masked)."""
+    x = np.asarray(x, np.float32)
+    q = np.rint((x - params.lo[None, :]) / params.scale[None, :])
+    return np.clip(q, 0, 255).astype(np.uint8)
+
+
+def sq8_decode(codes: np.ndarray, params: SQ8Params) -> np.ndarray:
+    codes = np.asarray(codes)
+    return (params.lo[None, :]
+            + codes.astype(np.float32) * params.scale[None, :])
+
+
+def sq8_estimate(queries, xhat, eps) -> Tuple[jax.Array, jax.Array]:
+    """Approximate squared-Euclidean distance + conservative lower bound.
+
+    queries [B, d] f32, xhat [B, L, d] f32 (dequantized rows), eps [d] f32
+    -> (ad2 [B, L], lb2 [B, L]).  This is THE bound expression — the Pallas
+    kernel (kernels/sq8_distance.py) evaluates the identical f32 math per
+    lane, so engine decisions agree bit-for-bit across engines."""
+    delta = queries[:, None, :] - xhat
+    ad2 = jnp.sum(delta * delta, axis=-1)
+    slack = 2.0 * jnp.sum(jnp.abs(delta) * eps[None, None, :], axis=-1)
+    lb2 = jnp.maximum(ad2 - slack, 0.0)
+    return ad2, lb2
+
+
+def sq8_dequantize_rows(codes, lo, scale):
+    """uint8 codes [..., d] -> f32 rows (jnp, device-side)."""
+    return lo + codes.astype(jnp.float32) * scale
+
+
+# --------------------------------------------------------------------------
+# Symmetric per-tensor int8 (gradient compression; train/compress.py
+# re-exports these so there is exactly one int8 quantizer implementation).
+# --------------------------------------------------------------------------
+def quantize_int8_with_scale(x, scale, key=None):
+    """x / scale -> int8 in [-127, 127]; stochastic rounding when key given."""
+    y = x / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+def quantize_int8(x, key=None):
+    """Returns (q int8, scale) with per-tensor amax/127 scale."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    return quantize_int8_with_scale(x, scale, key), scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -15,21 +15,10 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-
-def quantize_int8(x, key=None):
-    """Returns (q int8, scale). Stochastic rounding when key given."""
-    amax = jnp.max(jnp.abs(x)) + 1e-12
-    scale = amax / 127.0
-    y = x / scale
-    if key is not None:
-        y = jnp.floor(y + jax.random.uniform(key, y.shape))
-    else:
-        y = jnp.round(y)
-    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
-
-
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+# The int8 quantizer lives in repro.quant.sq8 (one implementation repo-wide,
+# shared with the SQ8 base-vector tables); re-exported here for callers.
+from repro.quant.sq8 import (dequantize_int8, quantize_int8,  # noqa: F401
+                             quantize_int8_with_scale)
 
 
 def compress_tree(grads, key) -> Tuple[Any, Any]:
@@ -58,8 +47,7 @@ def compressed_psum(grads, axis_name, key):
         x = l.astype(jnp.float32)
         amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name) + 1e-12
         scale = amax / 127.0
-        y = jnp.floor(x / scale + jax.random.uniform(k, x.shape))
-        y = jnp.clip(y, -127, 127)
+        y = quantize_int8_with_scale(x, scale, k).astype(jnp.float32)
         red = jax.lax.psum(y, axis_name)        # int-valued f32: exact sum
         out.append(red * scale)
     return jax.tree_util.tree_unflatten(treedef, out)

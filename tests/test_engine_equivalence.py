@@ -100,6 +100,8 @@ def _assert_engines_match(g, queries, ct, cfg_jnp, cfg_pallas):
     # kernel path computes exactly the same set of exact distances
     assert (np.asarray(b.dist_calls) == np.asarray(a.dist_calls)).all()
     assert (np.asarray(b.est_calls) == np.asarray(a.est_calls)).all()
+    assert (np.asarray(b.rerank_calls) == np.asarray(a.rerank_calls)).all()
+    assert (np.asarray(b.sq8_calls) == np.asarray(a.sq8_calls)).all()
     assert int(b.iters) == int(a.iters)
 
 
@@ -179,6 +181,31 @@ def test_pallas_unfused_engine_matches_jnp(tiny_graph):
                      engine="pallas_unfused"))
 
 
+@pytest.mark.parametrize("router,estimate,W", [("none", "sq8", 1),
+                                               ("crouting", "sq8", 4),
+                                               ("crouting", "both", 4)])
+def test_pallas_engine_matches_jnp_sq8(tiny_graph, router, estimate, W):
+    """Two-stage quantized path: the sq8_distance kernel + gather reranks
+    must reproduce the jnp engine's pools, counters and approx-flag
+    bookkeeping exactly."""
+    ds, g, ct = tiny_graph
+    _assert_engines_match(
+        g, ds.queries, ct,
+        EngineConfig(efs=24, router=router, estimate=estimate, beam_width=W),
+        EngineConfig(efs=24, router=router, estimate=estimate, beam_width=W,
+                     engine="pallas"))
+
+
+def test_pallas_unfused_engine_matches_jnp_sq8(tiny_graph):
+    ds, g, ct = tiny_graph
+    _assert_engines_match(
+        g, ds.queries[:4], ct,
+        EngineConfig(efs=16, router="crouting", estimate="both",
+                     beam_width=2),
+        EngineConfig(efs=16, router="crouting", estimate="both", beam_width=2,
+                     engine="pallas_unfused"))
+
+
 def test_beam_cuts_iterations_without_recall_loss(small_ds, hnsw_index,
                                                   ground_truth):
     """Acceptance: hop-loop iteration count drops ~beam_width x at equal
@@ -249,3 +276,34 @@ def test_build_search_fn_caches_compiled_engine(hnsw_index):
     assert fn1 is fn2 and arrays1 is arrays2
     _, fn3 = build_search_fn(hnsw_index, EngineConfig(efs=13, router="none"))
     assert fn3 is not fn1
+
+
+def test_engine_cache_does_not_grow_across_rebuilt_indexes():
+    """Regression (ISSUE 3): rebuilding an index must not accumulate dead
+    entries in either engine cache — a stale compiled-fn entry pins the
+    graph's fp32 + SQ8 device tables."""
+    import gc
+
+    from repro.core.hnsw import build_hnsw
+    from repro.core.search import (_ARRAYS_CACHE, _ENGINE_CACHE,
+                                   _purge_dead_cache_entries)
+    from repro.data.vectors import make_dataset
+
+    ds = make_dataset(n_base=300, n_query=2, dim=16, n_clusters=6, seed=1)
+    baseline_arrays = len(_ARRAYS_CACHE)
+    baseline_engine = len(_ENGINE_CACHE)
+    for i in range(6):
+        g = build_hnsw(ds.base, m=6, efc=24, seed=i)
+        # two configs per rebuild: both compiled-fn entries must die with g
+        search_batch(g, ds.queries, EngineConfig(efs=12, router="none"))
+        search_batch(g, ds.queries, EngineConfig(efs=12, router="crouting"))
+        del g
+        gc.collect()
+        assert len(_ARRAYS_CACHE) <= baseline_arrays + 1
+        assert len(_ENGINE_CACHE) <= baseline_engine + 2
+    # after the last graph dies, a purge leaves nothing of this test behind
+    _purge_dead_cache_entries()
+    assert len(_ARRAYS_CACHE) <= baseline_arrays
+    assert len(_ENGINE_CACHE) <= baseline_engine
+    # and a compiled-fn entry never outlives its arrays-cache twin
+    assert all(k[0] in _ARRAYS_CACHE for k in _ENGINE_CACHE)

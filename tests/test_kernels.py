@@ -149,6 +149,63 @@ def test_gather_distance_pruned_uses_pad_row_sentinel():
     np.testing.assert_allclose(out[~m], exp[~m], rtol=1e-5, atol=1e-5)
 
 
+def _sq8_fixture(b, m, n, d, seed=0):
+    from repro.quant import sq8 as SQ
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    p = SQ.sq8_train(x)
+    codes = jnp.asarray(SQ.sq8_encode(x, p))
+    nbrs = jnp.asarray(rng.integers(0, n + 2, size=(b, m)), jnp.int32)
+    qs = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    evalm = jnp.asarray(rng.integers(0, 2, size=(b, m)), jnp.int8)
+    return (nbrs, qs, evalm, codes, jnp.asarray(p.lo), jnp.asarray(p.scale),
+            jnp.asarray(p.eps))
+
+
+@pytest.mark.parametrize("b,m,n,d", [(3, 8, 100, 16), (5, 16, 400, 64),
+                                     (2, 33, 128, 128)])
+def test_sq8_estimate_kernel_matches_oracle(b, m, n, d):
+    """Stage-1 SQ8 kernel (uint8 row gather + dequantized accumulate +
+    lower-bound emit) == the repro.quant.sq8 oracle, bit-for-bit masks."""
+    args = _sq8_fixture(b, m, n, d, seed=b)
+    d1, l1 = ops.sq8_estimate(*args)
+    d2, l2 = ref.sq8_estimate_ref(*args)
+    fin = np.isfinite(np.asarray(d2))
+    assert (np.isfinite(np.asarray(d1)) == fin).all()
+    np.testing.assert_allclose(np.asarray(d1)[fin], np.asarray(d2)[fin],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1)[fin], np.asarray(l2)[fin],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sq8_estimate_masked_lanes_report_inf():
+    nbrs, qs, _, codes, lo, scale, eps = _sq8_fixture(4, 12, 64, 32)
+    evalm = jnp.zeros((4, 12), jnp.int8).at[:, ::3].set(1)
+    d1, l1 = ops.sq8_estimate(nbrs, qs, evalm, codes, lo, scale, eps)
+    dead = ~(np.asarray(evalm) != 0) | ~(np.asarray(nbrs) < 64)
+    assert np.isinf(np.asarray(d1)[dead]).all()
+    assert np.isinf(np.asarray(l1)[dead]).all()
+
+
+def test_sq8_estimate_lower_bound_holds_on_true_rows():
+    """lb2 from the kernel never exceeds the true fp32 distance."""
+    from repro.quant import sq8 as SQ
+
+    rng = np.random.default_rng(5)
+    n, d, b, m = 150, 48, 4, 20
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    p = SQ.sq8_train(x)
+    codes = jnp.asarray(SQ.sq8_encode(x, p))
+    nbrs = jnp.asarray(rng.integers(0, n, size=(b, m)), jnp.int32)
+    qs = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    _, lb2 = ops.sq8_estimate(nbrs, qs, jnp.ones((b, m), jnp.int8), codes,
+                              jnp.asarray(p.lo), jnp.asarray(p.scale),
+                              jnp.asarray(p.eps))
+    true = np.asarray(ref.gather_distance_ref(nbrs, qs, jnp.asarray(x)))
+    assert (np.asarray(lb2) <= true + 1e-4 * (1 + true)).all()
+
+
 def test_pool_merge_with_inf_padding():
     pd = jnp.asarray([[0.1, 0.5, jnp.inf, jnp.inf]], jnp.float32)
     pi = jnp.asarray([[3, 7, -1, -1]], jnp.int32)

@@ -1,0 +1,157 @@
+"""SQ8 scalar quantization: bound soundness, roundtrip error, the two-stage
+engine's recall floor, and the single-implementation contract with
+train/compress.py."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import sq8 as SQ
+
+RNG = np.random.default_rng(7)
+
+
+# --------------------------------------------------------------------------
+# encode/decode + bound math
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,scale_kind", [(300, 16, "unit"),
+                                            (200, 64, "wide"),
+                                            (128, 128, "skewed")])
+def test_sq8_roundtrip_error_within_eps(n, d, scale_kind):
+    x = RNG.normal(size=(n, d)).astype(np.float32)
+    if scale_kind == "wide":
+        x *= 50.0
+    elif scale_kind == "skewed":
+        x *= np.geomspace(1e-3, 1e3, d).astype(np.float32)[None, :]
+    p = SQ.sq8_train(x)
+    xhat = SQ.sq8_decode(SQ.sq8_encode(x, p), p)
+    assert (np.abs(x - xhat) <= p.eps[None, :]).all()
+
+
+def test_sq8_constant_dimension_is_exactly_reconstructed():
+    x = RNG.normal(size=(50, 8)).astype(np.float32)
+    x[:, 3] = 2.5
+    p = SQ.sq8_train(x)
+    xhat = SQ.sq8_decode(SQ.sq8_encode(x, p), p)
+    np.testing.assert_allclose(xhat[:, 3], 2.5, atol=1e-5)
+
+
+def test_sq8_lower_bound_never_exceeds_true_distance():
+    """Property (the engine's skip-safety contract): for random tables,
+    grids and queries, lb2 <= true squared distance — always."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        n, d = 200, int(rng.integers(4, 160))
+        spread = 10.0 ** rng.uniform(-2, 2)
+        x = (rng.normal(size=(n, d)) * spread).astype(np.float32)
+        q = (rng.normal(size=(8, d)) * spread).astype(np.float32)
+        p = SQ.sq8_train(x)
+        xhat = SQ.sq8_decode(SQ.sq8_encode(x, p), p)
+        rows = jnp.asarray(np.broadcast_to(xhat[None], (8, n, d)))
+        ad2, lb2 = SQ.sq8_estimate(jnp.asarray(q), rows, jnp.asarray(p.eps))
+        true_d2 = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        lb2 = np.asarray(lb2)
+        assert (lb2 <= true_d2 + 1e-4 * (1.0 + true_d2)).all(), \
+            (seed, float((lb2 - true_d2).max()))
+
+
+def test_sq8_estimate_tracks_true_distance():
+    """The stage-1 estimate itself (not just the bound) must be tight: the
+    relative error of ad2 stays far below the efs-level slack the two-stage
+    engine tolerates."""
+    x = RNG.normal(size=(500, 96)).astype(np.float32)
+    q = RNG.normal(size=(16, 96)).astype(np.float32)
+    p = SQ.sq8_train(x)
+    xhat = SQ.sq8_decode(SQ.sq8_encode(x, p), p)
+    rows = jnp.asarray(np.broadcast_to(xhat[None], (16, 500, 96)))
+    ad2, _ = SQ.sq8_estimate(jnp.asarray(q), rows, jnp.asarray(p.eps))
+    true_d2 = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    rel = np.abs(np.asarray(ad2) - true_d2) / (true_d2 + 1e-9)
+    assert np.median(rel) < 5e-3 and rel.max() < 5e-2
+
+
+# --------------------------------------------------------------------------
+# symmetric int8 (the gradient-compression quantizer now lives here)
+# --------------------------------------------------------------------------
+def test_symmetric_int8_roundtrip():
+    x = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32) * 3.0
+    q, scale = SQ.quantize_int8(x)
+    err = np.abs(np.asarray(SQ.dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_compress_reexports_are_the_same_functions():
+    """train/compress.py must not grow a second int8 implementation."""
+    from repro.train import compress as C
+
+    assert C.quantize_int8 is SQ.quantize_int8
+    assert C.dequantize_int8 is SQ.dequantize_int8
+
+
+# --------------------------------------------------------------------------
+# two-stage engine: recall floor + fp32-DMA reduction
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def suite():
+    from repro.data.vectors import make_dataset, exact_ground_truth
+    from repro.core.index import AnnIndex
+
+    out = []
+    for name, dim, seed in (("a", 48, 0), ("b", 96, 11)):
+        ds = make_dataset(n_base=1500, n_query=32, dim=dim, n_clusters=24,
+                          seed=seed)
+        idx = AnnIndex.build(ds.base, graph="hnsw", m=12, efc=80)
+        out.append((ds, idx, exact_ground_truth(ds, k=10)))
+    return out
+
+
+@pytest.mark.parametrize("estimate,router", [("sq8", "none"),
+                                             ("both", "crouting")])
+def test_sq8_recall_floor_at_efs64(suite, estimate, router):
+    """Acceptance: estimate="sq8" (with rerank) matches the exact path's
+    top-k recall within 0.01 at efs >= 64 on the synthetic suite."""
+    from repro.data.vectors import recall_at_k
+
+    for ds, idx, gt in suite:
+        ids_e, _, info_e = idx.search(ds.queries, k=10, efs=64, router="none",
+                                      estimate="exact")
+        ids_q, _, info_q = idx.search(ds.queries, k=10, efs=64, router=router,
+                                      estimate=estimate)
+        rec_e = recall_at_k(ids_e, gt, 10)
+        rec_q = recall_at_k(ids_q, gt, 10)
+        assert rec_q >= rec_e - 0.01, (rec_e, rec_q)
+        # the point of the two stages: far fewer fp32 row fetches than the
+        # exact baseline performs distance calls
+        assert info_q["rerank_calls"].mean() < info_e["dist_calls"].mean()
+        assert info_q["dist_calls"].mean() < info_e["dist_calls"].mean()
+        # stage-1 ran, and every returned candidate was re-ranked exactly
+        assert info_q["sq8_calls"].mean() > 0
+        assert info_q["rerank_calls"].mean() > 0
+
+
+def test_sq8_returned_distances_are_exact(suite):
+    """Approx pool entries must be re-ranked before being returned: the
+    reported top-k distances equal the true distances of the returned ids."""
+    ds, idx, _ = suite[0]
+    ids, dists, _ = idx.search(ds.queries, k=10, efs=64, router="none",
+                               estimate="sq8")
+    for qi in range(0, len(ds.queries), 7):
+        for j in range(10):
+            if ids[qi, j] < 0:
+                continue
+            true = float(((ds.queries[qi] - ds.base[ids[qi, j]]) ** 2).sum())
+            assert abs(true - float(dists[qi, j])) <= 1e-3 * (1 + true)
+
+
+def test_estimate_validation():
+    from repro.core.search import EngineConfig, search_batch
+    from repro.data.vectors import make_dataset
+    from repro.core.hnsw import build_hnsw
+
+    ds = make_dataset(n_base=300, n_query=2, dim=16, n_clusters=6, seed=1)
+    g = build_hnsw(ds.base, m=6, efc=24, seed=0)
+    with pytest.raises(AssertionError):
+        search_batch(g, ds.queries, EngineConfig(efs=16, estimate="nope"))
+    with pytest.raises(AssertionError):
+        # "angle"/"both" demand a pruning router
+        search_batch(g, ds.queries,
+                     EngineConfig(efs=16, router="none", estimate="angle"))
