@@ -1,6 +1,6 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
-.PHONY: verify test bench bench-engine bench-smoke
+.PHONY: verify test lint bench bench-engine bench-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -10,6 +10,11 @@ verify:
 # Full tier (the tier-1 command): everything, including slow markers.
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# Lint tier: ruff's default rule set (pyflakes + pycodestyle errors), see
+# ruff.toml.  CI runs this as its own fast job.
+lint:
+	ruff check .
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

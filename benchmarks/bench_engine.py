@@ -1,17 +1,22 @@
 """Beam-expansion engine benchmarks.
 
-Three entries (each persists its derived dict into ``BENCH_engine.json``
+Four entries (each persists its derived dict into ``BENCH_engine.json``
 via ``common.persist_bench`` — the machine-readable perf trajectory):
 
-* ``engine_beam_sweep`` — the tuning sweep behind ``EngineConfig.beam_width``:
+* ``engine_beam_sweep`` — the tuning sweep behind ``SearchSpec.beam_width``:
   for W in {1, 2, 4, 8} report hop-loop iterations, recall, per-query exact
   distance calls and QPS at equal efs.  The headline number is
   ``iter_reduction``: iterations(W=1) / iterations(W), which should track ~W
   until the frontier is too shallow to fill the beam.
 * ``engine_estimate_sweep`` — the two-stage quantized engine
-  (``EngineConfig.estimate``): exact vs angle vs sq8 vs both at equal efs.
+  (``SearchSpec.estimate``): exact vs angle vs sq8 vs both at equal efs.
   The headline: ``exact_rerank_calls`` (fp32 row DMAs on the sq8 path) vs
   the exact baseline's ``dist_calls``, at recall within 0.01.
+* ``engine_router_sweep`` — iterates the ROUTER REGISTRY
+  (``repro.core.routers.available_routers()``, so a newly registered
+  strategy shows up with zero benchmark changes) at fixed efs and stamps
+  each entry with the registry name plus the router's own counters
+  (``SearchStats.summary()``, e.g. finger's ``finger_est_calls``).
 * ``engine_pallas_parity`` — jnp vs Pallas engine on a small graph: asserts
   result parity and reports iterations + dist calls before/after (interpret
   mode — wall-clock here is NOT TPU performance, the parity + counter
@@ -24,10 +29,10 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import (SMOKE, cached_index, dataset, emit,
                                persist_bench, smoke_scale, timed)
+from repro.core.routers import available_routers
+from repro.core.spec import SearchSpec
 from repro.data.vectors import exact_ground_truth, recall_at_k
 
 
@@ -37,7 +42,7 @@ def engine_beam_sweep():
     gt = exact_ground_truth(ds, k=10)
     derived = {}
     base_iters = {}
-    # beam_prune policy only matters for pruning routers (see EngineConfig):
+    # beam_prune policy only matters for pruning routers (see SearchSpec):
     # "best" holds the W=1 recall profile, "all" holds the W=1 call savings
     variants = (("none", "best"), ("crouting", "best"), ("crouting", "all"))
     widths = (1, 4) if SMOKE else (1, 2, 4, 8)
@@ -45,24 +50,24 @@ def engine_beam_sweep():
         key = router if router == "none" else f"{router}_{pol}"
         rows = []
         for W in widths:
-            kw = dict(k=10, efs=64, router=router, beam_width=W,
-                      beam_prune=pol)
+            spec = SearchSpec(k=10, efs=64, router=router, beam_width=W,
+                              beam_prune=pol)
             # warm with the full batch shape — jit caches per shape, so a
             # smaller warm-up batch would leave the compile in the timing
-            idx.search(ds.queries, **kw)
+            idx.search(ds.queries, spec=spec)
             t0 = time.perf_counter()
-            ids, _, info = idx.search(ds.queries, **kw)
+            ids, _, stats = idx.search(ds.queries, spec=spec)
             dt = time.perf_counter() - t0
             rows.append({
                 "beam_width": W,
-                "iters": info["iters"],
+                "iters": stats.iters,
                 "recall": round(recall_at_k(ids, gt, 10), 3),
-                "dist_calls": round(float(info["dist_calls"].mean()), 1),
-                "hops": round(float(info["hops"].mean()), 1),
+                "dist_calls": round(float(stats.dist_calls.mean()), 1),
+                "hops": round(float(stats.hops.mean()), 1),
                 "qps": round(len(ds.queries) / dt, 1),
             })
             if W == 1:
-                base_iters[key] = info["iters"]
+                base_iters[key] = stats.iters
         for r in rows:
             r["iter_reduction"] = round(base_iters[key] / max(r["iters"], 1), 2)
         derived[key] = rows
@@ -95,18 +100,18 @@ def engine_estimate_sweep():
     )
     derived = {}
     for name, kw in variants:
-        kw = dict(k=10, efs=64, beam_width=4, **kw)
-        idx.search(ds.queries, **kw)             # warm the jit cache
+        spec = SearchSpec(k=10, efs=64, beam_width=4, **kw)
+        idx.search(ds.queries, spec=spec)        # warm the jit cache
         t0 = time.perf_counter()
-        ids, _, info = idx.search(ds.queries, **kw)
+        ids, _, stats = idx.search(ds.queries, spec=spec)
         dt = time.perf_counter() - t0
         derived[name] = {
             "recall": round(recall_at_k(ids, gt, 10), 4),
-            "dist_calls": round(float(info["dist_calls"].mean()), 1),
-            "exact_rerank_calls": round(float(info["rerank_calls"].mean()), 1),
-            "sq8_calls": round(float(info["sq8_calls"].mean()), 1),
-            "est_calls": round(float(info["est_calls"].mean()), 1),
-            "iters": info["iters"],
+            "dist_calls": round(float(stats.dist_calls.mean()), 1),
+            "exact_rerank_calls": round(float(stats.rerank_calls.mean()), 1),
+            "sq8_calls": round(float(stats.sq8_calls.mean()), 1),
+            "est_calls": round(float(stats.est_calls.mean()), 1),
+            "iters": stats.iters,
             "wall_s": round(dt, 4),
         }
     for name in ("sq8", "both"):
@@ -116,6 +121,37 @@ def engine_estimate_sweep():
     derived["n_base"] = int(ds.base.shape[0])
     emit("engine_estimate_sweep", 0.0, derived)
     persist_bench("engine_estimate_sweep", derived)
+    return derived
+
+
+def engine_router_sweep():
+    """Every registered routing strategy at fixed efs, from the registry.
+
+    Acceptance tracking (ISSUE 4): each entry carries the registry name and
+    the router-declared counters via ``SearchStats.summary()``; the
+    ``finger`` router must hold recall within 0.01 of ``none`` at efs=64.
+    """
+    ds = dataset("sift-synth", n_base=smoke_scale(4000, 800))
+    idx = cached_index(ds)
+    gt = exact_ground_truth(ds, k=10)
+    derived = {}
+    for name in available_routers():
+        spec = SearchSpec(k=10, efs=64, router=name)
+        idx.search(ds.queries, spec=spec)        # warm the jit cache
+        t0 = time.perf_counter()
+        ids, _, stats = idx.search(ds.queries, spec=spec)
+        dt = time.perf_counter() - t0
+        derived[name] = {
+            "recall": round(recall_at_k(ids, gt, 10), 4),
+            "wall_s": round(dt, 4),
+            **stats.summary(),
+        }
+    derived["registry"] = list(available_routers())
+    derived["n_base"] = int(ds.base.shape[0])
+    emit("engine_router_sweep", 0.0,
+         {r: {"recall": v["recall"], "calls": v["dist_calls"]}
+          for r, v in derived.items() if isinstance(v, dict)})
+    persist_bench("engine_router_sweep", derived)
     return derived
 
 
@@ -137,11 +173,11 @@ def engine_pallas_parity():
             ("pallas_w4", dict(engine="pallas", beam_width=4)),
             ("pallas_w4_sq8", dict(engine="pallas", beam_width=4,
                                    estimate="sq8"))):
-        dt, out = timed(lambda: idx.search(ds_q, k=10, efs=48,
-                                           router="crouting", **kw))
-        ids, _, info = out
-        row = {"iters": info["iters"],
-               "dist_calls": round(float(info["dist_calls"].mean()), 1),
+        spec = SearchSpec(k=10, efs=48, router="crouting", **kw)
+        dt, out = timed(lambda: idx.search(ds_q, spec=spec))
+        ids, _, stats = out
+        row = {"iters": stats.iters,
+               "dist_calls": round(float(stats.dist_calls.mean()), 1),
                "us_per_query": round(dt / len(ds_q) * 1e6, 1)}
         key = (kw["beam_width"], kw.get("estimate", "exact"))
         if kw["engine"] == "jnp":

@@ -10,17 +10,17 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (BENCH_DATASETS, N_QUERY, cached_index, dataset,
-                               emit, timed)
+from benchmarks.common import BENCH_DATASETS, cached_index, dataset, emit
 from repro.core.angles import sample_angle_profile, theoretical_angle_pdf
 from repro.core.ref_search import search_ref, descend_hierarchy_ref
-from repro.core.search import EngineConfig
+from repro.core.spec import SearchSpec
 from repro.data.vectors import exact_ground_truth, recall_at_k
 
 
 def _search(idx, queries, router, efs, k=10):
-    ids, dists, info = idx.search(queries, k=k, efs=efs, router=router)
-    return ids, info
+    ids, dists, stats = idx.search(queries,
+                                   spec=SearchSpec(k=k, efs=efs, router=router))
+    return ids, stats
 
 
 def _recall_curve(idx, ds, gt, router, efs_grid, k=10):
@@ -28,12 +28,13 @@ def _recall_curve(idx, ds, gt, router, efs_grid, k=10):
     out = []
     for efs in efs_grid:
         # warm the jit, then time
-        idx.search(ds.queries[:4], k=k, efs=efs, router=router)
+        spec = SearchSpec(k=k, efs=efs, router=router)
+        idx.search(ds.queries[:4], spec=spec)
         t0 = time.perf_counter()
-        ids, _, info = idx.search(ds.queries, k=k, efs=efs, router=router)
+        ids, _, stats = idx.search(ds.queries, spec=spec)
         dt = time.perf_counter() - t0
         out.append((efs, recall_at_k(ids, gt, k),
-                    len(ds.queries) / dt, float(info["dist_calls"].mean())))
+                    len(ds.queries) / dt, float(stats.dist_calls.mean())))
     return out
 
 
@@ -153,9 +154,10 @@ def table3_efs_ablation():
     for efs in (24, 48, 96, 160, 256):
         row = {"efs": efs}
         for router in ("none", "crouting_o", "crouting"):
-            ids, _, info = idx.search(ds.queries, k=10, efs=efs, router=router)
+            ids, _, stats = idx.search(
+                ds.queries, spec=SearchSpec(k=10, efs=efs, router=router))
             row[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
-                           "hops": int(info["dist_calls"].sum())}
+                           "hops": int(stats.dist_calls.sum())}
         rows.append(row)
     emit("table3_efs_ablation", 0.0, {"rows": rows})
     return rows
@@ -194,11 +196,12 @@ def fig13_threshold():
     rows = []
     for pct in (10, 50, 75, 90, 99):
         prof = idx.profile.at_percentile(pct)
-        ids, _, info = idx.search(ds.queries, k=10, efs=64, router="crouting",
-                                  cos_theta=prof.cos_theta_star)
+        ids, _, stats = idx.search(
+            ds.queries, spec=SearchSpec(k=10, efs=64, router="crouting",
+                                        cos_theta=prof.cos_theta_star))
         rows.append({"pct": pct,
                      "recall": round(recall_at_k(ids, gt, 10), 3),
-                     "calls": round(float(info["dist_calls"].mean()), 1)})
+                     "calls": round(float(stats.dist_calls.mean()), 1)})
     emit("fig13_threshold", 0.0, {"rows": rows})
     return rows
 
@@ -213,18 +216,20 @@ def fig14_15_neighbors_k():
         gt = exact_ground_truth(ds, k=10)
         r = {}
         for router in ("none", "crouting"):
-            ids, _, info = idx.search(ds.queries, k=10, efs=64, router=router)
+            ids, _, stats = idx.search(
+                ds.queries, spec=SearchSpec(k=10, efs=64, router=router))
             r[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
-                         "calls": round(float(info["dist_calls"].mean()), 1)}
+                         "calls": round(float(stats.dist_calls.mean()), 1)}
         derived["m_sweep"].append({"m": m, **r})
     idx = cached_index(ds, m=16, efc=128)
     for k in (1, 10, 100):
         r = {}
         for router in ("none", "crouting"):
-            ids, _, info = idx.search(ds.queries, k=k, efs=max(128, k),
-                                      router=router)
+            ids, _, stats = idx.search(
+                ds.queries, spec=SearchSpec(k=k, efs=max(128, k),
+                                            router=router))
             r[router] = {"recall": round(recall_at_k(ids, gt100[:, :k], k), 3),
-                         "calls": round(float(info["dist_calls"].mean()), 1)}
+                         "calls": round(float(stats.dist_calls.mean()), 1)}
         derived["k_sweep"].append({"k": k, **r})
     emit("fig14_15_neighbors_k", 0.0, derived)
     return derived
@@ -241,9 +246,10 @@ def fig16_metrics():
         row = {"theta_median_over_pi":
                round(float(np.median(prof.samples)) / np.pi, 4)}
         for router in ("none", "crouting"):
-            ids, _, info = idx.search(ds.queries, k=10, efs=64, router=router)
+            ids, _, stats = idx.search(
+                ds.queries, spec=SearchSpec(k=10, efs=64, router=router))
             row[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
-                           "calls": round(float(info["dist_calls"].mean()), 1)}
+                           "calls": round(float(stats.dist_calls.mean()), 1)}
         derived[metric] = row
     emit("fig16_metrics", 0.0, derived)
     return derived
@@ -258,9 +264,10 @@ def fig17_scalability():
         gt = exact_ground_truth(ds, k=10)
         row = {}
         for router in ("none", "crouting"):
-            ids, _, info = idx.search(ds.queries, k=10, efs=64, router=router)
+            ids, _, stats = idx.search(
+                ds.queries, spec=SearchSpec(k=10, efs=64, router=router))
             row[router] = {"recall": round(recall_at_k(ids, gt, 10), 3),
-                           "calls": round(float(info["dist_calls"].mean()), 1)}
+                           "calls": round(float(stats.dist_calls.mean()), 1)}
         row["call_speedup"] = round(row["none"]["calls"]
                                     / row["crouting"]["calls"], 3)
         derived[f"n={n}"] = row
@@ -311,9 +318,10 @@ def fig18_strategies():
     g = idx.graph
     gt = exact_ground_truth(ds, k=10)
     derived = {}
-    ids_c, _, info_c = idx.search(ds.queries, k=10, efs=64, router="crouting")
+    ids_c, _, st_c = idx.search(
+        ds.queries, spec=SearchSpec(k=10, efs=64, router="crouting"))
     derived["crouting"] = {"recall": round(recall_at_k(ids_c, gt, 10), 3),
-                           "calls": round(float(info_c["dist_calls"].mean()), 1)}
+                           "calls": round(float(st_c.dist_calls.mean()), 1)}
     fi = build_finger(g)
     ti = build_togg(g)
     for name, fn in (("finger", lambda q, e: finger_search(fi, q, e, 64)),

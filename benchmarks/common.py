@@ -6,13 +6,11 @@ import os
 import time
 from typing import Dict, Tuple
 
-import numpy as np
-
-from repro.core.angles import AngleProfile, sample_angle_profile
+from repro.core.angles import sample_angle_profile
 from repro.core.hnsw import build_hnsw
 from repro.core.index import AnnIndex
 from repro.core.nsg import build_nsg
-from repro.data.vectors import VectorDataset, make_dataset, exact_ground_truth
+from repro.data.vectors import VectorDataset, make_dataset
 
 CACHE = os.path.join(os.path.dirname(__file__), "..", ".cache")
 os.makedirs(CACHE, exist_ok=True)

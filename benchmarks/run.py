@@ -17,6 +17,7 @@ from benchmarks import bench_roofline as R
 BENCHES = [
     ("engine_beam_sweep", E.engine_beam_sweep),
     ("engine_estimate_sweep", E.engine_estimate_sweep),
+    ("engine_router_sweep", E.engine_router_sweep),
     ("engine_pallas_parity", E.engine_pallas_parity),
     ("fig2_time_breakdown", P.fig2_time_breakdown),
     ("fig6_8_angles", P.fig6_8_angles),

@@ -12,6 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
 from repro.kernels import ops
 from repro.models.dlrm import DlrmConfig, make_retrieval_step
 
@@ -40,12 +41,13 @@ def main():
     t0 = time.perf_counter()
     idx = AnnIndex.build(cands, graph="hnsw", metric="ip", m=16, efc=96)
     print(f"ANN index built in {time.perf_counter()-t0:.1f}s")
-    ids_ann, _, info = idx.search(queries, k=k, efs=2 * k, router="crouting")
+    ids_ann, _, stats = idx.search(
+        queries, spec=SearchSpec(k=k, efs=2 * k, router="crouting"))
     recall = np.mean([len(set(a) & set(b)) / k
                       for a, b in zip(ids_ann, ids_bf)])
-    frac = info["dist_calls"].mean() / n_cand
+    frac = stats.dist_calls.mean() / n_cand
     print(f"CRouting ANN: recall@{k}={recall:.3f}, exact distance calls/query "
-          f"= {info['dist_calls'].mean():.0f} ({frac:.2%} of brute force)")
+          f"= {stats.dist_calls.mean():.0f} ({frac:.2%} of brute force)")
 
     # --- the Pallas distance kernel is the brute-force hot path -------------
     t0 = time.perf_counter()

@@ -5,6 +5,7 @@
 import numpy as np
 
 from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 
 
@@ -19,19 +20,23 @@ def main():
           f"theta* = {idx.profile.theta_star/np.pi:.3f}*pi "
           f"(90th pct of {len(idx.profile.samples)} sampled angles)")
 
-    # 3. search with and without the CRouting plugin
+    # 3. search with and without routing plugins — any registry entry works
+    #    (repro.core.routers: none | crouting | crouting_o | triangle | finger)
     gt = exact_ground_truth(ds, k=10)
-    for router in ("none", "crouting"):
-        ids, dists, info = idx.search(ds.queries, k=10, efs=96, router=router)
+    for router in ("none", "crouting", "finger"):
+        ids, dists, stats = idx.search(
+            ds.queries, spec=SearchSpec(k=10, efs=96, router=router))
         rec = recall_at_k(ids, gt, 10)
         print(f"router={router:9s} recall@10={rec:.3f} "
-              f"dist_calls/query={info['dist_calls'].mean():7.1f} "
-              f"estimates/query={info['est_calls'].mean():7.1f}")
+              f"dist_calls/query={stats.dist_calls.mean():7.1f} "
+              f"estimates/query={stats.est_calls.mean():7.1f}")
 
     # 4. the paper's headline: same accuracy, far fewer exact distance calls
-    _, _, plain = idx.search(ds.queries, k=10, efs=96, router="none")
-    _, _, cr = idx.search(ds.queries, k=10, efs=96, router="crouting")
-    saved = 1 - cr["dist_calls"].mean() / plain["dist_calls"].mean()
+    _, _, plain = idx.search(ds.queries, spec=SearchSpec(k=10, efs=96,
+                                                         router="none"))
+    _, _, cr = idx.search(ds.queries, spec=SearchSpec(k=10, efs=96,
+                                                      router="crouting"))
+    saved = 1 - cr.dist_calls.mean() / plain.dist_calls.mean()
     print(f"CRouting skipped {saved:.1%} of exact distance computations")
 
 

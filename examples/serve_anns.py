@@ -11,6 +11,7 @@ import numpy as np
 import jax
 
 from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
+from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 from repro.launch.mesh import make_local_mesh
 
@@ -29,13 +30,14 @@ def main():
           f"theta*={np.arccos(arrays.cos_theta)/np.pi:.3f}pi)")
     mesh = make_local_mesh(n_dev, "shards")
 
-    idx = ShardedAnnIndex(arrays, mesh, efs=64, k=10, router="crouting")
+    base_spec = SearchSpec(efs=64, k=10, router="crouting", max_hops=2048)
+    idx = ShardedAnnIndex(arrays, mesh, spec=base_spec)
     # request loop: batches of 64 queries
     lat, hits = [], []
     for s in range(0, 512, 64):
         q = ds.queries[s:s + 64]
         t0 = time.perf_counter()
-        ids, dists, calls = idx.search(q)
+        ids, dists, stats = idx.search(q)
         lat.append(time.perf_counter() - t0)
         hits.append(recall_at_k(ids, gt[s // 64 * 64: s + 64], 10))
     lat_ms = np.asarray(lat[1:]) * 1e3       # drop the jit-warmup batch
@@ -46,16 +48,16 @@ def main():
 
     # straggler mitigation: a bounded hop budget keeps the merge barrier
     # tail-latency-safe at a controlled recall cost (DESIGN.md §6)
-    idx_fast = ShardedAnnIndex(arrays, mesh, efs=64, k=10, router="crouting",
-                               max_hops=24)
+    idx_fast = ShardedAnnIndex(arrays, mesh,
+                               spec=base_spec.replace(max_hops=24))
     ids, _, _ = idx_fast.search(ds.queries[:128])
     rec = recall_at_k(ids, gt[:128], 10)
     print(f"bounded-hop (straggler mode): recall@10={rec:.3f}")
 
     # beam expansion: W frontier nodes per hop amortize the per-iteration
     # fixed cost (candidate select, status scatter, loop overhead) ~W x
-    idx_beam = ShardedAnnIndex(arrays, mesh, efs=64, k=10, router="crouting",
-                               beam_width=4)
+    idx_beam = ShardedAnnIndex(arrays, mesh,
+                               spec=base_spec.replace(beam_width=4))
     lat = []
     for s in range(0, 256, 64):
         t0 = time.perf_counter()
@@ -66,13 +68,15 @@ def main():
           f"p50={np.percentile(np.asarray(lat[1:]) * 1e3, 50):.1f}ms")
 
     # two-stage quantized distances: stage 1 reads uint8 code rows (4x fewer
-    # bytes), stage 2 re-ranks only survivors in fp32 — `calls` below counts
+    # bytes), stage 2 re-ranks only survivors in fp32 — `dist_calls` counts
     # fp32 evaluations, the row DMAs the SQ8 estimate avoided
-    _, _, calls_exact = idx_beam.search(ds.queries[:128])
-    idx_sq8 = ShardedAnnIndex(arrays, mesh, efs=64, k=10, router="crouting",
-                              beam_width=4, estimate="both")
-    ids, _, calls_sq8 = idx_sq8.search(ds.queries[:128])
+    _, _, st_exact = idx_beam.search(ds.queries[:128])
+    idx_sq8 = ShardedAnnIndex(
+        arrays, mesh,
+        spec=base_spec.replace(beam_width=4, estimate="both"))
+    ids, _, st_sq8 = idx_sq8.search(ds.queries[:128])
     rec = recall_at_k(ids, gt[:128], 10)
+    calls_exact, calls_sq8 = int(st_exact.dist_calls), int(st_sq8.dist_calls)
     print(f"sq8 two-stage: recall@10={rec:.3f} fp32 calls "
           f"{calls_exact} -> {calls_sq8} "
           f"({calls_sq8 / max(calls_exact, 1):.2f}x)")

@@ -1,5 +1,4 @@
 """schnet [gnn] — 3 interactions, d=64, 300 RBF, cutoff 10 [arXiv:1706.08566]."""
-import dataclasses
 from repro.configs import ArchSpec
 from repro.configs.shapes import GNN_SHAPES
 from repro.models.gnn import GnnConfig

@@ -5,8 +5,10 @@
 #   distances.py    metric registry (l2 / ip / cosine) + Euclidean conversions
 #   graph.py        padded TPU-native graph container (+ stored edge dists)
 #   ref_search.py   scalar NumPy oracle of Algorithm 1/2 (tests + construction)
-#   search.py       batched JAX engine (lax.while_loop) with router plugins:
-#                   none | crouting | crouting_o | triangle
+#   spec.py         SearchSpec (the one search-request object) + SearchStats
+#   routers.py      Router protocol + registry (none | crouting | crouting_o
+#                   | triangle | finger) — pluggable prune strategies
+#   search.py       batched JAX engine (lax.while_loop) consuming the hooks
 #   angles.py       angle-distribution sampling, theta* selection (Eq. 3)
 #   hnsw.py/nsg.py  index construction (keeps edge distances for CRouting)
 #   knn_graph.py    exact KNN graph (NSG substrate, brute-force oracle)
@@ -16,8 +18,12 @@
 
 from repro.core.distances import get_metric, METRICS  # noqa: F401
 from repro.core.graph import GraphIndex  # noqa: F401
+from repro.core.spec import SearchSpec, SearchStats  # noqa: F401
+from repro.core.routers import (Router, available_routers, get_router,  # noqa: F401
+                                register_router)
 from repro.core.search import EngineConfig, SearchResult, search_batch  # noqa: F401
 from repro.core.angles import AngleProfile, sample_angle_profile, theoretical_angle_pdf  # noqa: F401
 from repro.core.index import AnnIndex  # noqa: F401
 
+# Deprecated static tuple (pre-registry); prefer available_routers().
 ROUTERS = ("none", "triangle", "crouting", "crouting_o")

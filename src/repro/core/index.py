@@ -2,8 +2,19 @@
 
 This is the user-facing entry point of the CRouting system:
 
+    from repro.core.index import AnnIndex
+    from repro.core.spec import SearchSpec
+
     idx = AnnIndex.build(base, graph="hnsw", metric="l2")
-    ids, dists, info = idx.search(queries, k=10, efs=100, router="crouting")
+    ids, dists, stats = idx.search(
+        queries, spec=SearchSpec(k=10, efs=100, router="crouting"))
+    print(stats.dist_calls.mean())          # typed SearchStats, not a dict
+
+``SearchSpec`` is the single request object (router registry name, beam
+width, engine, estimate strategy, ...); ``stats`` is a typed
+``SearchStats``.  The pre-registry kwarg style
+(``idx.search(q, k=10, router="crouting")``) still works for one release
+and emits a ``DeprecationWarning``.
 
 Index persistence is a plain .npz (content-addressed in benchmarks' cache);
 a replacement serving node re-pulls only its shard (DESIGN.md §6).
@@ -22,9 +33,14 @@ from repro.core.graph import GraphIndex
 from repro.core.hnsw import build_hnsw
 from repro.core.nsg import build_nsg
 from repro.core.knn_graph import build_knn_graph
-from repro.core.search import EngineConfig, SearchResult, build_search_fn
+from repro.core.search import SearchResult, build_search_fn
+from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
 
 GRAPH_BUILDERS = {"hnsw": build_hnsw, "nsg": build_nsg, "knn": build_knn_graph}
+
+# What a bare `idx.search(queries)` means (matches the historical kwarg
+# defaults; note SearchSpec() itself defaults to router="none").
+DEFAULT_SEARCH = SearchSpec(k=10, efs=100, router="crouting")
 
 
 @dataclasses.dataclass
@@ -44,40 +60,44 @@ class AnnIndex:
         return cls(graph=g, profile=prof)
 
     # --- search ---------------------------------------------------------------
-    def _engine(self, cfg: EngineConfig):
-        # build_search_fn memoizes per (graph identity, cfg) — no local cache
+    def _engine(self, cfg: SearchSpec):
+        # build_search_fn memoizes per (graph identity, canonical spec)
         return build_search_fn(self.graph, cfg)
 
-    def search(self, queries: np.ndarray, k: int = 10, efs: int = 100,
-               router: str = "crouting", cos_theta: Optional[float] = None,
-               max_hops: int = 4096, beam_width: int = 1,
-               engine: str = "jnp", beam_prune: str = "best",
-               estimate: str = "exact",
-               ) -> Tuple[np.ndarray, np.ndarray, dict]:
+    def search(self, queries: np.ndarray, spec: Optional[SearchSpec] = None,
+               **legacy) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Batched search.  Returns (ids [B,k], dists [B,k], SearchStats).
+
+        ``spec`` is the one configuration object; its ``metric`` and
+        ``use_hierarchy`` fields are overridden from the index's graph, and
+        ``cos_theta=None`` resolves to the sampled angle profile.  Slots
+        with no result carry id -1 and distance +inf.  Legacy kwargs
+        (``k=/efs=/router=/...``) are shimmed with a DeprecationWarning.
+        """
         import jax.numpy as jnp
 
+        spec = resolve_search_spec(spec, legacy, DEFAULT_SEARCH,
+                                   "AnnIndex.search")
         queries = D.preprocess_vectors(
             np.ascontiguousarray(queries, np.float32), self.graph.metric)
+        cos_theta = spec.cos_theta
         if cos_theta is None:
             cos_theta = self.profile.cos_theta_star if self.profile else 0.0
-        cfg = EngineConfig(efs=max(efs, k), router=router,
-                           metric=self.graph.metric, max_hops=max_hops,
-                           use_hierarchy=self.graph.upper_neighbors is not None,
-                           beam_width=beam_width, engine=engine,
-                           beam_prune=beam_prune, estimate=estimate)
+        k = spec.k
+        cfg = dataclasses.replace(
+            spec, efs=max(spec.efs, k), metric=self.graph.metric,
+            use_hierarchy=self.graph.upper_neighbors is not None)
         _, fn = self._engine(cfg)
-        res: SearchResult = fn(jnp.asarray(queries), jnp.asarray(cos_theta, jnp.float32))
+        res: SearchResult = fn(jnp.asarray(queries),
+                               jnp.asarray(cos_theta, jnp.float32))
         ids = np.asarray(res.ids[:, :k]).astype(np.int64)
-        ids[ids >= self.graph.n] = -1
-        info = {
-            "dist_calls": np.asarray(res.dist_calls),
-            "est_calls": np.asarray(res.est_calls),
-            "rerank_calls": np.asarray(res.rerank_calls),
-            "sq8_calls": np.asarray(res.sq8_calls),
-            "hops": np.asarray(res.hops),
-            "iters": int(res.iters),
-        }
-        return ids, np.asarray(res.dists[:, :k]), info
+        dists = np.array(res.dists[:, :k])
+        # empty slots resolve to the pad row: mask BOTH columns (an id of -1
+        # must never ship with the pad row's finite distance)
+        pad = ids >= self.graph.n
+        ids[pad] = -1
+        dists[pad] = np.inf
+        return ids, dists, SearchStats.from_result(res, router=spec.router)
 
     # --- persistence ----------------------------------------------------------
     def save(self, path: str):
@@ -98,6 +118,8 @@ class AnnIndex:
             payload["theta_samples"] = self.profile.samples
             payload["theta_star"] = np.asarray(self.profile.theta_star)
             payload["theta_pct"] = np.asarray(self.profile.percentile)
+            payload["theta_nq"] = np.asarray(self.profile.n_sample_queries)
+            payload["theta_secs"] = np.asarray(self.profile.sample_secs)
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         np.savez_compressed(path, **payload)
 
@@ -117,8 +139,12 @@ class AnnIndex:
         prof = None
         if "theta_samples" in z:
             th = float(z["theta_star"])
+            # theta_nq/theta_secs are absent in pre-PR4 files; default 0
             prof = AngleProfile(theta_star=th, cos_theta_star=float(np.cos(th)),
                                 percentile=float(z["theta_pct"]),
                                 samples=z["theta_samples"],
-                                n_sample_queries=0, sample_secs=0.0)
+                                n_sample_queries=int(z["theta_nq"])
+                                if "theta_nq" in z else 0,
+                                sample_secs=float(z["theta_secs"])
+                                if "theta_secs" in z else 0.0)
         return cls(graph=g, profile=prof)

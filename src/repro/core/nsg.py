@@ -15,15 +15,16 @@ Defaults follow the paper §5.1: R=70 (degree), C=500 (candidates), L=60
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 from repro.core import distances as D
 from repro.core.graph import GraphIndex, pad_adjacency
 from repro.core.knn_graph import build_knn_graph
-from repro.core.search import EngineConfig, search_batch
+from repro.core.spec import SearchSpec
 
 
 def _mrng_select(p: int, cand_ids: np.ndarray, cand_rank: np.ndarray,
@@ -53,7 +54,14 @@ def _mrng_select(p: int, cand_ids: np.ndarray, cand_rank: np.ndarray,
 def build_nsg(base: np.ndarray, metric: str = "l2", r: int = 70, c: int = 500,
               l: int = 60, knn_k: int = 64, seed: int = 0,
               search_batch_size: int = 512, beam_width: int = 4,
-              estimate: str = "exact") -> GraphIndex:
+              estimate: str = "exact",
+              search_spec: Optional[SearchSpec] = None) -> GraphIndex:
+    """Construct an NSG.  ``search_spec`` configures the candidate-
+    acquisition searches (router/engine/beam/estimate); its pool-shaping
+    fields (efs, max_hops, metric, hierarchy) are overridden by the
+    construction requirements.  ``beam_width``/``estimate`` remain as
+    shorthand for the common knobs when no spec is given.
+    """
     t0 = time.time()
     base = D.preprocess_vectors(np.ascontiguousarray(base, np.float32), metric)
     n = base.shape[0]
@@ -67,10 +75,13 @@ def build_nsg(base: np.ndarray, metric: str = "l2", r: int = 70, c: int = 500,
     # (construction quality only improves: extra expansions, never fewer);
     # estimate="sq8" swaps the acquisition searches onto quantized stage-1
     # distances (cheaper build, slightly noisier candidate pools)
-    cfg = EngineConfig(efs=pool, router="none", metric=metric,
-                       max_hops=4 * pool, use_hierarchy=False,
-                       beam_width=max(1, min(beam_width, pool)),
-                       estimate=estimate)
+    if search_spec is None:
+        search_spec = SearchSpec(router="none", beam_width=beam_width,
+                                 estimate=estimate)
+    cfg = dataclasses.replace(
+        search_spec, efs=pool, metric=metric, max_hops=4 * pool,
+        use_hierarchy=False,
+        beam_width=max(1, min(search_spec.beam_width, pool)))
     cand_ids = np.empty((n, pool), np.int64)
     cand_rank = np.empty((n, pool), np.float32)
     from repro.core.search import build_search_fn

@@ -14,7 +14,6 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import distances as D
 from repro.core.graph import GraphIndex
 
 STATUS_UNVISITED = 0

@@ -1,0 +1,311 @@
+"""Pluggable routing strategies: the ``Router`` protocol + registry.
+
+The paper pitches CRouting as "a plugin to optimize existing graph-based
+search with minimal code modifications"; this module is that plugin surface
+for the batched engine.  A *router* decides, per candidate lane of the
+``[B, W*M]`` expansion tile, whether the exact distance call can be skipped.
+Instead of string branches inside ``core/search.py``, each strategy is a
+registry entry declaring:
+
+* **flags** the engine consumes (``prunes`` / ``permanent`` /
+  ``revisit_pruned`` / ``counts_est`` / ``kernel_estimate``);
+* an ``estimate_rank`` hook producing the per-lane estimated ranking
+  distance (a lane is pruned when the estimate already beats the frozen
+  pool bound) plus any **router-specific counters** it wants surfaced in
+  ``SearchStats.extra``;
+* a ``prepare`` hook that lazily upgrades the per-graph device-array cache
+  with companion tables (mirroring how ``ensure_sq8_arrays`` adds the SQ8
+  codes the first time a quantized config runs).
+
+Built-ins: ``none`` (Algorithm 1), ``crouting`` / ``crouting_o`` (paper
+Algorithm 2 with/without error correction), ``triangle`` (exact
+triangle-inequality lower bound, §3.2) and ``finger`` — an
+engine-integrated port of the FINGER baseline (Chen et al., WWW'23,
+``core/finger.py``): residual-subspace estimates with sign-LSH signatures,
+evaluated tile-wide on device.
+
+Kernel interplay: the edge-angle family (``crouting*``/``triangle``)
+evaluates ``est2 = ed^2 + dcq^2 - 2*ed*dcq*cos_theta`` — exactly the
+expression the Pallas ``crouting_prune``/``fused_expand`` kernels compute,
+so those routers set ``kernel_estimate=True`` and the engine may take the
+prune decision inside the kernel (bit-equal f32 math).  Routers with other
+estimate forms (``finger``) run their hook on the jnp path under every
+engine; the kernels still handle the distance gather/merge.
+
+Adding a strategy is ~a-hundred-line plugin::
+
+    @dataclasses.dataclass(frozen=True)
+    class MyRouter(Router):
+        def estimate_rank(self, ctx):
+            est_rank = ...                       # [B, L], ranking space
+            return est_rank, {"my_counter": jnp.sum(ctx.try_prune, axis=1,
+                                                    dtype=jnp.int32)}
+
+    register_router(MyRouter(name="mine", prunes=True,
+                             extra_counters=("my_counter",)))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import get_metric
+from repro.core.graph import GraphIndex
+
+
+class RouterContext(NamedTuple):
+    """Everything a router's ``estimate_rank`` hook may look at.
+
+    Shapes: B queries, W beam slots, M max degree, L = W*M tile lanes.
+    No fp32 *neighbor* row may be read here — the whole point of a router
+    is to decide the prune before that DMA happens.  (The W expansion
+    nodes' own rows are fair game: their exact distances are already paid.)
+    """
+
+    arrays: Dict[str, Any]   # per-graph device tables (see graph_device_arrays)
+    queries: jax.Array       # [B, d] f32
+    nq: jax.Array            # [B] query norms (ones under l2)
+    c: jax.Array             # [B, W] expansion-node ids (pad = n)
+    dc: jax.Array            # [B, W] exact ranking distance d(c, q)
+    nbrs: jax.Array          # [B, L] neighbor ids (pad = n)
+    ed: jax.Array            # [B, L] stored edge Euclidean distances d(c, n)
+    dcq: jax.Array           # [B, L] per-lane Euclidean d(c, q)
+    nx: jax.Array            # [B, L] neighbor norms
+    try_prune: jax.Array     # [B, L] bool — lanes eligible for the prune test
+    upper: jax.Array         # [B] frozen pool upper bound (ranking space)
+    cos_theta: Any           # traced scalar, cos(theta*) from the profile
+    metric: str
+    n: int                   # number of real rows (pad row index)
+    beam_width: int          # W
+    max_degree: int          # M
+
+
+@dataclasses.dataclass(frozen=True)
+class Router:
+    """A routing strategy: flags the engine consumes + optional hooks.
+
+    Attributes:
+      name: registry key (``SearchSpec.router``).
+      prunes: whether the strategy runs an estimate/prune test at all
+        (``False`` == plain Algorithm 1).
+      permanent: pruned lanes are marked VISITED — final, never revisited.
+        Correct for exact bounds (``triangle``) and strategies that prune
+        permanently by design (``finger``); estimate-based strategies
+        should leave this ``False`` so pruned nodes stay revisitable.
+      revisit_pruned: PRUNED lanes may be re-estimated on a later encounter
+        (the paper's error correction).  ``crouting_o`` sets ``False``.
+        Irrelevant when ``permanent`` (no PRUNED status is ever written).
+      counts_est: estimate evaluations increment ``est_calls``
+        (``triangle``'s bound is free — it sets ``False``).
+      kernel_estimate: the estimate is the edge-angle form the Pallas
+        ``crouting_prune``/``fused_expand`` kernels implement, so the prune
+        decision may be taken in-kernel.
+      extra_counters: names of per-router ``[B]`` int32 counters the
+        ``estimate_rank`` hook returns; surfaced as ``SearchStats.extra``.
+      companion_tables: keys ``prepare`` adds to the arrays cache.  The
+        sharded serving path only supports routers without companion
+        tables (per-shard table plumbing is future work).
+    """
+
+    name: str
+    prunes: bool = False
+    permanent: bool = False
+    revisit_pruned: bool = True
+    counts_est: bool = True
+    kernel_estimate: bool = False
+    extra_counters: Tuple[str, ...] = ()
+    companion_tables: Tuple[str, ...] = ()
+
+    def cos_theta_eff(self, cos_theta):
+        """The cos(theta) the edge-angle estimate uses (traced or static)."""
+        return cos_theta
+
+    def prepare(self, g: GraphIndex, arrays: Dict[str, Any]) -> Dict[str, Any]:
+        """Lazily add companion device tables to the per-graph cache
+        (idempotent; mirrors ``ensure_sq8_arrays``)."""
+        return arrays
+
+    def estimate_rank(self, ctx: RouterContext):
+        """Per-lane estimated ranking distance + extra-counter increments.
+
+        Returns ``(est_rank [B, L], {counter_name: [B] int32 increment})``.
+        The engine prunes ``try_prune`` lanes whose estimate already
+        reaches the frozen pool bound.
+        """
+        raise NotImplementedError(
+            f"router {self.name!r} declares prunes={self.prunes} but no "
+            "estimate_rank hook")
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeAngleRouter(Router):
+    """Cosine-theorem family (paper §3): estimate d(n, q) from the stored
+    edge distance d(c, n), the known d(c, q) and an angle threshold.
+
+    ``fixed_cos`` pins the angle term: ``triangle`` uses ``1.0``, turning
+    the estimate into the exact lower bound ``(d(c,n) - d(c,q))^2``.
+    """
+
+    fixed_cos: Optional[float] = None
+
+    def cos_theta_eff(self, cos_theta):
+        return self.fixed_cos if self.fixed_cos is not None else cos_theta
+
+    def estimate_rank(self, ctx: RouterContext):
+        ct = self.cos_theta_eff(ctx.cos_theta)
+        # identical f32 expression to the Pallas kernels (bit-equal prunes)
+        est2 = jnp.maximum(
+            ctx.ed * ctx.ed + ctx.dcq * ctx.dcq
+            - 2.0 * ctx.ed * ctx.dcq * ct, 0.0)
+        est_rank = get_metric(ctx.metric).eu2_to_rank(
+            est2, ctx.nq[:, None], ctx.nx)
+        return est_rank, {}
+
+
+# --------------------------------------------------------------------------
+# FINGER (engine-integrated port of core/finger.py)
+# --------------------------------------------------------------------------
+_FINGER_TABLES = ("finger_H", "finger_c2", "finger_hc", "finger_edge_t",
+                  "finger_edge_rn", "finger_edge_sig")
+
+
+def ensure_finger_arrays(g: GraphIndex, arrays: Dict[str, Any],
+                         r_bits: int = 64) -> Dict[str, Any]:
+    """Add the FINGER companion tables to a packed arrays dict (idempotent).
+
+    Reuses the NumPy construction of ``core/finger.py`` (per-edge
+    projection coefficient, residual norm, packed sign-LSH signature;
+    per-node |c|^2 and H@c), then appends the pad row (zero vector: t=0,
+    |res|=0, empty signature) and re-packs the uint64 signature words into
+    little-endian uint32 pairs — x64 is off on device, and
+    ``lax.population_count`` handles uint32 natively.
+    """
+    if "finger_edge_sig" in arrays:
+        return arrays
+    from repro.core.finger import build_finger
+
+    fi = build_finger(g, r_bits=r_bits, seed=0)
+    m = g.max_degree
+    c2 = np.concatenate([fi.node_c2, np.ones(1, np.float32)])
+    hc = np.concatenate([fi.node_hc, np.zeros((1, r_bits), np.float32)])
+    t = np.concatenate([fi.edge_t, np.zeros((1, m), np.float32)])
+    rn = np.concatenate([fi.edge_res_norm, np.zeros((1, m), np.float32)])
+    sig = np.concatenate(
+        [fi.edge_sig, np.zeros((1, m, r_bits // 64), np.uint64)], axis=0)
+    # uint64 word w -> uint32 words (2w, 2w+1): bit b of uint32 word j is
+    # hyperplane column 32*j + b, matching the query-side packing below
+    lo = (sig & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (sig >> np.uint64(32)).astype(np.uint32)
+    sig32 = np.stack([lo, hi], axis=-1).reshape(g.n + 1, m, r_bits // 32)
+    arrays["finger_H"] = jnp.asarray(fi.hyperplanes)
+    arrays["finger_c2"] = jnp.asarray(c2)
+    arrays["finger_hc"] = jnp.asarray(hc)
+    arrays["finger_edge_t"] = jnp.asarray(t)
+    arrays["finger_edge_rn"] = jnp.asarray(rn)
+    arrays["finger_edge_sig"] = jnp.asarray(sig32)
+    return arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class FingerRouter(Router):
+    """Residual-subspace estimate (FINGER, Chen et al., WWW'23) as a tile
+    hook: per expansion node c the query decomposes into a component along
+    c and a residual whose angle to each neighbor's residual is estimated
+    via sign-LSH hamming distance.  Prunes permanently, like the baseline
+    (``finger_search``).  L2-exact; other metrics go through the same
+    Euclidean-to-rank conversion as the edge-angle family.
+    """
+
+    r_bits: int = 64
+
+    def prepare(self, g, arrays):
+        return ensure_finger_arrays(g, arrays, r_bits=self.r_bits)
+
+    def estimate_rank(self, ctx: RouterContext):
+        arrays, q, c = ctx.arrays, ctx.queries, ctx.c
+        B, L = ctx.nbrs.shape
+        H = arrays["finger_H"]                           # [r, d]
+        r_bits = H.shape[0]
+        cvec = arrays["vectors"][c]                      # [B, W, d]
+        c2 = jnp.maximum(arrays["finger_c2"][c], 1e-12)  # [B, W]
+        t_q = jnp.einsum("bd,bwd->bw", q, cvec) / c2     # [B, W]
+        q2 = jnp.sum(q * q, axis=-1)                     # [B]
+        q_res2 = jnp.maximum(q2[:, None] - t_q * t_q * c2, 0.0)
+        q_rn = jnp.sqrt(q_res2)                          # [B, W]
+        # query-residual signature w.r.t. node c: sign(Hq - t_q * Hc)
+        hq = q @ H.T                                     # [B, r]
+        hc = arrays["finger_hc"][c]                      # [B, W, r]
+        bits = ((hq[:, None, :] - t_q[..., None] * hc) > 0)
+        pow2 = jnp.left_shift(jnp.uint32(1),
+                              jnp.arange(32, dtype=jnp.uint32))
+        sig_q = jnp.sum(
+            bits.reshape(bits.shape[:-1] + (r_bits // 32, 32))
+            .astype(jnp.uint32) * pow2, axis=-1, dtype=jnp.uint32)
+        esig = arrays["finger_edge_sig"][c]              # [B, W, M, words]
+        ham = jnp.sum(jax.lax.population_count(esig ^ sig_q[:, :, None, :]),
+                      axis=-1)                           # [B, W, M]
+        rho = ham.astype(jnp.float32) / r_bits
+        t_n = arrays["finger_edge_t"][c]                 # [B, W, M]
+        n_rn = arrays["finger_edge_rn"][c]
+        # paper Eq. 1: |q-n|^2 ~= (t_q-t_n)^2 |c|^2 + |q_res|^2 + |n_res|^2
+        #                         - 2 |q_res||n_res| cos(pi rho)
+        est2 = ((t_q[..., None] - t_n) ** 2 * c2[..., None]
+                + q_res2[..., None] + n_rn * n_rn
+                - 2.0 * q_rn[..., None] * n_rn * jnp.cos(jnp.pi * rho))
+        est2 = jnp.maximum(est2, 0.0).reshape(B, L)
+        est_rank = get_metric(ctx.metric).eu2_to_rank(
+            est2, ctx.nq[:, None], ctx.nx)
+        extras = {"finger_est_calls": jnp.sum(ctx.try_prune, axis=1,
+                                              dtype=jnp.int32)}
+        return est_rank, extras
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+_REGISTRY: Dict[str, Router] = {}
+
+
+def register_router(router: Router, overwrite: bool = False) -> Router:
+    """Add a routing strategy to the registry (``SearchSpec.router`` key)."""
+    if router.name in _REGISTRY and not overwrite:
+        raise ValueError(f"router {router.name!r} already registered; pass "
+                         "overwrite=True to replace it")
+    _REGISTRY[router.name] = router
+    return router
+
+
+def unregister_router(name: str) -> None:
+    """Remove a registry entry (built-ins included — tests use this)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_router(name: str) -> Router:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown router {name!r}; registered: {available_routers()}"
+        ) from None
+
+
+def available_routers() -> Tuple[str, ...]:
+    """Registered strategy names, registration order (built-ins first)."""
+    return tuple(_REGISTRY)
+
+
+register_router(Router(name="none", prunes=False))
+register_router(EdgeAngleRouter(name="crouting", prunes=True,
+                                kernel_estimate=True))
+register_router(EdgeAngleRouter(name="crouting_o", prunes=True,
+                                revisit_pruned=False, kernel_estimate=True))
+register_router(EdgeAngleRouter(name="triangle", prunes=True, permanent=True,
+                                counts_est=False, kernel_estimate=True,
+                                fixed_cos=1.0))
+register_router(FingerRouter(name="finger", prunes=True, permanent=True,
+                             extra_counters=("finger_est_calls",),
+                             companion_tables=_FINGER_TABLES))

@@ -9,12 +9,16 @@ Re-derivation of the paper's Algorithm 1/2 for fixed-shape SPMD execution
 * per-node state is a dense uint8 status array (0 unvisited / 1 visited /
   2 pruned) — the pruned state doubles as CRouting's error-correction flag;
 * ONE ``lax.while_loop`` drives the whole query batch: each iteration picks
-  the best W (= ``EngineConfig.beam_width``) unexpanded pool entries per
+  the best W (= ``SearchSpec.beam_width``) unexpanded pool entries per
   query and expands them together, producing a dense ``[B, W*M]`` neighbor
   tile.  Estimate + prune runs on the VPU path, exact distances on the
   MXU/DMA path, pool maintenance as one merge — and the fixed per-hop cost
   (candidate select, status scatter, loop overhead) is amortized ~W×.
-* ``EngineConfig.engine`` dispatches the tile work:
+* routing (which lanes skip their exact distance) is pluggable: the
+  ``SearchSpec.router`` name resolves through the registry in
+  ``repro.core.routers``, and the engine consumes the router's declared
+  flags + ``estimate_rank`` hook instead of branching on strings.
+* ``SearchSpec.engine`` dispatches the tile work:
     - ``"jnp"``     — pure-jnp reference semantics (the oracle path);
     - ``"pallas"``  — ``ops.fused_expand`` (estimate + prune + conditional
       row DMA + exact distance in one kernel) and the bitonic
@@ -29,7 +33,7 @@ zero vector at row index N; every masked/pruned/out-of-range lane gathers
 that row (``ops.gather_distance_pruned`` remaps to the table's last row).
 Pool slots holding no candidate carry id N and distance +inf.
 
-Two-stage quantized distances (``EngineConfig.estimate``, PAPERS.md: VSAG /
+Two-stage quantized distances (``SearchSpec.estimate``, PAPERS.md: VSAG /
 Probabilistic Routing): with ``estimate="sq8"`` or ``"both"`` the surviving
 lanes of a tile do NOT fetch fp32 rows.  Stage 1 reads the uint8 SQ8 code
 row (4x fewer bytes, kernels/sq8_distance.py) and computes an approximate
@@ -61,7 +65,6 @@ Semantic notes (tested in tests/test_engine_equivalence.py):
 """
 from __future__ import annotations
 
-import dataclasses
 import weakref
 from typing import Any, Dict, NamedTuple, Optional
 
@@ -69,61 +72,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distances as D
 from repro.core.graph import GraphIndex
+from repro.core.routers import RouterContext, get_router
+from repro.core.spec import ENGINES, ESTIMATES, SearchSpec
 
 STATUS_UNVISITED = 0
 STATUS_VISITED = 1
 STATUS_PRUNED = 2
 
-ENGINES = ("jnp", "pallas", "pallas_unfused")
-ESTIMATES = ("exact", "angle", "sq8", "both")
+# Deprecated alias (kept for one release): the engine config *is* the
+# public SearchSpec now — `repro.core.spec` holds the real definition.
+EngineConfig = SearchSpec
 
 
 class SearchResult(NamedTuple):
     ids: jax.Array        # [B, efs] int32, N = empty
     dists: jax.Array      # [B, efs] ranking distance
     dist_calls: jax.Array  # [B] int32 exact distance evaluations
-    est_calls: jax.Array   # [B] int32 cosine-theorem estimates
+    est_calls: jax.Array   # [B] int32 router estimates evaluated
     hops: jax.Array        # [B] int32 node expansions
     iters: jax.Array       # [] int32 batch-level hop-loop iterations
     rerank_calls: jax.Array  # [B] int32 stage-2 exact reranks (sq8 path)
     sq8_calls: jax.Array     # [B] int32 stage-1 quantized estimates
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    efs: int = 100
-    router: str = "none"          # none | crouting | crouting_o | triangle
-    metric: str = "l2"
-    max_hops: int = 4096
-    use_hierarchy: bool = True
-    beam_width: int = 1           # W frontier nodes expanded per iteration
-    engine: str = "jnp"           # jnp | pallas | pallas_unfused
-    # Which beam slots' lanes are eligible for the router's prune test:
-    #   "best" (default) — only the best slot's neighbors, i.e. exactly the
-    #     lanes sequential Algorithm 2 would test at this moment.  Recall
-    #     matches the W=1 risk profile; call savings dilute as W grows.
-    #   "all" — every slot's neighbors.  Maximum distance-call savings, but
-    #     estimates from the 2nd..Wth-best parents (which sequential search
-    #     would expand later, from closer parents) can mis-prune a doorway
-    #     node and strand a query — use with efs comfortably above k.
-    beam_prune: str = "best"
-    # Distance-computation strategy for candidate lanes:
-    #   "exact" (default) — every surviving lane fetches its fp32 row and
-    #     computes the exact distance (the classic path; the angle prune
-    #     still applies per `router`).
-    #   "angle" — alias of "exact" that *requires* a pruning router; kept as
-    #     an explicit name for benchmark configs.
-    #   "sq8"   — two-stage: lanes first compute a quantized (uint8 codes,
-    #     4x fewer bytes) estimate + conservative lower bound; lanes whose
-    #     bound beats the pool bound skip the fp32 row entirely, survivors
-    #     enter the pool approximately and are re-ranked exactly only when
-    #     expanded or returned.  Composes with the angle prune when `router`
-    #     prunes (the angle test runs first, on adjacency data alone).
-    #   "both"  — "sq8" + an assertion that a pruning router is configured
-    #     (self-documenting config for the composed setup).
-    estimate: str = "exact"
+    # per-router counters ([B] int32 each), keys = Router.extra_counters.
+    # None (not {}: NamedTuple defaults are class-level, a dict would be
+    # shared mutable state) when constructed without one; the engine always
+    # passes a real dict.
+    extra: Optional[Dict[str, jax.Array]] = None
 
 
 def graph_device_arrays(g: GraphIndex, with_sq8: bool = False) -> Dict[str, Any]:
@@ -217,7 +192,7 @@ def _eu2_to_rank(eu2, nq, nx, metric):
     return (eu2 - nx * nx - nq * nq + 2.0) / 2.0
 
 
-def _descend(arrays, q, cfg: EngineConfig):
+def _descend(arrays, q, cfg: SearchSpec):
     """Greedy 1-NN descent through HNSW upper layers. Returns (entry, dist_calls)."""
     metric = cfg.metric
     cur = arrays["entry"]
@@ -297,10 +272,18 @@ def _rescue_pruned_duplicates(order, sk, prune):
     return rescued, prune_final
 
 
-def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
-    """Whole-batch Algorithm 1/2 with W-wide beam expansion per iteration."""
+def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec):
+    """Whole-batch Algorithm 1/2 with W-wide beam expansion per iteration.
+
+    Routing is delegated to the registry (``repro.core.routers``): the
+    router's flags shape the trace (which lanes are eligible, whether a
+    prune is final, whether the Pallas kernels may decide it) and its
+    ``estimate_rank`` hook supplies the per-lane estimate when the decision
+    is made on the jnp path.
+    """
     metric, efs, n = cfg.metric, cfg.efs, arrays["n"]
-    router, W, engine = cfg.router, cfg.beam_width, cfg.engine
+    W, engine = cfg.beam_width, cfg.engine
+    rt = get_router(cfg.router)
     assert engine in ENGINES, f"unknown engine {engine!r}"
     assert cfg.estimate in ESTIMATES, f"unknown estimate {cfg.estimate!r}"
     assert 1 <= W <= efs, "beam_width must be in [1, efs]"
@@ -308,8 +291,9 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
         f"unknown beam_prune policy {cfg.beam_prune!r}"
     sq8_on = cfg.estimate in ("sq8", "both")
     if cfg.estimate in ("angle", "both"):
-        assert router in ("crouting", "crouting_o", "triangle"), \
-            f"estimate={cfg.estimate!r} needs a pruning router, got {router!r}"
+        assert rt.prunes, \
+            f"estimate={cfg.estimate!r} needs a pruning router, " \
+            f"got {cfg.router!r}"
     # pallas pool_merge rides the (approx, expanded) flags in the id low
     # bits (id*4 + approx*2 + exp)
     assert engine == "jnp" or n < 2 ** 29, \
@@ -359,6 +343,8 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
              jnp.zeros((B,), jnp.int32),   # est_calls
              jnp.zeros((B,), jnp.int32),   # rerank_calls
              jnp.zeros((B,), jnp.int32),   # sq8_calls
+             # per-router counters (registry-declared, see Router.extra_counters)
+             {name: jnp.zeros((B,), jnp.int32) for name in rt.extra_counters},
              jnp.zeros((B,), jnp.int32),   # hops
              jnp.zeros((B,), bool),        # done
              jnp.asarray(0, jnp.int32))    # iters
@@ -369,7 +355,7 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
 
     def body(s):
         (pool_d, pool_id, pool_exp, pool_apx, status, dcalls, ecalls,
-         rrcalls, sqcalls, hops, done, iters) = s
+         rrcalls, sqcalls, extras, hops, done, iters) = s
 
         # --- beam selection: best W unexpanded pool entries per query ------
         cand = (~pool_exp) & (pool_id < n)
@@ -417,8 +403,8 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
         lane_live = jnp.broadcast_to(slot_live[:, :, None],
                                      (B, W, M)).reshape(B, L)
         valid = in_range & (st != STATUS_VISITED) & lane_live
-        if router == "crouting_o":
-            # no error correction: previously-pruned lanes stay skipped
+        if not rt.revisit_pruned:
+            # no error correction (crouting_o): pruned lanes stay skipped
             valid = valid & (st != STATUS_PRUNED)
         if W > 1:
             first, dd_order, dd_keys = _first_occurrence(nbrs, valid, n)
@@ -437,44 +423,52 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
             bound2 = 2.0 * upper[:, None] + nx * nx \
                 + (nq * nq)[:, None] - 2.0
 
-        # --- router: estimate + prune (no vector fetch on this path).
-        # The fused pallas engine takes the prune decision from inside
-        # fused_expand (est + prune + conditional DMA in one kernel); the
-        # unfused engine from the crouting_prune kernel; jnp computes it
-        # directly.  All three evaluate the identical f32 expression, so the
-        # decisions are bit-equal for l2.  The one exception: the beam
-        # rescue path (W>1, router='crouting') must know prune BEFORE the
-        # fetch set exists, so there jnp decides and the fused kernel's
+        # --- router: estimate + prune (no neighbor-vector fetch here).
+        # Edge-angle routers (Router.kernel_estimate) may have the decision
+        # taken inside the Pallas kernels: the fused engine inside
+        # fused_expand (est + prune + conditional DMA in one kernel), the
+        # unfused engine in the crouting_prune kernel; otherwise the
+        # router's estimate_rank hook runs on the jnp path.  All paths
+        # evaluate the identical f32 expression for the edge-angle family,
+        # so the decisions are bit-equal for l2.  The beam rescue path
+        # (W>1, error-correcting router) must know prune BEFORE the fetch
+        # set exists, so there the hook decides and the fused kernel's
         # eligible set is empty (its DMA skip still comes from eval_mask). -
-        prunes = router in ("crouting", "crouting_o", "triangle")
-        ct_eff = 1.0 if router == "triangle" else cos_theta
-        rescue = W > 1 and router == "crouting"
-        # with sq8 the fused fp32 kernel never runs, so the angle decision
+        prunes = rt.prunes
+        ct_eff = rt.cos_theta_eff(cos_theta)
+        rescue = W > 1 and prunes and rt.revisit_pruned and not rt.permanent
+        # with sq8 the fused fp32 kernel never runs, so the prune decision
         # is made outside it (jnp / crouting_prune — the same f32 math)
-        kernel_prunes = engine == "pallas" and not rescue and not sq8_on
+        kernel_prunes = engine == "pallas" and rt.kernel_estimate \
+            and not rescue and not sq8_on
         if prunes:
             try_prune = first & (st == STATUS_UNVISITED) & pool_full[:, None]
             if W > 1 and cfg.beam_prune == "best":
                 # top_k orders slots by distance, so slot 0 = the node
                 # sequential search would be expanding right now; only its
-                # lanes run the estimate test (see EngineConfig.beam_prune)
+                # lanes run the estimate test (see SearchSpec.beam_prune)
                 try_prune = try_prune & (jnp.arange(L) < M)[None, :]
-            if router != "triangle":
+            if rt.counts_est:
                 ecalls = ecalls + jnp.sum(try_prune, axis=1, dtype=jnp.int32)
         else:
             try_prune = jnp.zeros_like(first)
 
         if not prunes or kernel_prunes:
             prune = jnp.zeros_like(first)
-        elif engine == "pallas_unfused":
+        elif engine == "pallas_unfused" and rt.kernel_estimate:
             _, prune8 = ops.crouting_prune(ed, dcq_l, bound2, try_prune,
                                            ct_eff)
             prune = prune8 != 0
         else:
-            est2 = jnp.maximum(
-                ed * ed + dcq_l * dcq_l - 2.0 * ed * dcq_l * ct_eff, 0.0)
-            est_rank = _eu2_to_rank(est2, nq[:, None], nx, metric)
+            ctx = RouterContext(
+                arrays=arrays, queries=queries, nq=nq, c=c, dc=dc, nbrs=nbrs,
+                ed=ed, dcq=dcq_l, nx=nx, try_prune=try_prune, upper=upper,
+                cos_theta=cos_theta, metric=metric, n=n, beam_width=W,
+                max_degree=M)
+            est_rank, extra_inc = rt.estimate_rank(ctx)
             prune = try_prune & (est_rank >= upper[:, None])
+            extras = {key: extras[key] + extra_inc.get(key, 0)
+                      for key in extras} if extra_inc else extras
 
         if rescue:
             # Within-tile error correction (paper Alg. 2): sequentially, the
@@ -549,8 +543,8 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
         # other lanes are redirected to the pad column (same-value writes,
         # so the scatter stays deterministic) -------------------------------
         change = compute | prune
-        if router == "triangle":
-            # exact lower bound => discard is permanent (mark visited)
+        if rt.permanent:
+            # exact/trusted bound => discard is permanent (mark visited)
             new_st = jnp.full_like(st, STATUS_VISITED)
         else:
             new_st = jnp.where(insert, STATUS_VISITED, STATUS_PRUNED
@@ -587,10 +581,11 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
 
         hops = hops + jnp.sum(slot_live, axis=1, dtype=jnp.int32)
         return (pool_d, pool_id, pool_exp, pool_apx, status, dcalls, ecalls,
-                rrcalls, sqcalls, hops, done, iters + 1)
+                rrcalls, sqcalls, extras, hops, done, iters + 1)
 
     (pool_d, pool_id, pool_exp, pool_apx, status, dcalls, ecalls, rrcalls,
-     sqcalls, hops, done, iters) = jax.lax.while_loop(cond, body, State)
+     sqcalls, extras, hops, done, iters) = jax.lax.while_loop(cond, body,
+                                                              State)
     if sq8_on:
         # stage-2 final rerank: every approx survivor still in the pool gets
         # its exact distance before results can be returned; entries
@@ -605,7 +600,7 @@ def _search_batch(arrays, queries, cos_theta, cfg: EngineConfig):
         pool_id = jnp.take_along_axis(pool_id, order, axis=1)
     return SearchResult(ids=pool_id, dists=pool_d, dist_calls=dcalls,
                         est_calls=ecalls, hops=hops, iters=iters,
-                        rerank_calls=rrcalls, sq8_calls=sqcalls)
+                        rerank_calls=rrcalls, sq8_calls=sqcalls, extra=extras)
 
 
 # --- compiled-engine cache ---------------------------------------------------
@@ -647,15 +642,21 @@ def _graph_arrays_cached(g: GraphIndex):
     return arrays
 
 
-def build_search_fn(g: GraphIndex, cfg: EngineConfig):
+def build_search_fn(g: GraphIndex, cfg: SearchSpec):
     """Returns (arrays, jitted fn(queries [B,d], cos_theta) -> SearchResult).
 
-    Cached per (graph identity, config): calling twice with the same live
-    graph and an equal config returns the SAME jitted callable, so repeated
-    search_batch calls reuse the compiled executable instead of re-tracing.
+    Cached per (graph identity, canonical spec, router instance): calling
+    twice with the same live graph and an equal spec returns the SAME
+    jitted callable, so repeated search_batch calls reuse the compiled
+    executable instead of re-tracing.  ``SearchSpec.k``/``cos_theta`` are
+    stripped from the key — they do not shape the trace.  The resolved
+    Router is part of the key because the jitted fn bakes its hooks in:
+    re-registering a different router under the same name must miss.
     """
     _purge_dead_cache_entries()
-    key = (id(g), cfg)
+    cfg = cfg.canonical()
+    rt = get_router(cfg.router)
+    key = (id(g), cfg, rt)
     hit = _ENGINE_CACHE.get(key)
     if hit is not None:
         ref, arrays, fn = hit
@@ -668,6 +669,9 @@ def build_search_fn(g: GraphIndex, cfg: EngineConfig):
         # lazily upgrade the (shared) cached dict: exact-only graphs never
         # pay the encode pass or the extra device tables
         ensure_sq8_arrays(g, arrays)
+    # router companion tables (e.g. finger signatures) upgrade it the same
+    # lazy way the first time the router is configured for this graph
+    rt.prepare(g, arrays)
 
     @jax.jit
     def run(queries, cos_theta):
@@ -680,7 +684,7 @@ def build_search_fn(g: GraphIndex, cfg: EngineConfig):
     return arrays, run
 
 
-def search_batch(g: GraphIndex, queries: np.ndarray, cfg: EngineConfig,
+def search_batch(g: GraphIndex, queries: np.ndarray, cfg: SearchSpec,
                  cos_theta: float = 0.0, k: Optional[int] = None) -> SearchResult:
     """Convenience one-shot batched search (compiled fn cached per (graph, cfg))."""
     _, fn = build_search_fn(g, cfg)

@@ -7,7 +7,7 @@ top-k is a cheap merge of per-shard top-k lists (k x n_shards candidates —
 one small all-gather, not a vector-data collective).
 
 Straggler mitigation: the per-shard search runs a *fixed hop budget*
-(EngineConfig.max_hops), so one slow shard cannot stall the merge barrier —
+(SearchSpec.max_hops), so one slow shard cannot stall the merge barrier —
 quality degrades gracefully instead of latency (tested in
 tests/test_sharded_index.py).
 
@@ -18,7 +18,6 @@ flattening all mesh axes into the shard axis.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -30,7 +29,9 @@ from jax.experimental.shard_map import shard_map
 from repro.core import distances as D
 from repro.core.angles import sample_angle_profile
 from repro.core.graph import GraphIndex
-from repro.core.search import EngineConfig, _search_batch
+from repro.core.routers import get_router
+from repro.core.search import _search_batch
+from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
 from repro.quant import sq8 as SQ
 
 
@@ -47,7 +48,7 @@ class ShardedIndexArrays:
     ns: int                  # local shard capacity (excl. pad row)
     metric: str
     cos_theta: float
-    # SQ8 companion tables (per-shard grids; EngineConfig.estimate="sq8")
+    # SQ8 companion tables (per-shard grids; SearchSpec.estimate="sq8")
     sq8_codes: np.ndarray = None   # [S, ns+1, d] uint8
     sq8_lo: np.ndarray = None      # [S, d]
     sq8_scale: np.ndarray = None   # [S, d]
@@ -126,14 +127,20 @@ def _backfill_sq8(arrays: ShardedIndexArrays) -> ShardedIndexArrays:
                                sq8_scale=scale, sq8_eps=eps)
 
 
-def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
+def make_serve_step(mesh: Mesh, cfg: SearchSpec, ns: int, k: int,
                     shard_axes: Optional[Tuple[str, ...]] = None):
     """Build the pjit-able distributed serve step.
 
     shard_axes: mesh axes flattened into the shard dimension (default: all).
     Returns (serve_step, in_shardings, out_shardings) ready for jit/lower.
+    The third output is the aggregate counter vector
+    ``[dist_calls, est_calls, rerank_calls, sq8_calls, hops, iters,
+    *Router.extra_counters]`` (sums across shards and queries; ``iters`` is
+    the max over shards — the straggler's iteration count) that
+    ``ShardedAnnIndex.search`` wraps into a typed ``SearchStats``.
     """
     axes = tuple(shard_axes or mesh.axis_names)
+    extra_names = get_router(cfg.router).extra_counters
 
     def local_search(vectors, neighbors, edge_eu, norms, entries, offsets,
                      sq8_codes, sq8_lo, sq8_scale, sq8_eps,
@@ -158,8 +165,14 @@ def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
         flat_i = jnp.moveaxis(all_i, 0, 1).reshape(queries.shape[0], S * k)
         neg, pos = jax.lax.top_k(-flat_d, k)
         ids = jnp.take_along_axis(flat_i, pos, axis=1)
-        calls = jax.lax.psum(jnp.sum(res.dist_calls), axes)
-        return -neg, ids, calls
+        sums = jax.lax.psum(jnp.stack(
+            [jnp.sum(res.dist_calls), jnp.sum(res.est_calls),
+             jnp.sum(res.rerank_calls), jnp.sum(res.sq8_calls),
+             jnp.sum(res.hops)]
+            + [jnp.sum(res.extra[nm]) for nm in extra_names]), axes)
+        iters = jax.lax.pmax(res.iters, axes)
+        stats_vec = jnp.concatenate([sums[:5], iters[None], sums[5:]])
+        return -neg, ids, stats_vec
 
     pspec_data = P(axes)      # shard leading axis over all shard axes
     pspec_rep = P()           # queries replicated
@@ -177,20 +190,36 @@ def make_serve_step(mesh: Mesh, cfg: EngineConfig, ns: int, k: int,
 
 
 class ShardedAnnIndex:
-    """Runtime wrapper: place shards on a mesh and serve batched queries."""
+    """Runtime wrapper: place shards on a mesh and serve batched queries.
+
+    ``spec`` is the same ``SearchSpec`` the single-index path takes
+    (``metric``/``use_hierarchy`` are overridden from the shard arrays);
+    the legacy kwarg style (``efs=/k=/router=/...``) is shimmed with a
+    DeprecationWarning.  Routers that need per-graph companion tables
+    (``Router.companion_tables``, e.g. ``finger``) are not yet plumbed
+    through the stacked per-shard arrays and are rejected here.
+    """
+
+    DEFAULT_SEARCH = SearchSpec(k=10, efs=100, router="crouting",
+                                max_hops=2048)
 
     def __init__(self, arrays: ShardedIndexArrays, mesh: Mesh,
-                 efs: int = 100, k: int = 10, router: str = "crouting",
-                 max_hops: int = 2048, beam_width: int = 1,
-                 engine: str = "jnp", beam_prune: str = "best",
-                 estimate: str = "exact"):
+                 spec: Optional[SearchSpec] = None, **legacy):
+        spec = resolve_search_spec(spec, legacy, self.DEFAULT_SEARCH,
+                                   "ShardedAnnIndex")
+        spec = dataclasses.replace(spec, metric=arrays.metric,
+                                   use_hierarchy=False)
+        rt = get_router(spec.router)
+        if rt.companion_tables:
+            raise NotImplementedError(
+                f"router {spec.router!r} needs companion tables "
+                f"{rt.companion_tables} which the sharded arrays do not "
+                "carry yet; use the single-index path")
         self.arrays = arrays
         self.mesh = mesh
-        self.k = k
-        self.cfg = EngineConfig(efs=efs, router=router, metric=arrays.metric,
-                                max_hops=max_hops, use_hierarchy=False,
-                                beam_width=beam_width, engine=engine,
-                                beam_prune=beam_prune, estimate=estimate)
+        self.spec = spec
+        self.k = k = spec.k
+        self.cfg = spec        # back-compat alias
         if arrays.sq8_codes is None:
             # arrays predating the SQ8 tables (direct construction, old
             # persisted shards): backfill per-shard grids from the stacked
@@ -198,7 +227,7 @@ class ShardedAnnIndex:
             # lower-bound contract is unaffected
             arrays = _backfill_sq8(arrays)
             self.arrays = arrays
-        serve, in_sh, _ = make_serve_step(mesh, self.cfg, arrays.ns, k)
+        serve, in_sh, _ = make_serve_step(mesh, self.spec, arrays.ns, k)
         self._serve = jax.jit(serve, in_shardings=in_sh)
         dev = lambda a, sh: jax.device_put(a, sh)
         self._placed = tuple(
@@ -207,10 +236,27 @@ class ShardedAnnIndex:
                  "offsets", "sq8_codes", "sq8_lo", "sq8_scale", "sq8_eps"),
                 in_sh[:10]))
 
-    def search(self, queries: np.ndarray, cos_theta: Optional[float] = None):
+    def search(self, queries: np.ndarray, cos_theta: Optional[float] = None
+               ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Returns (ids [B,k], dists [B,k], SearchStats).
+
+        The stats fields are batch TOTALS reduced across shards (``iters``
+        is the straggler's count), not per-query arrays — the per-shard
+        engines ran behind one collective merge.
+        """
         q = D.preprocess_vectors(np.ascontiguousarray(queries, np.float32),
                                  self.arrays.metric)
-        ct = self.arrays.cos_theta if cos_theta is None else cos_theta
-        d, i, calls = self._serve(*self._placed, jnp.asarray(q),
-                                  jnp.asarray(ct, jnp.float32))
-        return np.asarray(i), np.asarray(d), int(calls)
+        # precedence: per-call override > spec > profiled shard median
+        ct = cos_theta if cos_theta is not None else self.spec.cos_theta
+        if ct is None:
+            ct = self.arrays.cos_theta
+        d, i, sv = self._serve(*self._placed, jnp.asarray(q),
+                               jnp.asarray(ct, jnp.float32))
+        sv = np.asarray(sv)
+        extra_names = get_router(self.spec.router).extra_counters
+        stats = SearchStats(
+            dist_calls=int(sv[0]), est_calls=int(sv[1]),
+            rerank_calls=int(sv[2]), sq8_calls=int(sv[3]), hops=int(sv[4]),
+            iters=int(sv[5]), router=self.spec.router,
+            extra={nm: int(sv[6 + j]) for j, nm in enumerate(extra_names)})
+        return np.asarray(i), np.asarray(d), stats

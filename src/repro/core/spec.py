@@ -1,0 +1,210 @@
+"""Typed search configuration + statistics for the whole search stack.
+
+``SearchSpec`` is THE search-request object: one frozen dataclass subsuming
+the old ``EngineConfig`` plus the kwarg soup (``router=/cos_theta=/
+beam_width=/...``) that used to be copy-plumbed through ``AnnIndex.search``,
+``ShardedAnnIndex``, NSG candidate acquisition, the model-cell builder,
+benchmarks and examples.  ``EngineConfig`` remains as a deprecated alias in
+``repro.core.search`` — it IS this class.
+
+``SearchStats`` is the typed result-statistics record replacing the ad-hoc
+``info`` dict ``AnnIndex.search`` used to return.  It carries the fixed
+engine counters plus ``extra`` — per-router counters a registered
+``Router`` declares (``Router.extra_counters``, e.g. the finger router's
+``finger_est_calls``) — and serializes uniformly into ``BENCH_engine.json``
+via ``summary()``.  Dict-style access (``stats["dist_calls"]``) still works
+for one release and emits a ``DeprecationWarning``.
+
+Not to be confused with ``repro.core.ref_search.SearchStats`` — the scalar
+NumPy oracle's instrumentation record (angles, pruned-id sets), which stays
+oracle-local.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+ENGINES = ("jnp", "pallas", "pallas_unfused")
+ESTIMATES = ("exact", "angle", "sq8", "both")
+BEAM_PRUNE_POLICIES = ("best", "all")
+
+_K_DEFAULT = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """One frozen object describing a search request end to end.
+
+    Engine-shaping fields (everything except ``k``/``cos_theta``) key the
+    compiled-engine cache; ``k`` only slices the returned pool and
+    ``cos_theta`` is passed to the jitted engine as a traced scalar, so
+    neither triggers a re-trace (see ``canonical()``).
+
+    ``metric`` and ``use_hierarchy`` are *index* properties: ``AnnIndex`` /
+    ``ShardedAnnIndex`` overwrite them from the graph, so user-built specs
+    can leave the defaults.
+    """
+
+    efs: int = 100                # result-pool size (>= k)
+    router: str = "none"          # registry name (repro.core.routers)
+    metric: str = "l2"
+    max_hops: int = 4096          # hard per-query expansion budget
+    use_hierarchy: bool = True
+    beam_width: int = 1           # W frontier nodes expanded per iteration
+    engine: str = "jnp"           # jnp | pallas | pallas_unfused
+    # Which beam slots' lanes are eligible for the router's prune test:
+    #   "best" (default) — only the best slot's neighbors, i.e. exactly the
+    #     lanes sequential Algorithm 2 would test at this moment.  Recall
+    #     matches the W=1 risk profile; call savings dilute as W grows.
+    #   "all" — every slot's neighbors.  Maximum distance-call savings, but
+    #     estimates from the 2nd..Wth-best parents (which sequential search
+    #     would expand later, from closer parents) can mis-prune a doorway
+    #     node and strand a query — use with efs comfortably above k.
+    beam_prune: str = "best"
+    # Distance-computation strategy for candidate lanes:
+    #   "exact" (default) — every surviving lane fetches its fp32 row and
+    #     computes the exact distance (the classic path; the router's prune
+    #     still applies).
+    #   "angle" — alias of "exact" that *requires* a pruning router; kept as
+    #     an explicit name for benchmark configs.
+    #   "sq8"   — two-stage: lanes first compute a quantized (uint8 codes,
+    #     4x fewer bytes) estimate + conservative lower bound; lanes whose
+    #     bound beats the pool bound skip the fp32 row entirely, survivors
+    #     enter the pool approximately and are re-ranked exactly only when
+    #     expanded or returned.  Composes with a pruning router (the router
+    #     test runs first, on adjacency data alone).
+    #   "both"  — "sq8" + an assertion that a pruning router is configured.
+    estimate: str = "exact"
+    # Request-only fields (do not shape the compiled engine):
+    k: int = _K_DEFAULT           # how many results to return per query
+    cos_theta: Optional[float] = None   # None -> the index's angle profile
+
+    def __post_init__(self):
+        assert self.engine in ENGINES, f"unknown engine {self.engine!r}"
+        assert self.estimate in ESTIMATES, \
+            f"unknown estimate {self.estimate!r}"
+        assert self.beam_prune in BEAM_PRUNE_POLICIES, \
+            f"unknown beam_prune policy {self.beam_prune!r}"
+        assert self.beam_width >= 1, "beam_width must be >= 1"
+
+    def canonical(self) -> "SearchSpec":
+        """Strip the request-only fields — the compiled-engine cache key.
+
+        Two specs differing only in ``k``/``cos_theta`` trace to the same
+        executable (``k`` slices post-hoc, ``cos_theta`` is a traced arg).
+        """
+        if self.k == _K_DEFAULT and self.cos_theta is None:
+            return self
+        return dataclasses.replace(self, k=_K_DEFAULT, cos_theta=None)
+
+    def replace(self, **changes) -> "SearchSpec":
+        """Functional update (sugar for ``dataclasses.replace``)."""
+        return dataclasses.replace(self, **changes)
+
+
+_LEGACY_SEARCH_KWARGS = ("k", "efs", "router", "cos_theta", "max_hops",
+                         "beam_width", "engine", "beam_prune", "estimate")
+
+
+def resolve_search_spec(spec: Optional["SearchSpec"], legacy: dict,
+                        default: "SearchSpec", owner: str) -> "SearchSpec":
+    """Shared deprecation shim: merge legacy kwargs into a SearchSpec.
+
+    ``spec`` wins when given (mixing raises); legacy kwargs emit a
+    ``DeprecationWarning`` and overlay ``default``.  Callers with no spec
+    and no kwargs get ``default`` silently (the new-style bare call).
+    """
+    if spec is not None:
+        if legacy:
+            raise TypeError(
+                f"{owner}: pass either spec=SearchSpec(...) or legacy "
+                f"keyword arguments, not both (got {sorted(legacy)})")
+        if not isinstance(spec, SearchSpec):
+            raise TypeError(f"{owner}: spec must be a SearchSpec, "
+                            f"got {type(spec).__name__}")
+        return spec
+    if not legacy:
+        return default
+    bad = set(legacy) - set(_LEGACY_SEARCH_KWARGS)
+    if bad:
+        raise TypeError(f"{owner}: unknown keyword arguments {sorted(bad)}")
+    warnings.warn(
+        f"{owner} keyword arguments {sorted(legacy)} are deprecated; pass "
+        "spec=SearchSpec(...) instead (see README 'Search API')",
+        DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(default, **legacy)
+
+
+_STATS_FIELDS = ("dist_calls", "est_calls", "rerank_calls", "sq8_calls",
+                 "hops", "iters", "router")
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Typed per-search statistics (replaces the legacy ``info`` dict).
+
+    On the single-index path the counter fields are per-query ``[B]`` int
+    arrays; on the sharded path they are batch totals already reduced across
+    shards (``iters`` is the max over shards — the straggler's iteration
+    count).  ``extra`` holds per-router counters in registry-declared order
+    (``Router.extra_counters``).
+    """
+
+    dist_calls: np.ndarray       # exact fp32 distance evaluations
+    est_calls: np.ndarray        # router estimate evaluations
+    rerank_calls: np.ndarray     # stage-2 exact reranks (sq8 path)
+    sq8_calls: np.ndarray        # stage-1 quantized estimates
+    hops: np.ndarray             # node expansions
+    iters: int                   # batch-level hop-loop iterations
+    router: str = "none"
+    extra: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_result(cls, res, router: str = "none") -> "SearchStats":
+        """Build from an engine ``SearchResult`` (device arrays -> host)."""
+        return cls(
+            dist_calls=np.asarray(res.dist_calls),
+            est_calls=np.asarray(res.est_calls),
+            rerank_calls=np.asarray(res.rerank_calls),
+            sq8_calls=np.asarray(res.sq8_calls),
+            hops=np.asarray(res.hops),
+            iters=int(res.iters),
+            router=router,
+            extra={k: np.asarray(v)
+                   for k, v in (getattr(res, "extra", None) or {}).items()},
+        )
+
+    def summary(self) -> Dict[str, object]:
+        """Uniform JSON-ready digest (per-query means) for benchmark files."""
+        out: Dict[str, object] = {"router": self.router, "iters": int(self.iters)}
+        for f in ("dist_calls", "est_calls", "rerank_calls", "sq8_calls",
+                  "hops"):
+            out[f] = round(float(np.mean(getattr(self, f))), 1)
+        for k, v in self.extra.items():
+            out[k] = round(float(np.mean(v)), 1)
+        return out
+
+    # --- legacy dict-style access (one-release deprecation shim) ----------
+    def keys(self) -> Tuple[str, ...]:
+        return _STATS_FIELDS + tuple(self.extra)
+
+    def __contains__(self, key) -> bool:
+        return key in self.keys()
+
+    def __getitem__(self, key):
+        warnings.warn(
+            "dict-style SearchStats access (info['...']) is deprecated; "
+            "use the typed attributes (stats.dist_calls, ...)",
+            DeprecationWarning, stacklevel=2)
+        if key in _STATS_FIELDS:
+            return getattr(self, key)
+        try:
+            return self.extra[key]
+        except KeyError:
+            raise KeyError(key) from None
+
+    def get(self, key, default=None):
+        return self[key] if key in self else default

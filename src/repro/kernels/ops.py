@@ -7,11 +7,9 @@ bit-accurate vs the TPU lowering's math); on a real TPU backend set
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.l2_distance import l2_distance_pallas
 from repro.kernels.crouting_prune import crouting_prune_pallas

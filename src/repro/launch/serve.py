@@ -15,6 +15,7 @@ import numpy as np
 import jax
 
 from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
+from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 from repro.launch.mesh import make_local_mesh
 
@@ -43,17 +44,18 @@ def main():
     print(f"index built in {time.time()-t0:.1f}s "
           f"(theta*={np.arccos(arrays.cos_theta)/np.pi:.3f}pi)")
     mesh = make_local_mesh(n_dev, "shards")
-    idx = ShardedAnnIndex(arrays, mesh, efs=args.efs, k=args.k,
-                          router=args.router)
+    idx = ShardedAnnIndex(arrays, mesh,
+                          spec=SearchSpec(efs=args.efs, k=args.k,
+                                          router=args.router, max_hops=2048))
 
     gt = exact_ground_truth(ds, k=args.k)
     lat, total_calls, all_ids = [], 0, []
     for b in range(args.batches):
         q = ds.queries[b * args.batch:(b + 1) * args.batch]
         t0 = time.time()
-        ids, dists, calls = idx.search(q)
+        ids, dists, stats = idx.search(q)
         lat.append(time.time() - t0)
-        total_calls += calls
+        total_calls += int(stats.dist_calls)
         all_ids.append(ids)
     rec = recall_at_k(np.concatenate(all_ids), gt, args.k)
     qps = args.batch / np.median(lat)

@@ -9,7 +9,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.data.synthetic import LMStream

@@ -6,7 +6,6 @@ parameter allocation for the full configs (DESIGN.md deliverable (f))."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -277,16 +276,16 @@ def _dlrm_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
 # ANNS family (the paper's own system)
 # ==========================================================================
 def _anns_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
-    from repro.core.search import EngineConfig
     from repro.core.sharded_index import make_serve_step
+    from repro.core.spec import SearchSpec
 
     d = shape.dims
     n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     ns = -(-d["n_total"] // n_shards)
     m = d["max_degree"]
     dim, B, efs, k = d["dim"], d["batch"], d["efs"], d["k"]
-    cfg = EngineConfig(efs=efs, router=spec.model_cfg.router, metric="l2",
-                       max_hops=2 * efs, use_hierarchy=False)
+    cfg = SearchSpec(efs=efs, router=spec.model_cfg.router, metric="l2",
+                     max_hops=2 * efs, use_hierarchy=False)
     serve, in_sh, out_sh = make_serve_step(mesh, cfg, ns, k)
     vdt = jnp.dtype(getattr(spec.model_cfg, "vec_dtype", "float32"))
     arg_specs = (
@@ -392,14 +391,16 @@ def build_smoke(spec: ArchSpec, seed: int = 0):
 
     # anns
     from repro.core.index import AnnIndex
+    from repro.core.spec import SearchSpec
     from repro.data.vectors import make_dataset
 
     def run():
         ds = make_dataset(n_base=600, n_query=8, dim=32, n_clusters=8, seed=seed)
         idx = AnnIndex.build(ds.base, graph=spec.smoke_cfg.graph,
                              m=spec.smoke_cfg.m, efc=spec.smoke_cfg.efc)
-        ids, dists, info = idx.search(ds.queries, k=5, efs=32,
-                                      router=spec.smoke_cfg.router)
+        ids, dists, stats = idx.search(
+            ds.queries, spec=SearchSpec(k=5, efs=32,
+                                        router=spec.smoke_cfg.router))
         return {"loss": jnp.asarray(0.0), "out": jnp.asarray(dists),
-                "ids": ids, "dist_calls": info["dist_calls"]}
+                "ids": ids, "dist_calls": stats.dist_calls}
     return run

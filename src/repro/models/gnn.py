@@ -15,7 +15,7 @@ All models share one GraphBatch layout (padded edge lists, masks) so every
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

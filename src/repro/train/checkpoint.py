@@ -21,7 +21,6 @@ import hashlib
 import json
 import os
 import shutil
-import tempfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax

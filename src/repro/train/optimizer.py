@@ -9,7 +9,7 @@ rounding-free moment precision — the standard large-model trade.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

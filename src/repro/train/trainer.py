@@ -11,7 +11,6 @@ Features exercised by tests/test_trainer.py and examples/train_lm.py:
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Any, Callable, Dict, Optional
 

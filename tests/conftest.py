@@ -1,4 +1,3 @@
-import numpy as np
 import pytest
 
 from repro.data.vectors import make_dataset, exact_ground_truth

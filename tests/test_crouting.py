@@ -1,7 +1,6 @@
 """Paper-behavior validation: the claims of CRouting reproduce qualitatively
 on synthetic data (quantitative table in EXPERIMENTS.md)."""
 import numpy as np
-import pytest
 
 from repro.core.angles import sample_angle_profile, theoretical_angle_pdf
 from repro.core.ref_search import search_ref

@@ -5,6 +5,7 @@ import pytest
 
 from repro.core.ref_search import search_ref
 from repro.core.search import (EngineConfig, build_search_fn, search_batch)
+from repro.core.spec import SearchSpec
 
 
 def _pools_match(eng_ids, ref_ids, n):
@@ -138,12 +139,12 @@ def test_beam_prune_best_holds_recall_where_all_collapses():
     ds = make_dataset(n_base=1200, n_query=16, dim=32, n_clusters=16, seed=5)
     idx = AnnIndex.build(ds.base, graph="hnsw", m=8, efc=48)
     gt = exact_ground_truth(ds, k=10)
-    r1, _, _ = idx.search(ds.queries, k=10, efs=32, router="crouting",
-                          beam_width=1)
-    rb, _, _ = idx.search(ds.queries, k=10, efs=32, router="crouting",
-                          beam_width=4, beam_prune="best")
-    ra, _, _ = idx.search(ds.queries, k=10, efs=32, router="crouting",
-                          beam_width=4, beam_prune="all")
+    base = SearchSpec(k=10, efs=32, router="crouting")
+    r1, _, _ = idx.search(ds.queries, spec=base)
+    rb, _, _ = idx.search(ds.queries, spec=base.replace(beam_width=4,
+                                                        beam_prune="best"))
+    ra, _, _ = idx.search(ds.queries, spec=base.replace(beam_width=4,
+                                                        beam_prune="all"))
     rec1, rec_b = recall_at_k(r1, gt, 10), recall_at_k(rb, gt, 10)
     rec_a = recall_at_k(ra, gt, 10)
     assert rec_b >= rec1 - 1e-9, (rec1, rec_b)
@@ -160,14 +161,14 @@ def test_beam_prune_all_saves_distance_calls():
 
     ds = make_dataset(n_base=1200, n_query=16, dim=32, n_clusters=16, seed=5)
     idx = AnnIndex.build(ds.base, graph="hnsw", m=8, efc=48)
-    _, _, i1 = idx.search(ds.queries, k=10, efs=32, router="crouting",
-                          beam_width=1)
-    _, _, ib = idx.search(ds.queries, k=10, efs=32, router="crouting",
-                          beam_width=4, beam_prune="best")
-    _, _, ia = idx.search(ds.queries, k=10, efs=32, router="crouting",
-                          beam_width=4, beam_prune="all")
-    assert ia["dist_calls"].mean() <= 1.10 * i1["dist_calls"].mean()
-    assert ib["dist_calls"].mean() >= ia["dist_calls"].mean()
+    base = SearchSpec(k=10, efs=32, router="crouting")
+    _, _, i1 = idx.search(ds.queries, spec=base)
+    _, _, ib = idx.search(ds.queries, spec=base.replace(beam_width=4,
+                                                        beam_prune="best"))
+    _, _, ia = idx.search(ds.queries, spec=base.replace(beam_width=4,
+                                                        beam_prune="all"))
+    assert ia.dist_calls.mean() <= 1.10 * i1.dist_calls.mean()
+    assert ib.dist_calls.mean() >= ia.dist_calls.mean()
 
 
 def test_pallas_unfused_engine_matches_jnp(tiny_graph):

@@ -65,13 +65,16 @@ def test_metric_generality(metric):
                       metric=metric, seed=2)
     idx = AnnIndex.build(ds.base, graph="hnsw", metric=metric, m=12, efc=64)
     gt = exact_ground_truth(ds, k=10)
-    ids_p, _, info_p = idx.search(ds.queries, k=10, efs=48, router="none")
-    ids_c, _, info_c = idx.search(ds.queries, k=10, efs=48, router="crouting")
+    from repro.core.spec import SearchSpec
+    ids_p, _, info_p = idx.search(ds.queries, spec=SearchSpec(
+        k=10, efs=48, router="none"))
+    ids_c, _, info_c = idx.search(ds.queries, spec=SearchSpec(
+        k=10, efs=48, router="crouting"))
     rec_p = recall_at_k(ids_p, gt, 10)
     rec_c = recall_at_k(ids_c, gt, 10)
     assert rec_p > 0.8, (metric, rec_p)
     assert rec_c > rec_p - 0.15, (metric, rec_c)
-    assert info_c["dist_calls"].mean() < info_p["dist_calls"].mean()
+    assert info_c.dist_calls.mean() < info_p.dist_calls.mean()
 
 
 def test_index_size_accounting(hnsw_index):
@@ -88,8 +91,9 @@ def test_save_load_roundtrip(tmp_path, small_ds, hnsw_index, hnsw_profile):
     p = str(tmp_path / "idx.npz")
     idx.save(p)
     idx2 = AnnIndex.load(p)
-    i1, d1, _ = idx.search(small_ds.queries[:5], k=5)
-    i2, d2, _ = idx2.search(small_ds.queries[:5], k=5)
+    from repro.core.spec import SearchSpec
+    i1, d1, _ = idx.search(small_ds.queries[:5], spec=SearchSpec(k=5))
+    i2, d2, _ = idx2.search(small_ds.queries[:5], spec=SearchSpec(k=5))
     assert np.array_equal(i1, i2)
     np.testing.assert_allclose(d1, d2)
     assert abs(idx2.profile.theta_star - hnsw_profile.theta_star) < 1e-9

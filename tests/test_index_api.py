@@ -1,0 +1,137 @@
+"""Public index API (ISSUE 4 satellites): the SearchSpec surface, the
+legacy-kwarg deprecation shim, typed SearchStats, the pad-slot distance
+fix, and the save/load roundtrip incl. the full angle profile."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec, SearchStats
+from repro.data.vectors import make_dataset
+
+
+@pytest.fixture(scope="module")
+def built(small_ds):
+    return AnnIndex.build(small_ds.base, graph="hnsw", m=12, efc=64)
+
+
+# --------------------------------------------------------------------------
+# legacy-kwarg deprecation shim
+# --------------------------------------------------------------------------
+def test_legacy_kwargs_still_work_and_warn(small_ds, built):
+    """Old call style returns identical results to the SearchSpec path and
+    emits DeprecationWarning (one-release shim)."""
+    q = small_ds.queries
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        ids_l, d_l, st_l = built.search(q, k=10, efs=48, router="crouting",
+                                        beam_width=4)
+    ids_s, d_s, st_s = built.search(
+        q, spec=SearchSpec(k=10, efs=48, router="crouting", beam_width=4))
+    np.testing.assert_array_equal(ids_l, ids_s)
+    np.testing.assert_array_equal(d_l, d_s)
+    assert (st_l.dist_calls == st_s.dist_calls).all()
+    assert (st_l.est_calls == st_s.est_calls).all()
+    assert st_l.iters == st_s.iters
+
+
+def test_bare_call_uses_default_spec_without_warning(small_ds, built, recwarn):
+    ids, dists, stats = built.search(small_ds.queries[:4])
+    assert ids.shape == (4, 10)
+    assert stats.router == "crouting"
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_mixing_spec_and_legacy_kwargs_raises(small_ds, built):
+    with pytest.raises(TypeError, match="not both"):
+        built.search(small_ds.queries[:2], spec=SearchSpec(), efs=32)
+
+
+def test_unknown_legacy_kwarg_raises(small_ds, built):
+    with pytest.raises(TypeError, match="unknown keyword"):
+        built.search(small_ds.queries[:2], ef_search=32)
+
+
+def test_spec_positional_typo_raises(small_ds, built):
+    with pytest.raises(TypeError, match="SearchSpec"):
+        built.search(small_ds.queries[:2], 10)
+
+
+# --------------------------------------------------------------------------
+# typed SearchStats
+# --------------------------------------------------------------------------
+def test_search_returns_typed_stats(small_ds, built):
+    _, _, stats = built.search(small_ds.queries[:4],
+                               spec=SearchSpec(k=5, efs=32, router="crouting"))
+    assert isinstance(stats, SearchStats)
+    assert stats.router == "crouting"
+    assert stats.dist_calls.shape == (4,)
+    summ = stats.summary()
+    assert summ["router"] == "crouting" and summ["dist_calls"] > 0
+    # dict-style access still works for one release, with a warning
+    with pytest.warns(DeprecationWarning):
+        assert (stats["dist_calls"] == stats.dist_calls).all()
+    assert "dist_calls" in stats and "nope" not in stats
+
+
+def test_k_and_cos_theta_do_not_retrigger_jit(built):
+    """Request-only spec fields must not fragment the compiled-engine
+    cache (SearchSpec.canonical)."""
+    from repro.core.search import build_search_fn
+
+    g = built.graph
+    _, f1 = build_search_fn(g, SearchSpec(k=5, efs=32, cos_theta=0.1))
+    _, f2 = build_search_fn(g, SearchSpec(k=7, efs=32, cos_theta=0.9))
+    assert f1 is f2
+    _, f3 = build_search_fn(g, SearchSpec(k=5, efs=33))
+    assert f3 is not f1
+
+
+# --------------------------------------------------------------------------
+# pad-slot masking (satellite fix): ids -1 must never carry a finite dist
+# --------------------------------------------------------------------------
+def test_empty_result_slots_have_inf_distance():
+    ds = make_dataset(n_base=6, n_query=3, dim=8, n_clusters=2, seed=0)
+    idx = AnnIndex.build(ds.base, graph="knn", k=4, profile=False)
+    ids, dists, _ = idx.search(ds.queries, spec=SearchSpec(k=10, efs=16,
+                                                           router="none"))
+    assert (ids == -1).any(), "expected pad slots with only 6 base rows"
+    assert np.isinf(dists[ids == -1]).all()
+    # and real slots stay finite
+    assert np.isfinite(dists[ids >= 0]).all()
+
+
+# --------------------------------------------------------------------------
+# save/load roundtrip (satellite fix): hierarchy + FULL angle profile
+# --------------------------------------------------------------------------
+def test_save_load_roundtrip_hierarchy_and_profile(tmp_path, small_ds):
+    idx = AnnIndex.build(small_ds.base[:800], graph="hnsw", m=8, efc=48)
+    assert idx.graph.upper_neighbors, "fixture should exercise the hierarchy"
+    path = os.path.join(tmp_path, "idx.npz")
+    idx.save(path)
+    back = AnnIndex.load(path)
+
+    np.testing.assert_array_equal(back.graph.vectors, idx.graph.vectors)
+    np.testing.assert_array_equal(back.graph.neighbors, idx.graph.neighbors)
+    assert back.graph.entry_point == idx.graph.entry_point
+    assert len(back.graph.upper_neighbors) == len(idx.graph.upper_neighbors)
+    for a, b in zip(back.graph.upper_neighbors, idx.graph.upper_neighbors):
+        np.testing.assert_array_equal(a, b)
+
+    p0, p1 = idx.profile, back.profile
+    assert p1 is not None
+    np.testing.assert_allclose(p1.theta_star, p0.theta_star)
+    np.testing.assert_allclose(p1.cos_theta_star, p0.cos_theta_star)
+    assert p1.percentile == p0.percentile
+    np.testing.assert_array_equal(p1.samples, p0.samples)
+    # regression: these two were silently zeroed on load before ISSUE 4
+    assert p1.n_sample_queries == p0.n_sample_queries > 0
+    assert p1.sample_secs == pytest.approx(p0.sample_secs)
+
+    # and the loaded index searches identically (profile drives cos_theta)
+    spec = SearchSpec(k=10, efs=32, router="crouting")
+    ids_a, d_a, _ = idx.search(small_ds.queries[:8], spec=spec)
+    ids_b, d_b, _ = back.search(small_ds.queries[:8], spec=spec)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_allclose(d_a, d_b, rtol=1e-6)

@@ -112,28 +112,33 @@ def test_sq8_recall_floor_at_efs64(suite, estimate, router):
     from repro.data.vectors import recall_at_k
 
     for ds, idx, gt in suite:
-        ids_e, _, info_e = idx.search(ds.queries, k=10, efs=64, router="none",
-                                      estimate="exact")
-        ids_q, _, info_q = idx.search(ds.queries, k=10, efs=64, router=router,
-                                      estimate=estimate)
+        from repro.core.spec import SearchSpec
+        ids_e, _, info_e = idx.search(
+            ds.queries, spec=SearchSpec(k=10, efs=64, router="none",
+                                        estimate="exact"))
+        ids_q, _, info_q = idx.search(
+            ds.queries, spec=SearchSpec(k=10, efs=64, router=router,
+                                        estimate=estimate))
         rec_e = recall_at_k(ids_e, gt, 10)
         rec_q = recall_at_k(ids_q, gt, 10)
         assert rec_q >= rec_e - 0.01, (rec_e, rec_q)
         # the point of the two stages: far fewer fp32 row fetches than the
         # exact baseline performs distance calls
-        assert info_q["rerank_calls"].mean() < info_e["dist_calls"].mean()
-        assert info_q["dist_calls"].mean() < info_e["dist_calls"].mean()
+        assert info_q.rerank_calls.mean() < info_e.dist_calls.mean()
+        assert info_q.dist_calls.mean() < info_e.dist_calls.mean()
         # stage-1 ran, and every returned candidate was re-ranked exactly
-        assert info_q["sq8_calls"].mean() > 0
-        assert info_q["rerank_calls"].mean() > 0
+        assert info_q.sq8_calls.mean() > 0
+        assert info_q.rerank_calls.mean() > 0
 
 
 def test_sq8_returned_distances_are_exact(suite):
     """Approx pool entries must be re-ranked before being returned: the
     reported top-k distances equal the true distances of the returned ids."""
     ds, idx, _ = suite[0]
-    ids, dists, _ = idx.search(ds.queries, k=10, efs=64, router="none",
-                               estimate="sq8")
+    from repro.core.spec import SearchSpec
+    ids, dists, _ = idx.search(ds.queries,
+                               spec=SearchSpec(k=10, efs=64, router="none",
+                                               estimate="sq8"))
     for qi in range(0, len(ds.queries), 7):
         for j in range(10):
             if ids[qi, j] < 0:

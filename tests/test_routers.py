@@ -1,0 +1,174 @@
+"""Router protocol + registry (ISSUE 4 tentpole): the four built-ins are
+registry entries with unchanged behavior (oracle/counter parity lives in
+test_engine_equivalence/test_crouting), the engine-integrated ``finger``
+router runs under all three engines, and a custom strategy registers as a
+small plugin with its own counters."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.routers import (EdgeAngleRouter, Router, available_routers,
+                                get_router, register_router,
+                                unregister_router)
+from repro.core.search import search_batch
+from repro.core.spec import SearchSpec
+
+
+@pytest.fixture(scope="module")
+def tiny(small_ds, hnsw_index, hnsw_profile):
+    return small_ds, hnsw_index, hnsw_profile.cos_theta_star
+
+
+def test_builtin_routers_are_registry_entries():
+    names = available_routers()
+    for expected in ("none", "crouting", "crouting_o", "triangle", "finger"):
+        assert expected in names, names
+    cr = get_router("crouting")
+    assert cr.prunes and cr.revisit_pruned and not cr.permanent
+    assert not get_router("crouting_o").revisit_pruned
+    tri = get_router("triangle")
+    assert tri.permanent and not tri.counts_est
+    assert tri.cos_theta_eff(0.123) == 1.0     # exact lower bound
+    assert not get_router("none").prunes
+    fi = get_router("finger")
+    assert fi.permanent and fi.extra_counters == ("finger_est_calls",)
+    assert fi.companion_tables                  # sharded path must reject it
+
+
+def test_unknown_router_name_raises_with_available_list(tiny):
+    ds, g, _ = tiny
+    with pytest.raises(ValueError, match="crouting"):
+        search_batch(g, ds.queries[:2], SearchSpec(efs=16, router="bogus"))
+
+
+def test_register_router_refuses_silent_overwrite():
+    with pytest.raises(ValueError, match="already registered"):
+        register_router(Router(name="none"))
+
+
+def test_finger_router_prunes_and_counts(tiny):
+    ds, g, ct = tiny
+    plain = search_batch(g, ds.queries, SearchSpec(efs=48, router="none"))
+    fing = search_batch(g, ds.queries, SearchSpec(efs=48, router="finger"),
+                        cos_theta=ct)
+    assert float(np.mean(fing.dist_calls)) < float(np.mean(plain.dist_calls))
+    assert int(np.asarray(fing.est_calls).sum()) > 0
+    # the router-declared extra counter rides the engine state
+    assert set(fing.extra) == {"finger_est_calls"}
+    np.testing.assert_array_equal(np.asarray(fing.extra["finger_est_calls"]),
+                                  np.asarray(fing.est_calls))
+
+
+def test_finger_recall_within_0_01_of_none(tiny, ground_truth):
+    from repro.data.vectors import recall_at_k
+
+    ds, g, ct = tiny
+    plain = search_batch(g, ds.queries, SearchSpec(efs=64, router="none"))
+    fing = search_batch(g, ds.queries, SearchSpec(efs=64, router="finger"),
+                        cos_theta=ct)
+    rec_p = recall_at_k(np.asarray(plain.ids[:, :10]), ground_truth, 10)
+    rec_f = recall_at_k(np.asarray(fing.ids[:, :10]), ground_truth, 10)
+    assert rec_f >= rec_p - 0.01, (rec_p, rec_f)
+
+
+@pytest.mark.parametrize("engine,W", [("pallas", 1), ("pallas", 4),
+                                      ("pallas_unfused", 2)])
+def test_finger_router_matches_jnp_under_pallas_engines(engine, W):
+    """The finger estimate runs on the jnp path under every engine (its
+    form is not the kernels' edge-angle expression), but the kernel
+    engines' gathers/merges must still reproduce the jnp engine exactly."""
+    from repro.core.hnsw import build_hnsw
+    from repro.data.vectors import make_dataset
+
+    ds = make_dataset(n_base=600, n_query=6, dim=24, n_clusters=12, seed=3)
+    g = build_hnsw(ds.base, m=8, efc=48, seed=0)
+    a = search_batch(g, ds.queries, SearchSpec(efs=20, router="finger",
+                                               beam_width=W))
+    b = search_batch(g, ds.queries, SearchSpec(efs=20, router="finger",
+                                               beam_width=W, engine=engine))
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(np.asarray(a.dists), np.asarray(b.dists),
+                               rtol=1e-6, atol=1e-6)
+    assert (np.asarray(a.dist_calls) == np.asarray(b.dist_calls)).all()
+    assert (np.asarray(a.est_calls) == np.asarray(b.est_calls)).all()
+    assert (np.asarray(a.extra["finger_est_calls"])
+            == np.asarray(b.extra["finger_est_calls"])).all()
+
+
+def test_finger_companion_tables_upgrade_arrays_cache_lazily(tiny):
+    """Like ensure_sq8_arrays: the per-graph arrays dict gains the finger
+    tables only when a finger config first touches the graph, in place."""
+    from repro.core.hnsw import build_hnsw
+    from repro.core.search import build_search_fn
+    from repro.data.vectors import make_dataset
+
+    ds = make_dataset(n_base=400, n_query=2, dim=16, n_clusters=8, seed=2)
+    g = build_hnsw(ds.base, m=6, efc=24, seed=0)
+    arrays, _ = build_search_fn(g, SearchSpec(efs=12, router="none"))
+    assert "finger_edge_sig" not in arrays
+    arrays2, _ = build_search_fn(g, SearchSpec(efs=12, router="finger"))
+    assert arrays2 is arrays and "finger_edge_sig" in arrays
+    sig = arrays["finger_edge_sig"]
+    assert sig.shape == (g.n + 1, g.max_degree, 2)   # r_bits=64 -> 2 words
+    assert not np.asarray(sig[-1]).any()             # pad row: empty sigs
+
+
+def test_reregistering_a_router_invalidates_the_compiled_engine(tiny):
+    """Regression (review finding): the jitted engine bakes the router's
+    hooks in, so the compiled-fn cache is keyed on the resolved Router
+    INSTANCE — swapping the registry entry under the same name must miss
+    the cache, not silently serve the old strategy."""
+    ds, g, ct = tiny
+    name = "_test_swap"
+    register_router(Router(name=name, prunes=False))      # behaves like none
+    try:
+        spec = SearchSpec(efs=32, router=name)
+        v1 = search_batch(g, ds.queries[:8], spec, cos_theta=ct)
+        assert int(np.asarray(v1.est_calls).sum()) == 0
+        register_router(EdgeAngleRouter(name=name, prunes=True,
+                                        kernel_estimate=True),
+                        overwrite=True)                   # now == crouting
+        v2 = search_batch(g, ds.queries[:8], spec, cos_theta=ct)
+        assert int(np.asarray(v2.est_calls).sum()) > 0, \
+            "stale compiled engine served after re-registration"
+        twin = search_batch(g, ds.queries[:8],
+                            SearchSpec(efs=32, router="crouting"),
+                            cos_theta=ct)
+        assert (np.asarray(v2.dist_calls) == np.asarray(twin.dist_calls)).all()
+    finally:
+        unregister_router(name)
+
+
+def test_custom_router_is_a_small_plugin(tiny):
+    """The plugin story: a strategy registered from user code — here an
+    edge-angle variant with its own counter — runs through the engine with
+    no engine changes, and its counter lands in SearchResult.extra."""
+    import jax.numpy as jnp
+
+    @dataclasses.dataclass(frozen=True)
+    class CountingRouter(EdgeAngleRouter):
+        def estimate_rank(self, ctx):
+            est_rank, _ = super().estimate_rank(ctx)
+            return est_rank, {"my_tests": jnp.sum(ctx.try_prune, axis=1,
+                                                  dtype=jnp.int32)}
+
+    register_router(CountingRouter(name="_test_counting", prunes=True,
+                                   extra_counters=("my_tests",)))
+    try:
+        ds, g, ct = tiny
+        twin = search_batch(g, ds.queries, SearchSpec(efs=32,
+                                                      router="crouting"),
+                            cos_theta=ct)
+        mine = search_batch(g, ds.queries,
+                            SearchSpec(efs=32, router="_test_counting"),
+                            cos_theta=ct)
+        # same flags + same estimate expression == crouting bit-for-bit
+        np.testing.assert_array_equal(np.asarray(mine.ids),
+                                      np.asarray(twin.ids))
+        assert (np.asarray(mine.dist_calls)
+                == np.asarray(twin.dist_calls)).all()
+        assert (np.asarray(mine.extra["my_tests"])
+                == np.asarray(twin.est_calls)).all()
+    finally:
+        unregister_router("_test_counting")

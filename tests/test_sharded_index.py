@@ -13,6 +13,7 @@ import json
 import numpy as np, jax
 from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
 from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 from repro.launch.mesh import make_local_mesh
 
@@ -22,10 +23,15 @@ arrays = shard_dataset(ds.base, n_shards=8, graph="hnsw", m=12, efc=64)
 mesh = make_local_mesh(8, "shards")
 out = {}
 
-idx = ShardedAnnIndex(arrays, mesh, efs=48, k=10, router="crouting")
-ids, d, calls = idx.search(ds.queries)
+spec = SearchSpec(k=10, efs=48, router="crouting", max_hops=2048)
+idx = ShardedAnnIndex(arrays, mesh, spec=spec)
+ids, d, stats = idx.search(ds.queries)
 out["recall_sharded"] = recall_at_k(ids, gt, 10)
-out["calls"] = int(calls)
+out["calls"] = int(stats.dist_calls)
+# the typed stats carry the registry router name + aggregate counters
+out["stats_ok"] = bool(stats.router == "crouting"
+                       and int(stats.est_calls) > 0
+                       and int(stats.iters) > 0)
 
 # global ids must be valid and deduplicated per query
 ok = True
@@ -36,14 +42,34 @@ out["ids_valid"] = bool(ok)
 
 # single- index reference (same total data, one graph)
 ref = AnnIndex.build(ds.base, graph="hnsw", m=12, efc=64)
-rids, _, _ = ref.search(ds.queries, k=10, efs=48, router="crouting")
+rids, _, _ = ref.search(ds.queries, spec=SearchSpec(k=10, efs=48,
+                                                    router="crouting"))
 out["recall_single"] = recall_at_k(rids, gt, 10)
 
 # straggler mitigation: tiny hop budget must still return (degraded) results
-idx2 = ShardedAnnIndex(arrays, mesh, efs=48, k=10, router="crouting", max_hops=8)
-ids2, _, calls2 = idx2.search(ds.queries)
+idx2 = ShardedAnnIndex(arrays, mesh, spec=spec.replace(max_hops=8))
+ids2, _, stats2 = idx2.search(ds.queries)
 out["recall_budget"] = recall_at_k(ids2, gt, 10)
-out["calls_budget"] = int(calls2)
+out["calls_budget"] = int(stats2.dist_calls)
+
+# a plugin router's extra counters must survive the shard psum (review
+# finding: the serve step used to drop SearchResult.extra silently)
+import dataclasses
+import jax.numpy as jnp
+from repro.core.routers import EdgeAngleRouter, register_router
+
+@dataclasses.dataclass(frozen=True)
+class CountingRouter(EdgeAngleRouter):
+    def estimate_rank(self, ctx):
+        est_rank, _ = super().estimate_rank(ctx)
+        return est_rank, {"my_tests": jnp.sum(ctx.try_prune, axis=1,
+                                              dtype=jnp.int32)}
+
+register_router(CountingRouter(name="counting", prunes=True,
+                               extra_counters=("my_tests",)))
+idx3 = ShardedAnnIndex(arrays, mesh, spec=spec.replace(router="counting"))
+_, _, stats3 = idx3.search(ds.queries[:8])
+out["extra_counter"] = int(stats3.extra["my_tests"])
 print("RESULT " + json.dumps(out))
 """
 
@@ -60,6 +86,7 @@ def test_sharded_index_subprocess():
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
     out = json.loads(line[len("RESULT "):])
     assert out["ids_valid"]
+    assert out["stats_ok"]
     # sharded top-k merge over 8 sub-indexes should beat one global graph at
     # equal efs (it runs efs per shard) — require >= single-graph - 2%
     assert out["recall_sharded"] >= out["recall_single"] - 0.02, out
@@ -67,3 +94,5 @@ def test_sharded_index_subprocess():
     # bounded-hop straggler mode: returns, degraded but nonzero
     assert out["calls_budget"] < out["calls"], out
     assert out["recall_budget"] > 0.2, out
+    # plugin-router extra counters round-trip through the shard reduction
+    assert out["extra_counter"] > 0, out

@@ -2,9 +2,9 @@
 workflow (build -> angle profile -> CRouting search) and the training driver
 learns on synthetic data."""
 import numpy as np
-import pytest
 
 from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 
 
@@ -15,16 +15,18 @@ def test_end_to_end_crouting_workflow():
     assert 0.2 * np.pi < idx.profile.theta_star < 0.7 * np.pi
     gt = exact_ground_truth(ds, k=10)
 
-    ids_p, _, ip = idx.search(ds.queries, k=10, efs=64, router="none")
-    ids_c, _, ic = idx.search(ds.queries, k=10, efs=64, router="crouting")
+    ids_p, _, ip = idx.search(ds.queries, spec=SearchSpec(k=10, efs=64,
+                                                          router="none"))
+    ids_c, _, ic = idx.search(ds.queries, spec=SearchSpec(k=10, efs=64,
+                                                          router="crouting"))
     rp, rc = recall_at_k(ids_p, gt, 10), recall_at_k(ids_c, gt, 10)
     assert rp > 0.9
     # fixed-efs gap is expected (paper Table 3); iso-recall test below
     assert rc > rp - 0.16
-    saved = 1 - ic["dist_calls"].mean() / ip["dist_calls"].mean()
+    saved = 1 - ic.dist_calls.mean() / ip.dist_calls.mean()
     assert saved > 0.2, f"CRouting saved only {saved:.1%}"
     # est_calls only happen under the router
-    assert ic["est_calls"].mean() > 0 and ip["est_calls"].mean() == 0
+    assert ic.est_calls.mean() > 0 and ip.est_calls.mean() == 0
 
 
 def test_iso_recall_speedup():
@@ -35,8 +37,10 @@ def test_iso_recall_speedup():
     gt = exact_ground_truth(ds, k=10)
 
     def at(router, efs):
-        ids, _, info = idx.search(ds.queries, k=10, efs=efs, router=router)
-        return recall_at_k(ids, gt, 10), info["dist_calls"].mean()
+        ids, _, stats = idx.search(ds.queries,
+                                   spec=SearchSpec(k=10, efs=efs,
+                                                   router=router))
+        return recall_at_k(ids, gt, 10), stats.dist_calls.mean()
 
     # find plain greedy's recall at efs=40, then CRouting efs to match
     r_p, c_p = at("none", 40)
