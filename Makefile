@@ -1,6 +1,6 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
-.PHONY: verify test lint bench bench-engine bench-smoke
+.PHONY: verify test lint bench bench-engine bench-smoke bench-serve-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -28,3 +28,10 @@ bench-engine:
 bench-smoke:
 	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
 		python -m benchmarks.run --only engine
+
+# CI tier: tiny ragged trace through the serving frontend (both backends)
+# so bucket warmup, the zero-recompile invariant, and the telemetry digest
+# stay exercised per-PR.  Results go to .cache/, never to BENCH_serve.json.
+bench-serve-smoke:
+	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
+		python -m benchmarks.run --only serve

@@ -28,9 +28,6 @@ N_QUERY = int(os.environ.get("BENCH_Q", 100))
 # seconds-scale run that still exercises the full code path, and divert the
 # persisted results away from the committed trajectory file.
 SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
-BENCH_ENGINE_JSON = (os.path.join(CACHE, "BENCH_engine.smoke.json") if SMOKE
-                     else os.path.join(os.path.dirname(__file__), "..",
-                                       "BENCH_engine.json"))
 
 
 def smoke_scale(n: int, smoke_n: int) -> int:
@@ -38,23 +35,35 @@ def smoke_scale(n: int, smoke_n: int) -> int:
     return smoke_n if SMOKE else n
 
 
-def persist_bench(section: str, payload) -> str:
-    """Merge one benchmark's derived dict into BENCH_engine.json.
+def bench_json_path(file: str = "BENCH_engine.json") -> str:
+    """Resolve a committed trajectory file (smoke runs divert to .cache/)."""
+    if SMOKE:
+        stem = os.path.splitext(file)[0]
+        return os.path.join(CACHE, stem + ".smoke.json")
+    return os.path.join(os.path.dirname(__file__), "..", file)
+
+
+def persist_bench(section: str, payload,
+                  file: str = "BENCH_engine.json") -> str:
+    """Merge one benchmark's derived dict into a committed BENCH_*.json.
 
     The file is the machine-readable perf trajectory across PRs: one JSON
     object keyed by benchmark name (plus a ``_meta`` stamp written by
-    benchmarks/run.py).  Smoke runs write to .cache/ instead so throwaway
-    numbers never clobber the committed history.
+    benchmarks/run.py).  Engine benches share the default
+    ``BENCH_engine.json``; the serving benches write ``BENCH_serve.json``.
+    Smoke runs write to .cache/ instead so throwaway numbers never clobber
+    the committed history.
     """
+    path = bench_json_path(file)
     data = {}
-    if os.path.exists(BENCH_ENGINE_JSON):
-        with open(BENCH_ENGINE_JSON) as f:
+    if os.path.exists(path):
+        with open(path) as f:
             data = json.load(f)
     data[section] = payload
-    with open(BENCH_ENGINE_JSON, "w") as f:
+    with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")
-    return BENCH_ENGINE_JSON
+    return path
 
 
 def dataset(name: str, n_base: int = None, metric: str = "l2",

@@ -13,12 +13,15 @@ from benchmarks import bench_engine as E
 from benchmarks import bench_paper as P
 from benchmarks import bench_kernels as K
 from benchmarks import bench_roofline as R
+from benchmarks import bench_serve as S
 
 BENCHES = [
     ("engine_beam_sweep", E.engine_beam_sweep),
     ("engine_estimate_sweep", E.engine_estimate_sweep),
     ("engine_router_sweep", E.engine_router_sweep),
     ("engine_pallas_parity", E.engine_pallas_parity),
+    ("serve_single", S.serve_single),
+    ("serve_sharded", S.serve_sharded),
     ("fig2_time_breakdown", P.fig2_time_breakdown),
     ("fig6_8_angles", P.fig6_8_angles),
     ("fig10_recall_qps", P.fig10_recall_qps),
@@ -54,16 +57,18 @@ def main() -> None:
             print(f"{name},nan,{{\"error\": \"{e!r}\"}}")
             traceback.print_exc()
         print(f"#     ({time.time()-t0:.1f}s)", flush=True)
-    if any(n.startswith("engine") for n in ran):
-        # stamp the persisted perf trajectory (benchmarks/common.py)
-        from benchmarks import common as C
-        path = C.persist_bench("_meta", {
-            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
-            # dataset sizes are per-bench (each section records its n_base)
-            "bench_q": C.N_QUERY, "smoke": C.SMOKE,
-            "benches": [n for n in ran if n.startswith("engine")],
-        })
-        print(f"# engine results persisted to {path}")
+    # stamp the persisted perf trajectories (benchmarks/common.py)
+    from benchmarks import common as C
+    for prefix, file in (("engine", "BENCH_engine.json"),
+                         ("serve", "BENCH_serve.json")):
+        if any(n.startswith(prefix) for n in ran):
+            path = C.persist_bench("_meta", {
+                "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+                # dataset sizes are per-bench (each section records n_base)
+                "bench_q": C.N_QUERY, "smoke": C.SMOKE,
+                "benches": [n for n in ran if n.startswith(prefix)],
+            }, file=file)
+            print(f"# {prefix} results persisted to {path}")
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

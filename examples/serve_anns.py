@@ -1,12 +1,11 @@
 """End-to-end serving driver (deliverable (b)): a dataset-sharded CRouting
-index serving batched requests over all local devices, with latency stats and
-a straggler-budget demonstration.
+index behind the bucketed serving frontend, over all local devices —
+ragged request sizes, per-spec sessions, and a straggler-budget
+demonstration.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_anns.py
 """
-import time
-
 import numpy as np
 import jax
 
@@ -14,6 +13,7 @@ from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
 from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 from repro.launch.mesh import make_local_mesh
+from repro.serve import ServeFrontend
 
 
 def main():
@@ -22,6 +22,7 @@ def main():
     ds = make_dataset(n_base=8000, n_query=512, dim=128, n_clusters=64, seed=0)
     gt = exact_ground_truth(ds, k=10)
 
+    import time
     t0 = time.time()
     arrays = shard_dataset(ds.base, n_shards=max(n_dev, 2), graph="hnsw",
                            m=16, efc=96)
@@ -32,53 +33,55 @@ def main():
 
     base_spec = SearchSpec(efs=64, k=10, router="crouting", max_hops=2048)
     idx = ShardedAnnIndex(arrays, mesh, spec=base_spec)
-    # request loop: batches of 64 queries
-    lat, hits = [], []
-    for s in range(0, 512, 64):
-        q = ds.queries[s:s + 64]
-        t0 = time.perf_counter()
-        ids, dists, stats = idx.search(q)
-        lat.append(time.perf_counter() - t0)
-        hits.append(recall_at_k(ids, gt[s // 64 * 64: s + 64], 10))
-    lat_ms = np.asarray(lat[1:]) * 1e3       # drop the jit-warmup batch
-    print(f"recall@10={np.mean(hits):.3f}  "
-          f"p50={np.percentile(lat_ms, 50):.1f}ms "
-          f"p99={np.percentile(lat_ms, 99):.1f}ms  "
-          f"QPS={64/np.median(lat_ms)*1e3:.0f}")
+
+    # the frontend pre-jits every bucket rung at startup; the ragged request
+    # loop below (sizes 1..64) then replays against the compiled
+    # executables only — zero XLA compiles on the request path
+    fe = ServeFrontend(idx, base_spec, buckets=(1, 8, 32, 64))
+    rng = np.random.default_rng(3)
+    futs, spans = [], []
+    s = 0
+    while s < 512:
+        n = int(min(rng.integers(1, 65), 512 - s))
+        futs.append(fe.submit(ds.queries[s:s + n]))
+        spans.append((s, s + n))
+        if len(futs) % 4 == 0:
+            fe.flush()                      # micro-batcher coalesces 4-ish
+        s += n
+    fe.flush()
+    hits = [recall_at_k(f.result()[0], gt[a:b], 10)
+            for f, (a, b) in zip(futs, spans)]
+    summ = fe.telemetry.summary()
+    print(f"ragged trace: {summ['requests']['served']} requests, "
+          f"recall@10={np.mean(hits):.3f}  "
+          f"p50={summ['latency']['p50_ms']:.1f}ms "
+          f"p99={summ['latency']['p99_ms']:.1f}ms  QPS={summ['qps']:.0f}  "
+          f"recompiles_after_warmup={summ['recompiles_after_warmup']}")
+    print(f"per-query engine work: {summ['search']}")
 
     # straggler mitigation: a bounded hop budget keeps the merge barrier
-    # tail-latency-safe at a controlled recall cost (DESIGN.md §6)
-    idx_fast = ShardedAnnIndex(arrays, mesh,
-                               spec=base_spec.replace(max_hops=24))
-    ids, _, _ = idx_fast.search(ds.queries[:128])
-    rec = recall_at_k(ids, gt[:128], 10)
+    # tail-latency-safe at a controlled recall cost (DESIGN.md §6).  A new
+    # engine-shaping spec = a new frontend session (warmed on first use).
+    ids, _, _ = fe.search(ds.queries[:64],
+                          spec=base_spec.replace(max_hops=24))
+    rec = recall_at_k(ids, gt[:64], 10)
     print(f"bounded-hop (straggler mode): recall@10={rec:.3f}")
 
     # beam expansion: W frontier nodes per hop amortize the per-iteration
     # fixed cost (candidate select, status scatter, loop overhead) ~W x
-    idx_beam = ShardedAnnIndex(arrays, mesh,
-                               spec=base_spec.replace(beam_width=4))
-    lat = []
-    for s in range(0, 256, 64):
-        t0 = time.perf_counter()
-        ids, _, _ = idx_beam.search(ds.queries[s:s + 64])
-        lat.append(time.perf_counter() - t0)
-    rec = recall_at_k(ids, gt[192:256], 10)
-    print(f"beam W=4: recall@10={rec:.3f} "
-          f"p50={np.percentile(np.asarray(lat[1:]) * 1e3, 50):.1f}ms")
+    beam_spec = base_spec.replace(beam_width=4)
+    ids, _, _ = fe.search(ds.queries[:64], spec=beam_spec)
+    rec = recall_at_k(ids, gt[:64], 10)
+    print(f"beam W=4: recall@10={rec:.3f}")
 
     # two-stage quantized distances: stage 1 reads uint8 code rows (4x fewer
     # bytes), stage 2 re-ranks only survivors in fp32 — `dist_calls` counts
     # fp32 evaluations, the row DMAs the SQ8 estimate avoided
-    _, _, st_exact = idx_beam.search(ds.queries[:128])
-    idx_sq8 = ShardedAnnIndex(
-        arrays, mesh,
-        spec=base_spec.replace(beam_width=4, estimate="both"))
-    ids, _, st_sq8 = idx_sq8.search(ds.queries[:128])
-    rec = recall_at_k(ids, gt[:128], 10)
+    _, _, st_exact = fe.search(ds.queries[:64], spec=beam_spec)
+    _, _, st_sq8 = fe.search(ds.queries[:64],
+                             spec=beam_spec.replace(estimate="both"))
     calls_exact, calls_sq8 = int(st_exact.dist_calls), int(st_sq8.dist_calls)
-    print(f"sq8 two-stage: recall@10={rec:.3f} fp32 calls "
-          f"{calls_exact} -> {calls_sq8} "
+    print(f"sq8 two-stage: fp32 calls {calls_exact} -> {calls_sq8} "
           f"({calls_sq8 / max(calls_exact, 1):.2f}x)")
 
 

@@ -56,17 +56,23 @@ def sample_angle_profile(
 
     Default n_sample = max(8, 0.1%·N) per paper §4.1; overhead is recorded so
     benchmarks can verify the <4% construction-time claim.
+
+    When ``queries`` is supplied, ALL of them are searched unless the caller
+    also passes an explicit ``n_sample`` cap — the default cap applies only
+    to the random-sampling path (a held-out query set must never be silently
+    truncated to 0.1%·N).  ``n_sample_queries`` records the number of
+    queries actually searched.
     """
     import time
 
     t0 = time.time()
     n = g.n
-    if n_sample is None:
-        n_sample = max(8, int(0.001 * n))
     if queries is None:
+        if n_sample is None:
+            n_sample = max(8, int(0.001 * n))
         rng = np.random.default_rng(seed)
         queries = g.vectors[rng.integers(0, n, size=n_sample)]
-    else:
+    elif n_sample is not None:
         queries = queries[:n_sample]
 
     angles = []
@@ -82,6 +88,6 @@ def sample_angle_profile(
         cos_theta_star=float(np.cos(th)),
         percentile=percentile,
         samples=samples,
-        n_sample_queries=int(n_sample),
+        n_sample_queries=len(queries),
         sample_secs=time.time() - t0,
     )

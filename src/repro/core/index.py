@@ -70,11 +70,18 @@ class AnnIndex:
 
         ``spec`` is the one configuration object; its ``metric`` and
         ``use_hierarchy`` fields are overridden from the index's graph, and
-        ``cos_theta=None`` resolves to the sampled angle profile.  Slots
-        with no result carry id -1 and distance +inf.  Legacy kwargs
-        (``k=/efs=/router=/...``) are shimmed with a DeprecationWarning.
+        ``cos_theta=None`` resolves to the sampled angle profile.  A pruning
+        router with neither a profile nor an explicit ``cos_theta`` raises
+        ``ValueError`` — the old silent ``0.0`` fallback made such routers
+        prune at theta*=90 degrees and quietly tanked recall; non-pruning
+        routers (which never read the threshold) keep the ``0.0``
+        placeholder.  Slots with no result carry id -1 and distance +inf.
+        Legacy kwargs (``k=/efs=/router=/...``) are shimmed with a
+        DeprecationWarning.
         """
         import jax.numpy as jnp
+
+        from repro.core.routers import get_router
 
         spec = resolve_search_spec(spec, legacy, DEFAULT_SEARCH,
                                    "AnnIndex.search")
@@ -82,7 +89,17 @@ class AnnIndex:
             np.ascontiguousarray(queries, np.float32), self.graph.metric)
         cos_theta = spec.cos_theta
         if cos_theta is None:
-            cos_theta = self.profile.cos_theta_star if self.profile else 0.0
+            if self.profile is not None:
+                cos_theta = self.profile.cos_theta_star
+            elif get_router(spec.router).prunes:
+                raise ValueError(
+                    f"router {spec.router!r} prunes on the angle threshold, "
+                    "but this index was built with profile=False and the "
+                    "spec carries no explicit cos_theta — the old fallback "
+                    "of cos_theta=0.0 silently pruned at theta*=90deg. "
+                    "Build with profile=True, or set SearchSpec.cos_theta.")
+            else:
+                cos_theta = 0.0   # never read by a non-pruning router
         k = spec.k
         cfg = dataclasses.replace(
             spec, efs=max(spec.efs, k), metric=self.graph.metric,

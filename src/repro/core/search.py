@@ -272,7 +272,7 @@ def _rescue_pruned_duplicates(order, sk, prune):
     return rescued, prune_final
 
 
-def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec):
+def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec, valid=None):
     """Whole-batch Algorithm 1/2 with W-wide beam expansion per iteration.
 
     Routing is delegated to the registry (``repro.core.routers``): the
@@ -280,6 +280,12 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec):
     prune is final, whether the Pallas kernels may decide it) and its
     ``estimate_rank`` hook supplies the per-lane estimate when the decision
     is made on the jnp path.
+
+    ``valid`` ([B] bool, optional) marks the real query lanes of a padded
+    batch (the serving frontend rounds ragged batches up to a bucket size):
+    padded lanes start ``done``, never expand a node, and contribute ZERO to
+    every counter — so shard-reduced totals (``ShardedAnnIndex``) stay exact
+    under bucket padding.  ``None`` means all lanes are real.
     """
     metric, efs, n = cfg.metric, cfg.efs, arrays["n"]
     W, engine = cfg.beam_width, cfg.engine
@@ -333,6 +339,14 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec):
         d_entry = _rank_tile(queries, ev[:, None, :], metric)[:, 0]
         calls0 = jnp.ones((B,), jnp.int32)
 
+    if valid is None:
+        done0 = jnp.zeros((B,), bool)
+    else:
+        # padded lanes are born done: zero hops, zero counters (the entry
+        # distance above is masked out of calls0 too)
+        done0 = ~valid
+        calls0 = jnp.where(valid, calls0, 0)
+
     pool_d = jnp.full((B, efs), jnp.inf, jnp.float32).at[:, 0].set(d_entry)
     pool_id = jnp.full((B, efs), n, jnp.int32).at[:, 0].set(entry)
     pool_exp = jnp.zeros((B, efs), bool)
@@ -346,7 +360,7 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec):
              # per-router counters (registry-declared, see Router.extra_counters)
              {name: jnp.zeros((B,), jnp.int32) for name in rt.extra_counters},
              jnp.zeros((B,), jnp.int32),   # hops
-             jnp.zeros((B,), bool),        # done
+             done0,                        # done (padded lanes born done)
              jnp.asarray(0, jnp.int32))    # iters
 
     def cond(s):
@@ -598,6 +612,13 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec):
         order = jnp.lexsort((pool_id, pool_d), axis=1)
         pool_d = jnp.take_along_axis(pool_d, order, axis=1)
         pool_id = jnp.take_along_axis(pool_id, order, axis=1)
+    if valid is not None:
+        # belt and braces: padded lanes never ran, but the counters must be
+        # provably zero whatever path produced them (they feed shard psums)
+        dcalls, ecalls, rrcalls, sqcalls, hops = (
+            jnp.where(valid, a, 0)
+            for a in (dcalls, ecalls, rrcalls, sqcalls, hops))
+        extras = {k: jnp.where(valid, v, 0) for k, v in extras.items()}
     return SearchResult(ids=pool_id, dists=pool_d, dist_calls=dcalls,
                         est_calls=ecalls, hops=hops, iters=iters,
                         rerank_calls=rrcalls, sq8_calls=sqcalls, extra=extras)

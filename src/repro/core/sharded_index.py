@@ -18,6 +18,7 @@ flattening all mesh axes into the shard axis.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -127,13 +128,21 @@ def _backfill_sq8(arrays: ShardedIndexArrays) -> ShardedIndexArrays:
                                sq8_scale=scale, sq8_eps=eps)
 
 
-def make_serve_step(mesh: Mesh, cfg: SearchSpec, ns: int, k: int,
+def make_serve_step(mesh: Mesh, cfg: SearchSpec, ns: int,
                     shard_axes: Optional[Tuple[str, ...]] = None):
     """Build the pjit-able distributed serve step.
 
     shard_axes: mesh axes flattened into the shard dimension (default: all).
     Returns (serve_step, in_shardings, out_shardings) ready for jit/lower.
-    The third output is the aggregate counter vector
+    The step takes ``(*10 data arrays, queries, cos_theta, valid)`` where
+    ``valid`` [B] bool marks the real lanes of a bucket-padded batch
+    (padded lanes are born done inside the engine and contribute zero to
+    every counter — see ``_search_batch``).
+
+    The merge is ``efs``-wide: each shard contributes its whole result pool
+    and the host slices to the request's ``k``, so ``k`` is request-only
+    (canonical-spec contract — sweeping ``k`` or ``cos_theta`` never
+    re-jits).  The third output is the aggregate counter vector
     ``[dist_calls, est_calls, rerank_calls, sq8_calls, hops, iters,
     *Router.extra_counters]`` (sums across shards and queries; ``iters`` is
     the max over shards — the straggler's iteration count) that
@@ -141,10 +150,11 @@ def make_serve_step(mesh: Mesh, cfg: SearchSpec, ns: int, k: int,
     """
     axes = tuple(shard_axes or mesh.axis_names)
     extra_names = get_router(cfg.router).extra_counters
+    kk = cfg.efs              # merge width; k slices host-side
 
     def local_search(vectors, neighbors, edge_eu, norms, entries, offsets,
                      sq8_codes, sq8_lo, sq8_scale, sq8_eps,
-                     queries, cos_theta):
+                     queries, cos_theta, valid):
         # shard_map gives the local shard with a leading axis of size 1
         arrays = {
             "vectors": vectors[0], "neighbors": neighbors[0],
@@ -153,17 +163,17 @@ def make_serve_step(mesh: Mesh, cfg: SearchSpec, ns: int, k: int,
             "sq8_codes": sq8_codes[0], "sq8_lo": sq8_lo[0],
             "sq8_scale": sq8_scale[0], "sq8_eps": sq8_eps[0],
         }
-        res = _search_batch(arrays, queries, cos_theta, cfg)
-        loc_d, loc_i = res.dists[:, :k], res.ids[:, :k]
+        res = _search_batch(arrays, queries, cos_theta, cfg, valid=valid)
+        loc_d, loc_i = res.dists[:, :kk], res.ids[:, :kk]
         # int32 global ids (enable_x64 is off; fine below 2^31 vectors/shard set)
         glob_i = jnp.where(loc_i < ns, loc_i + offsets[0].astype(jnp.int32), -1)
-        # merge: gather per-shard top-k along the shard axis, then re-top-k
-        all_d = jax.lax.all_gather(loc_d, axes, tiled=False)   # [S, B, k]
+        # merge: gather per-shard pools along the shard axis, then re-top-k
+        all_d = jax.lax.all_gather(loc_d, axes, tiled=False)   # [S, B, efs]
         all_i = jax.lax.all_gather(glob_i, axes, tiled=False)
         S = all_d.shape[0]
-        flat_d = jnp.moveaxis(all_d, 0, 1).reshape(queries.shape[0], S * k)
-        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(queries.shape[0], S * k)
-        neg, pos = jax.lax.top_k(-flat_d, k)
+        flat_d = jnp.moveaxis(all_d, 0, 1).reshape(queries.shape[0], S * kk)
+        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(queries.shape[0], S * kk)
+        neg, pos = jax.lax.top_k(-flat_d, kk)
         ids = jnp.take_along_axis(flat_i, pos, axis=1)
         sums = jax.lax.psum(jnp.stack(
             [jnp.sum(res.dist_calls), jnp.sum(res.est_calls),
@@ -175,16 +185,16 @@ def make_serve_step(mesh: Mesh, cfg: SearchSpec, ns: int, k: int,
         return -neg, ids, stats_vec
 
     pspec_data = P(axes)      # shard leading axis over all shard axes
-    pspec_rep = P()           # queries replicated
+    pspec_rep = P()           # queries / cos_theta / valid replicated
 
     serve = shard_map(
         local_search, mesh=mesh,
-        in_specs=(pspec_data,) * 10 + (pspec_rep, pspec_rep),
+        in_specs=(pspec_data,) * 10 + (pspec_rep,) * 3,
         out_specs=(pspec_rep, pspec_rep, pspec_rep),
         check_rep=False,
     )
     in_sh = tuple(NamedSharding(mesh, s) for s in
-                  (pspec_data,) * 10 + (pspec_rep, pspec_rep))
+                  (pspec_data,) * 10 + (pspec_rep,) * 3)
     out_sh = tuple(NamedSharding(mesh, s) for s in (pspec_rep,) * 3)
     return serve, in_sh, out_sh
 
@@ -195,9 +205,15 @@ class ShardedAnnIndex:
     ``spec`` is the same ``SearchSpec`` the single-index path takes
     (``metric``/``use_hierarchy`` are overridden from the shard arrays);
     the legacy kwarg style (``efs=/k=/router=/...``) is shimmed with a
-    DeprecationWarning.  Routers that need per-graph companion tables
-    (``Router.companion_tables``, e.g. ``finger``) are not yet plumbed
-    through the stacked per-shard arrays and are rejected here.
+    DeprecationWarning — both at construction and per ``search`` call, for
+    API parity with ``AnnIndex.search``.  Per-call specs that differ only
+    in the request-only fields (``k``/``cos_theta``) reuse the jitted serve
+    step (canonical-spec contract: ``k`` slices the ``efs``-wide merge
+    host-side, ``cos_theta`` is a traced scalar); engine-shaping changes
+    compile one new step, cached per canonical spec.  Routers that need
+    per-graph companion tables (``Router.companion_tables``, e.g.
+    ``finger``) are not yet plumbed through the stacked per-shard arrays
+    and are rejected here.
     """
 
     DEFAULT_SEARCH = SearchSpec(k=10, efs=100, router="crouting",
@@ -209,16 +225,10 @@ class ShardedAnnIndex:
                                    "ShardedAnnIndex")
         spec = dataclasses.replace(spec, metric=arrays.metric,
                                    use_hierarchy=False)
-        rt = get_router(spec.router)
-        if rt.companion_tables:
-            raise NotImplementedError(
-                f"router {spec.router!r} needs companion tables "
-                f"{rt.companion_tables} which the sharded arrays do not "
-                "carry yet; use the single-index path")
         self.arrays = arrays
         self.mesh = mesh
         self.spec = spec
-        self.k = k = spec.k
+        self.k = spec.k        # back-compat alias
         self.cfg = spec        # back-compat alias
         if arrays.sq8_codes is None:
             # arrays predating the SQ8 tables (direct construction, old
@@ -227,36 +237,83 @@ class ShardedAnnIndex:
             # lower-bound contract is unaffected
             arrays = _backfill_sq8(arrays)
             self.arrays = arrays
-        serve, in_sh, _ = make_serve_step(mesh, self.spec, arrays.ns, k)
-        self._serve = jax.jit(serve, in_shardings=in_sh)
-        dev = lambda a, sh: jax.device_put(a, sh)
-        self._placed = tuple(
-            dev(getattr(arrays, f), s) for f, s in
-            zip(("vectors", "neighbors", "edge_eu", "norms", "entries",
-                 "offsets", "sq8_codes", "sq8_lo", "sq8_scale", "sq8_eps"),
-                in_sh[:10]))
+        self._steps = {}       # canonical spec -> jitted serve step
+        self._placed = None    # device-placed data arrays (fixed shardings)
+        self._step(spec)       # validate + pre-jit the construction spec
 
-    def search(self, queries: np.ndarray, cos_theta: Optional[float] = None
+    def _step(self, spec: SearchSpec):
+        """The jitted serve step for ``spec``, cached per canonical form."""
+        key = spec.canonical()
+        fn = self._steps.get(key)
+        if fn is not None:
+            return fn
+        rt = get_router(spec.router)
+        if rt.companion_tables:
+            raise NotImplementedError(
+                f"router {spec.router!r} needs companion tables "
+                f"{rt.companion_tables} which the sharded arrays do not "
+                "carry yet; use the single-index path")
+        serve, in_sh, _ = make_serve_step(self.mesh, key, self.arrays.ns)
+        fn = jax.jit(serve, in_shardings=in_sh)
+        if self._placed is None:
+            dev = lambda a, sh: jax.device_put(a, sh)
+            self._placed = tuple(
+                dev(getattr(self.arrays, f), s) for f, s in
+                zip(("vectors", "neighbors", "edge_eu", "norms", "entries",
+                     "offsets", "sq8_codes", "sq8_lo", "sq8_scale",
+                     "sq8_eps"), in_sh[:10]))
+        self._steps[key] = fn
+        return fn
+
+    def search(self, queries: np.ndarray, spec=None, *,
+               valid: Optional[np.ndarray] = None, **legacy
                ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
         """Returns (ids [B,k], dists [B,k], SearchStats).
 
+        ``spec`` overrides the construction spec for this call (same
+        contract as ``AnnIndex.search``; a bare positional scalar is the
+        pre-parity ``cos_theta`` override, shimmed with a
+        DeprecationWarning).  ``valid`` [B] bool marks the real lanes of a
+        bucket-padded batch — padded lanes contribute zero to the counters.
         The stats fields are batch TOTALS reduced across shards (``iters``
         is the straggler's count), not per-query arrays — the per-shard
         engines ran behind one collective merge.
         """
+        if spec is not None and not isinstance(spec, SearchSpec):
+            if isinstance(spec, (int, float, np.floating)):
+                # pre-parity signature: search(queries, cos_theta)
+                warnings.warn(
+                    "ShardedAnnIndex.search(queries, cos_theta) is "
+                    "deprecated; pass spec=SearchSpec(cos_theta=...) or "
+                    "cos_theta=... instead", DeprecationWarning,
+                    stacklevel=2)
+                legacy.setdefault("cos_theta", float(spec))
+                spec = None
+            else:
+                raise TypeError(
+                    "ShardedAnnIndex.search: spec must be a SearchSpec, "
+                    f"got {type(spec).__name__}")
+        spec = resolve_search_spec(spec, legacy, self.spec,
+                                   "ShardedAnnIndex.search")
+        spec = dataclasses.replace(spec, metric=self.arrays.metric,
+                                   use_hierarchy=False)
+        fn = self._step(spec)
         q = D.preprocess_vectors(np.ascontiguousarray(queries, np.float32),
                                  self.arrays.metric)
-        # precedence: per-call override > spec > profiled shard median
-        ct = cos_theta if cos_theta is not None else self.spec.cos_theta
+        # precedence: spec override > profiled shard median
+        ct = spec.cos_theta
         if ct is None:
             ct = self.arrays.cos_theta
-        d, i, sv = self._serve(*self._placed, jnp.asarray(q),
-                               jnp.asarray(ct, jnp.float32))
+        v = (jnp.ones((q.shape[0],), bool) if valid is None
+             else jnp.asarray(valid, bool))
+        d, i, sv = fn(*self._placed, jnp.asarray(q),
+                      jnp.asarray(ct, jnp.float32), v)
         sv = np.asarray(sv)
-        extra_names = get_router(self.spec.router).extra_counters
+        extra_names = get_router(spec.router).extra_counters
         stats = SearchStats(
             dist_calls=int(sv[0]), est_calls=int(sv[1]),
             rerank_calls=int(sv[2]), sq8_calls=int(sv[3]), hops=int(sv[4]),
-            iters=int(sv[5]), router=self.spec.router,
+            iters=int(sv[5]), router=spec.router,
             extra={nm: int(sv[6 + j]) for j, nm in enumerate(extra_names)})
-        return np.asarray(i), np.asarray(d), stats
+        k = spec.k
+        return np.asarray(i[:, :k]), np.asarray(d[:, :k]), stats

@@ -177,6 +177,42 @@ class SearchStats:
                    for k, v in (getattr(res, "extra", None) or {}).items()},
         )
 
+    @classmethod
+    def merge(cls, stats_list) -> "SearchStats":
+        """Fold stats from many dispatches into one record.
+
+        Per-query array counters (single-index path) concatenate, so
+        ``summary()`` still reports true per-query means across the whole
+        trace; scalar totals (sharded path) add.  ``iters`` is the max over
+        dispatches (the worst straggler), ``router`` must agree.  The
+        serving telemetry layer folds its per-dispatch stats through here
+        so one ``summary()`` covers an entire request trace.
+        """
+        stats_list = list(stats_list)
+        if not stats_list:
+            raise ValueError("SearchStats.merge: empty stats list")
+        routers = {s.router for s in stats_list}
+        if len(routers) > 1:
+            raise ValueError(f"SearchStats.merge: mixed routers {routers}")
+
+        def comb(vals):
+            if all(np.ndim(v) > 0 for v in vals):
+                return np.concatenate([np.asarray(v) for v in vals])
+            return sum(int(np.sum(v)) for v in vals)
+
+        keys = set().union(*(s.extra for s in stats_list))
+        return cls(
+            dist_calls=comb([s.dist_calls for s in stats_list]),
+            est_calls=comb([s.est_calls for s in stats_list]),
+            rerank_calls=comb([s.rerank_calls for s in stats_list]),
+            sq8_calls=comb([s.sq8_calls for s in stats_list]),
+            hops=comb([s.hops for s in stats_list]),
+            iters=max(int(s.iters) for s in stats_list),
+            router=stats_list[0].router,
+            extra={k: comb([s.extra[k] for s in stats_list if k in s.extra])
+                   for k in sorted(keys)},
+        )
+
     def summary(self) -> Dict[str, object]:
         """Uniform JSON-ready digest (per-query means) for benchmark files."""
         out: Dict[str, object] = {"router": self.router, "iters": int(self.iters)}

@@ -1,23 +1,37 @@
-"""ANNS serving launcher: build (or load) a CRouting index sharded over the
-local devices and serve batched queries.
+"""ANNS serving launcher: a CRouting index sharded over the local devices
+behind the bucketed serving frontend (DESIGN.md §6).
 
-  PYTHONPATH=src python -m repro.launch.serve --n-base 20000 --batches 10
+  PYTHONPATH=src python -m repro.launch.serve --n-base 20000 --requests 200
 
-On a multi-chip slice this is the production layout of DESIGN.md §6 (one
-shard per device); here it runs over however many devices exist.
+Replays a seeded ragged request trace (sizes drawn log-uniform up to the top
+bucket) through ``repro.serve.ServeFrontend`` with the background worker
+running, then prints the telemetry digest: recall, p50/p95/p99 latency, QPS,
+and per-bucket compile counts — zero compiles may land on the request path
+(every bucket is pre-jitted at startup).  ``--single`` serves one global
+``AnnIndex`` instead of the device-sharded layout.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 import jax
 
+from repro.core.index import AnnIndex
 from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
 from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 from repro.launch.mesh import make_local_mesh
+from repro.serve import QueueFull, ServeFrontend
+
+
+def ragged_sizes(n_requests: int, top: int, seed: int) -> np.ndarray:
+    """Log-uniform request sizes in [1, top] — mostly small, some full."""
+    rng = np.random.default_rng(seed)
+    sizes = np.exp(rng.uniform(0, np.log(top + 1), n_requests)).astype(int)
+    return np.clip(sizes, 1, top)
 
 
 def main():
@@ -28,40 +42,67 @@ def main():
     ap.add_argument("--router", default="crouting")
     ap.add_argument("--efs", type=int, default=100)
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--buckets", default="1,8,32,128",
+                    help="comma-separated bucket ladder")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-request admission deadline (s)")
+    ap.add_argument("--single", action="store_true",
+                    help="serve one AnnIndex instead of sharding per device")
     ap.add_argument("--m", type=int, default=16)
     ap.add_argument("--efc", type=int, default=128)
     args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.buckets.split(","))
 
     n_dev = len(jax.devices())
     print(f"devices: {n_dev}")
-    ds = make_dataset(n_base=args.n_base, n_query=args.batch * args.batches,
+    sizes = ragged_sizes(args.requests, buckets[-1], seed=1)
+    ds = make_dataset(n_base=args.n_base, n_query=int(sizes.sum()),
                       dim=args.dim, seed=0)
+    spec = SearchSpec(efs=args.efs, k=args.k, router=args.router,
+                      max_hops=2048)
+
     t0 = time.time()
-    arrays = shard_dataset(ds.base, n_shards=max(n_dev, 1), graph=args.graph,
-                           m=args.m, efc=args.efc)
-    print(f"index built in {time.time()-t0:.1f}s "
-          f"(theta*={np.arccos(arrays.cos_theta)/np.pi:.3f}pi)")
-    mesh = make_local_mesh(n_dev, "shards")
-    idx = ShardedAnnIndex(arrays, mesh,
-                          spec=SearchSpec(efs=args.efs, k=args.k,
-                                          router=args.router, max_hops=2048))
+    if args.single:
+        index = AnnIndex.build(ds.base, graph=args.graph, m=args.m,
+                               efc=args.efc)
+        theta = np.arccos(index.profile.cos_theta_star)
+    else:
+        arrays = shard_dataset(ds.base, n_shards=max(n_dev, 1),
+                               graph=args.graph, m=args.m, efc=args.efc)
+        theta = np.arccos(arrays.cos_theta)
+        mesh = make_local_mesh(n_dev, "shards")
+        index = ShardedAnnIndex(arrays, mesh, spec=spec)
+    print(f"index built in {time.time()-t0:.1f}s (theta*={theta/np.pi:.3f}pi)")
+
+    t0 = time.time()
+    fe = ServeFrontend(index, spec, buckets=buckets,
+                       default_timeout=args.timeout)
+    print(f"frontend warm in {time.time()-t0:.1f}s "
+          f"({fe.telemetry.summary()['compiles_total']} bucket compiles)")
 
     gt = exact_ground_truth(ds, k=args.k)
-    lat, total_calls, all_ids = [], 0, []
-    for b in range(args.batches):
-        q = ds.queries[b * args.batch:(b + 1) * args.batch]
-        t0 = time.time()
-        ids, dists, stats = idx.search(q)
-        lat.append(time.time() - t0)
-        total_calls += int(stats.dist_calls)
-        all_ids.append(ids)
-    rec = recall_at_k(np.concatenate(all_ids), gt, args.k)
-    qps = args.batch / np.median(lat)
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    with fe:                                     # background flush worker
+        futs = []
+        for i in range(len(sizes)):
+            q = ds.queries[offsets[i]:offsets[i + 1]]
+            while True:
+                try:
+                    futs.append(fe.submit(q))
+                    break
+                except QueueFull:                # backpressure: wait it out
+                    time.sleep(0.01)
+        done = [f.result() for f in futs]
+    rec = recall_at_k(np.concatenate([ids for ids, _, _ in done]), gt, args.k)
+
+    summ = fe.telemetry.summary()
+    lat = summ["latency"]
     print(f"router={args.router}: recall@{args.k}={rec:.3f} "
-          f"QPS={qps:.0f} p50={np.median(lat)*1e3:.1f}ms "
-          f"dist_calls/query={total_calls/(args.batch*args.batches):.0f}")
+          f"QPS={summ['qps']:.0f} p50={lat['p50_ms']:.1f}ms "
+          f"p95={lat['p95_ms']:.1f}ms p99={lat['p99_ms']:.1f}ms "
+          f"recompiles_after_warmup={summ['recompiles_after_warmup']}")
+    print(json.dumps(summ, indent=2))
 
 
 if __name__ == "__main__":

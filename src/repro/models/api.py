@@ -284,9 +284,10 @@ def _anns_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     ns = -(-d["n_total"] // n_shards)
     m = d["max_degree"]
     dim, B, efs, k = d["dim"], d["batch"], d["efs"], d["k"]
-    cfg = SearchSpec(efs=efs, router=spec.model_cfg.router, metric="l2",
+    cfg = SearchSpec(efs=efs, k=k, router=spec.model_cfg.router, metric="l2",
                      max_hops=2 * efs, use_hierarchy=False)
-    serve, in_sh, out_sh = make_serve_step(mesh, cfg, ns, k)
+    # k is request-only: the step merges efs-wide and the host slices to k
+    serve, in_sh, out_sh = make_serve_step(mesh, cfg.canonical(), ns)
     vdt = jnp.dtype(getattr(spec.model_cfg, "vec_dtype", "float32"))
     arg_specs = (
         _sds((n_shards, ns + 1, dim), vdt),
@@ -301,6 +302,7 @@ def _anns_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         _sds((n_shards, dim), jnp.float32),         # SQ8 error radius
         _sds((B, dim), jnp.float32),
         _sds((), jnp.float32),
+        _sds((B,), jnp.bool_),                      # bucket-pad valid mask
     )
     # useful work ~ exact distance evals: efs expansions x m neighbors x 2d
     flops = 2.0 * B * efs * m * dim

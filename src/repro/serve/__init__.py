@@ -1,0 +1,28 @@
+"""Serving frontend: bucketed dynamic batching over the jitted engines.
+
+Public surface::
+
+    from repro.serve import ServeFrontend
+
+    fe = ServeFrontend(index, SearchSpec(efs=64, router="crouting"))
+    fut = fe.submit(queries)          # any [n<=top_bucket, d] batch
+    fe.flush()                        # or fe.start() for the worker thread
+    ids, dists, stats = fut.result()
+    print(fe.telemetry.summary())     # p50/p95/p99, QPS, per-bucket compiles
+
+See DESIGN.md §6 (serving frontend) and the README "Serving" section.
+"""
+from repro.serve.backends import (SingleIndexSession, ShardedIndexSession,
+                                  make_session)
+from repro.serve.bucketing import (DEFAULT_BUCKETS, bucket_for, pad_to_bucket,
+                                   validate_buckets)
+from repro.serve.frontend import (DeadlineExceeded, QueueFull,
+                                  RequestRejected, ServeFrontend)
+from repro.serve.telemetry import BucketStats, ServeTelemetry
+
+__all__ = [
+    "ServeFrontend", "ServeTelemetry", "BucketStats",
+    "RequestRejected", "QueueFull", "DeadlineExceeded",
+    "DEFAULT_BUCKETS", "bucket_for", "pad_to_bucket", "validate_buckets",
+    "SingleIndexSession", "ShardedIndexSession", "make_session",
+]

@@ -1,0 +1,118 @@
+"""Engine-session adapters: one serving interface over both index types.
+
+The frontend speaks one protocol — ``search_padded(q, n_valid, k,
+cos_theta)`` plus a compile counter — and these adapters bind it to the two
+engine stacks:
+
+* ``SingleIndexSession`` — ``AnnIndex`` over the compiled-engine cache of
+  ``repro.core.search`` (one jitted fn per canonical spec; one executable
+  per batch shape inside it).  Stats are per-query arrays, so a dispatch's
+  stats slice exactly per request.
+* ``ShardedIndexSession`` — ``ShardedAnnIndex`` over its per-canonical-spec
+  serve-step cache.  The bucket ``valid`` mask rides to the device so the
+  shard-reduced counter totals exclude padded lanes; stats are batch totals
+  behind one collective merge and cannot be split per request (each request
+  of a dispatch sees the dispatch's totals).
+
+Request-only fields (``k``/``cos_theta``) never recompile — the canonical-
+spec contract from ``repro.core.spec`` — so a session's compile count is
+exactly one per warmed bucket shape.  ``k`` is capped at the session's
+``efs``: a larger ``k`` would widen the result pool and so the trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.index import AnnIndex, DEFAULT_SEARCH
+from repro.core.sharded_index import ShardedAnnIndex
+from repro.core.spec import SearchSpec, SearchStats
+
+
+class SingleIndexSession:
+    """``AnnIndex`` behind the serving protocol (per-query stats)."""
+
+    splits_stats = True   # per-request stats slices are exact
+
+    def __init__(self, index: AnnIndex, spec: SearchSpec):
+        from repro.core.search import build_search_fn
+
+        self.index = index
+        g = index.graph
+        self.spec = dataclasses.replace(
+            spec, efs=max(spec.efs, spec.k), metric=g.metric,
+            use_hierarchy=g.upper_neighbors is not None)
+        self.dim = g.dim
+        # the SAME cache entry AnnIndex.search resolves to: its _cache_size
+        # counts every executable (one per batch shape) this session compiles
+        _, self._fn = build_search_fn(g, self.spec)
+
+    def compile_count(self) -> int:
+        return self._fn._cache_size()
+
+    def sample_query(self) -> np.ndarray:
+        return np.asarray(self.index.graph.vectors[0], np.float32)
+
+    def search_padded(self, queries: np.ndarray, n_valid: int, k: int,
+                      cos_theta: Optional[float]
+                      ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        ids, dists, stats = self.index.search(
+            queries, spec=self.spec.replace(k=k, cos_theta=cos_theta))
+        return (ids[:n_valid], dists[:n_valid],
+                self.stats_for_rows(stats, 0, n_valid))
+
+    def stats_for_rows(self, stats: SearchStats, lo: int, hi: int
+                       ) -> SearchStats:
+        s = slice(lo, hi)
+        return dataclasses.replace(
+            stats, dist_calls=stats.dist_calls[s], est_calls=stats.est_calls[s],
+            rerank_calls=stats.rerank_calls[s], sq8_calls=stats.sq8_calls[s],
+            hops=stats.hops[s],
+            extra={kk: v[s] for kk, v in stats.extra.items()})
+
+
+class ShardedIndexSession:
+    """``ShardedAnnIndex`` behind the serving protocol (batch-total stats)."""
+
+    splits_stats = False  # shard-reduced totals: per-request stats = dispatch
+
+    def __init__(self, index: ShardedAnnIndex, spec: SearchSpec):
+        self.index = index
+        self.spec = dataclasses.replace(
+            spec, efs=max(spec.efs, spec.k), metric=index.arrays.metric,
+            use_hierarchy=False)
+        self.dim = index.arrays.vectors.shape[-1]
+        self._fn = index._step(self.spec)   # pre-jit + router validation
+
+    def compile_count(self) -> int:
+        return self._fn._cache_size()
+
+    def sample_query(self) -> np.ndarray:
+        return np.asarray(self.index.arrays.vectors[0, 0], np.float32)
+
+    def search_padded(self, queries: np.ndarray, n_valid: int, k: int,
+                      cos_theta: Optional[float]
+                      ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        valid = np.zeros((queries.shape[0],), bool)
+        valid[:n_valid] = True
+        ids, dists, stats = self.index.search(
+            queries, spec=self.spec.replace(k=k, cos_theta=cos_theta),
+            valid=valid)
+        return ids[:n_valid], dists[:n_valid], stats
+
+    def stats_for_rows(self, stats: SearchStats, lo: int, hi: int
+                       ) -> SearchStats:
+        return stats
+
+
+def make_session(index, spec: Optional[SearchSpec] = None):
+    """Bind an index to the serving protocol (dispatch on index type)."""
+    if isinstance(index, AnnIndex):
+        return SingleIndexSession(index, spec or DEFAULT_SEARCH)
+    if isinstance(index, ShardedAnnIndex):
+        return ShardedIndexSession(index, spec or index.spec)
+    raise TypeError(
+        f"cannot serve {type(index).__name__}; expected AnnIndex or "
+        "ShardedAnnIndex")

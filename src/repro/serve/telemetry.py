@@ -1,0 +1,154 @@
+"""Serving telemetry: latency percentiles, QPS, per-bucket compile counts.
+
+One ``ServeTelemetry`` instance rides a frontend for its lifetime.  Engine
+counters are folded through ``SearchStats.merge`` so a single
+``SearchStats.summary()`` covers the whole request trace (per-query means on
+the single-index path, shard-reduced totals on the sharded path), and the
+serving-level numbers — p50/p95/p99 request latency, QPS, per-bucket
+dispatch latency and compile counts — wrap around it in ``summary()``.
+
+The compile counters are the serving frontend's key invariant: after
+``mark_warm()`` (the explicit bucket warmup) ``recompiles_after_warmup``
+must stay 0 across any ragged request trace — a nonzero value means a batch
+shape escaped the bucket ladder and paid an XLA compile on the request path
+(asserted in benchmarks/bench_serve.py and tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+from repro.core.spec import SearchStats
+
+# Sliding-window length for the percentile/QPS/engine-stats digests.  The
+# cumulative counters (submitted/served/rows/compiles/...) are lifetime
+# totals, but the sample lists must stay bounded — a "serve forever" worker
+# would otherwise grow one latency float per request and one SearchStats per
+# dispatch without limit.
+WINDOW = 4096
+
+
+def _pcts(lat_s) -> Dict[str, Optional[float]]:
+    """p50/p95/p99 in milliseconds from an iterable of seconds."""
+    lat_s = list(lat_s)
+    if not lat_s:
+        return {"p50_ms": None, "p95_ms": None, "p99_ms": None}
+    ms = np.asarray(lat_s) * 1e3
+    return {"p50_ms": round(float(np.percentile(ms, 50)), 3),
+            "p95_ms": round(float(np.percentile(ms, 95)), 3),
+            "p99_ms": round(float(np.percentile(ms, 99)), 3)}
+
+
+def _window() -> Deque:
+    return deque(maxlen=WINDOW)
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Per-rung accounting (bucket size = the padded batch shape)."""
+
+    dispatches: int = 0
+    compiles: int = 0            # executables built for this rung (warmup: 1)
+    rows_valid: int = 0          # real query rows served through this rung
+    rows_padded: int = 0         # wasted lanes (bucket - valid, summed)
+    lat_s: Deque[float] = dataclasses.field(default_factory=_window)
+
+    def summary(self) -> Dict[str, object]:
+        pad_total = self.rows_valid + self.rows_padded
+        out = {"dispatches": self.dispatches, "compiles": self.compiles,
+               "rows": self.rows_valid,
+               "pad_overhead": round(self.rows_padded / pad_total, 3)
+               if pad_total else 0.0}
+        out.update(_pcts(self.lat_s))
+        return out
+
+
+class ServeTelemetry:
+    """Latency + throughput + compile accounting for one frontend."""
+
+    def __init__(self):
+        self.buckets: Dict[int, BucketStats] = {}
+        self.request_lat_s: Deque[float] = _window()
+        self.queue_wait_s: Deque[float] = _window()
+        self.submitted = 0
+        self.served = 0
+        self.rejected = 0           # oversized / backpressure, at submit
+        self.expired = 0            # deadline passed before dispatch
+        self.recompiles_after_warmup = 0
+        self._warm = False
+        self._stats: Deque[SearchStats] = _window()
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # --- recording hooks (called by the frontend) -------------------------
+    def mark_warm(self):
+        """All buckets pre-jitted: any later compile is a ladder escape."""
+        self._warm = True
+
+    def observe_dispatch(self, bucket: int, n_valid: int, secs: float,
+                         compiled: int, stats: Optional[SearchStats]):
+        """``stats=None`` marks a warmup probe: it contributes to the
+        compile accounting only, never to latency/throughput/pad numbers
+        (a probe's latency IS the XLA compile — folding it into the bucket
+        percentiles would misreport the served trace)."""
+        bs = self.buckets.setdefault(bucket, BucketStats())
+        bs.compiles += compiled
+        if stats is None:
+            return
+        # a compile during a REAL dispatch after warmup = a batch shape that
+        # escaped the ladder and paid XLA on the request path (warmup probes
+        # — including a late-created session's — never count)
+        if compiled and self._warm:
+            self.recompiles_after_warmup += compiled
+        bs.dispatches += 1
+        bs.rows_valid += n_valid
+        bs.rows_padded += bucket - n_valid
+        bs.lat_s.append(secs)
+        self._stats.append(stats)
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now - secs
+        self._t_last = now
+
+    def observe_request_done(self, total_s: float, wait_s: float):
+        self.served += 1
+        self.request_lat_s.append(total_s)
+        self.queue_wait_s.append(wait_s)
+
+    # --- reporting --------------------------------------------------------
+    def merged_stats(self) -> Optional[SearchStats]:
+        """Engine stats folded over the sample window (last WINDOW
+        dispatches)."""
+        return SearchStats.merge(self._stats) if self._stats else None
+
+    def qps(self) -> Optional[float]:
+        """Real rows served per second of serving wall-clock."""
+        if self._t_first is None or self._t_last <= self._t_first:
+            return None
+        rows = sum(b.rows_valid for b in self.buckets.values())
+        return rows / (self._t_last - self._t_first)
+
+    def summary(self) -> Dict[str, object]:
+        """JSON-ready digest; ``search`` is ``SearchStats.summary()`` over
+        the merged trace — the engine counters fold into the same record the
+        benchmarks persist."""
+        merged = self.merged_stats()
+        qps = self.qps()
+        out: Dict[str, object] = {
+            "requests": {"submitted": self.submitted, "served": self.served,
+                         "rejected": self.rejected, "expired": self.expired},
+            "latency": _pcts(self.request_lat_s),
+            "queue_wait": _pcts(self.queue_wait_s),
+            "qps": round(qps, 1) if qps else None,
+            "compiles_total": sum(b.compiles for b in self.buckets.values()),
+            "recompiles_after_warmup": self.recompiles_after_warmup,
+            "buckets": {str(b): self.buckets[b].summary()
+                        for b in sorted(self.buckets)},
+        }
+        if merged is not None:
+            out["search"] = merged.summary()
+        return out

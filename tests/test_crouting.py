@@ -25,6 +25,33 @@ def test_angle_distribution_graph_invariant(small_ds, hnsw_index, nsg_index):
     assert abs(np.median(p1.samples) - np.median(p2.samples)) < 0.06 * np.pi
 
 
+def test_user_queries_not_truncated_to_default_n_sample(hnsw_index):
+    """ISSUE 5 regression: 50 held-out queries against a graph whose default
+    n_sample is smaller (0.1%·1500 -> 8) must ALL be searched, and
+    n_sample_queries must record the count actually used."""
+    rng = np.random.default_rng(11)
+    held_out = rng.standard_normal((50, hnsw_index.dim)).astype(np.float32)
+    prof = sample_angle_profile(hnsw_index, efs=32, queries=held_out)
+    assert prof.n_sample_queries == 50
+    # sanity: 50 queries collect far more angle samples than 8 would
+    prof8 = sample_angle_profile(hnsw_index, efs=32, queries=held_out,
+                                 n_sample=8)
+    assert prof8.n_sample_queries == 8
+    assert prof.samples.size > prof8.samples.size
+
+
+def test_explicit_n_sample_still_caps_user_queries(hnsw_index):
+    """Passing BOTH queries and n_sample keeps the cap (the old default-cap
+    behavior is now opt-in), and the random path records its true count."""
+    rng = np.random.default_rng(12)
+    held_out = rng.standard_normal((20, hnsw_index.dim)).astype(np.float32)
+    capped = sample_angle_profile(hnsw_index, efs=32, queries=held_out,
+                                  n_sample=5)
+    assert capped.n_sample_queries == 5
+    rand = sample_angle_profile(hnsw_index, efs=32, n_sample=7, seed=2)
+    assert rand.n_sample_queries == 7
+
+
 def test_theoretical_pdf_integrates_to_one():
     eta = np.linspace(1e-3, np.pi - 1e-3, 4001)
     for d in (16, 128, 960):

@@ -89,6 +89,40 @@ def test_k_and_cos_theta_do_not_retrigger_jit(built):
 
 
 # --------------------------------------------------------------------------
+# theta*=90deg fallback (ISSUE 5 recall-safety fix): a pruning router on a
+# profile-less index must refuse to run, not silently prune at cos_theta=0
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def unprofiled(small_ds):
+    return AnnIndex.build(small_ds.base[:600], graph="hnsw", m=8, efc=48,
+                          profile=False)
+
+
+def test_pruning_router_without_profile_raises(small_ds, unprofiled):
+    assert unprofiled.profile is None
+    with pytest.raises(ValueError, match="theta"):
+        unprofiled.search(small_ds.queries[:4],
+                          spec=SearchSpec(k=5, efs=32, router="crouting"))
+
+
+def test_non_pruning_router_without_profile_still_works(small_ds, unprofiled):
+    ids, dists, stats = unprofiled.search(
+        small_ds.queries[:4], spec=SearchSpec(k=5, efs=32, router="none"))
+    assert ids.shape == (4, 5)
+    assert (stats.est_calls == 0).all()
+
+
+def test_explicit_cos_theta_without_profile_works(small_ds, unprofiled):
+    """An explicit threshold is the documented escape hatch: results match a
+    profiled index searched with the same override."""
+    ids, dists, stats = unprofiled.search(
+        small_ds.queries[:4],
+        spec=SearchSpec(k=5, efs=32, router="crouting", cos_theta=0.3))
+    assert ids.shape == (4, 5)
+    assert (stats.est_calls > 0).any()
+
+
+# --------------------------------------------------------------------------
 # pad-slot masking (satellite fix): ids -1 must never carry a finite dist
 # --------------------------------------------------------------------------
 def test_empty_result_slots_have_inf_distance():

@@ -1,0 +1,274 @@
+"""Serving frontend (ISSUE 5 tentpole): ragged-batch equivalence against
+direct ``AnnIndex.search``, zero-recompile bucket warmup, padded-lane
+counter hygiene, admission control (oversized/backpressure/deadline), and
+the telemetry digest."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec, SearchStats
+from repro.serve import (DeadlineExceeded, QueueFull, RequestRejected,
+                         ServeFrontend, bucket_for, pad_to_bucket,
+                         validate_buckets)
+
+BUCKETS = (1, 8, 32, 64)
+RAGGED = (1, 3, 8, 31, 64)
+
+
+@pytest.fixture(scope="module")
+def built(small_ds):
+    return AnnIndex.build(small_ds.base, graph="hnsw", m=12, efc=64)
+
+
+@pytest.fixture(scope="module")
+def queries(small_ds):
+    # RAGGED needs up to 64 rows; the fixture dataset ships 40 queries
+    q = small_ds.queries
+    return np.take(q, np.arange(max(RAGGED)) % len(q), axis=0)
+
+
+def _frontend(built, spec, **kw):
+    kw.setdefault("buckets", BUCKETS)
+    return ServeFrontend(built, spec, **kw)
+
+
+def _assert_stats_equal(a: SearchStats, b: SearchStats):
+    for f in ("dist_calls", "est_calls", "rerank_calls", "sq8_calls", "hops"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    for k in set(a.extra) | set(b.extra):
+        np.testing.assert_array_equal(a.extra[k], b.extra[k], err_msg=k)
+
+
+# --------------------------------------------------------------------------
+# ragged-batch equivalence suite (satellite): every batch size, bit-identical
+# --------------------------------------------------------------------------
+def _ragged_sweep(built, queries, engine):
+    spec = SearchSpec(k=10, efs=32, router="crouting", engine=engine)
+    fe = _frontend(built, spec)
+    sess = fe._base
+    assert sess.engine.compile_count() == len(BUCKETS), \
+        "warmup must pre-jit exactly one executable per rung"
+    # direct references FIRST: they share the session's jitted fn and their
+    # raw (un-bucketed) shapes 3/31 legitimately add executables to it
+    direct = {n: built.search(queries[:n], spec=spec) for n in RAGGED}
+    compiles0 = sess.engine.compile_count()
+    for n in RAGGED:
+        ids_f, d_f, st_f = fe.search(queries[:n])
+        ids_d, d_d, st_d = direct[n]
+        np.testing.assert_array_equal(ids_f, ids_d, err_msg=f"ids n={n}")
+        np.testing.assert_array_equal(d_f, d_d, err_msg=f"dists n={n}")
+        assert st_f.dist_calls.shape == (n,)
+        _assert_stats_equal(st_f, st_d)
+    # the ragged trace itself compiled NOTHING: every dispatch landed on a
+    # pre-jitted bucket shape
+    assert sess.engine.compile_count() == compiles0
+    assert fe.telemetry.recompiles_after_warmup == 0
+    summ = fe.telemetry.summary()
+    assert all(b["compiles"] == 1 for b in summ["buckets"].values()), summ
+
+
+def test_ragged_equivalence_jnp(built, queries):
+    _ragged_sweep(built, queries, "jnp")
+
+
+@pytest.mark.slow
+def test_ragged_equivalence_pallas(built, queries):
+    _ragged_sweep(built, queries, "pallas")
+
+
+def test_coalesced_dispatch_matches_per_request_search(built, queries):
+    """Several queued requests merge into ONE padded dispatch; every
+    request's slice must still be bit-identical to its direct search."""
+    spec = SearchSpec(k=10, efs=32, router="crouting")
+    fe = _frontend(built, spec)
+    sizes = (1, 3, 8, 5)
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    futs = [fe.submit(queries[offs[i]:offs[i + 1]], k=5 + i)
+            for i in range(len(sizes))]
+    assert fe.flush() == 1, "17 rows + one cos_theta must be one dispatch"
+    for i, f in enumerate(futs):
+        q = queries[offs[i]:offs[i + 1]]
+        ids_f, d_f, st_f = f.result()
+        assert ids_f.shape == (sizes[i], 5 + i)
+        ids_d, d_d, st_d = built.search(q, spec=spec.replace(k=5 + i))
+        np.testing.assert_array_equal(ids_f, ids_d)
+        np.testing.assert_array_equal(d_f, d_d)
+        _assert_stats_equal(st_f, st_d)
+
+
+def test_padded_lanes_contribute_zero_counters(built, queries):
+    """Engine-level contract behind the frontend slicing: a bucket-padded
+    batch with a valid mask reports bit-equal counters on the real lanes
+    and exact zero on the padded ones."""
+    import jax.numpy as jnp
+
+    from repro.core.search import build_search_fn, _search_batch
+    from repro.core.search import _graph_arrays_cached
+
+    g = built.graph
+    spec = SearchSpec(k=10, efs=32, router="crouting",
+                      metric=g.metric,
+                      use_hierarchy=g.upper_neighbors is not None)
+    build_search_fn(g, spec)   # populate the arrays cache
+    arrays = _graph_arrays_cached(g)
+    ct = jnp.asarray(built.profile.cos_theta_star, jnp.float32)
+    qp, valid = pad_to_bucket(queries[:3], 8)
+    res = _search_batch(arrays, jnp.asarray(qp), ct, spec,
+                        valid=jnp.asarray(valid))
+    ref = _search_batch(arrays, jnp.asarray(queries[:3]), ct, spec)
+    for f in ("dist_calls", "est_calls", "hops"):
+        r = np.asarray(getattr(res, f))
+        assert (r[3:] == 0).all(), f"padded lanes leaked into {f}"
+        np.testing.assert_array_equal(r[:3], np.asarray(getattr(ref, f)))
+    np.testing.assert_array_equal(np.asarray(res.ids[:3]),
+                                  np.asarray(ref.ids))
+
+
+# --------------------------------------------------------------------------
+# sessions: request-only overrides reuse the engine, new specs warm anew
+# --------------------------------------------------------------------------
+def test_request_only_overrides_do_not_recompile(built, queries):
+    spec = SearchSpec(k=10, efs=32, router="crouting")
+    fe = _frontend(built, spec)
+    c0 = fe._base.engine.compile_count()
+    fe.search(queries[:4], k=3)
+    fe.search(queries[:4], cos_theta=0.55)
+    fe.search(queries[:4], spec=spec.replace(k=7, cos_theta=0.9))
+    assert fe._base.engine.compile_count() == c0
+    assert len(fe._sessions) == 1, "request-only specs must share the session"
+
+
+def test_engine_shaping_spec_opens_new_session(built, queries):
+    spec = SearchSpec(k=10, efs=32, router="crouting")
+    fe = _frontend(built, spec)
+    fe.search(queries[:2], spec=spec.replace(efs=48))
+    assert len(fe._sessions) == 2
+    assert fe.telemetry.recompiles_after_warmup == 0, \
+        "a fresh session warms its buckets off the request path"
+
+
+# --------------------------------------------------------------------------
+# admission control
+# --------------------------------------------------------------------------
+def test_oversized_request_rejected_not_truncated(built, queries):
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"),
+                   buckets=(1, 8))
+    with pytest.raises(RequestRejected, match="exceeds the largest bucket"):
+        fe.submit(queries[:9])
+    assert fe.telemetry.rejected == 1
+
+
+def test_k_beyond_session_efs_rejected(built, queries):
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    with pytest.raises(RequestRejected, match="recompile"):
+        fe.submit(queries[:2], k=33)
+
+
+def test_dim_mismatch_rejected(built):
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    with pytest.raises(RequestRejected, match="dim"):
+        fe.submit(np.zeros((2, 7), np.float32))
+
+
+def test_backpressure_queue_full(built, queries):
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"),
+                   max_pending_rows=10)
+    fe.submit(queries[:8])
+    with pytest.raises(QueueFull):
+        fe.submit(queries[:8])
+    fe.flush()
+    fe.submit(queries[:8])    # drained: admitted again
+    fe.flush()
+
+
+def test_expired_deadline_fails_future(built, queries):
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    fut = fe.submit(queries[:2], timeout=1e-4)
+    time.sleep(0.01)
+    fe.flush()
+    with pytest.raises(DeadlineExceeded):
+        fut.result()
+    assert fe.telemetry.expired == 1
+
+
+def test_admitted_future_always_resolves(built, queries):
+    """Once dispatched, a request completes even if its deadline passes
+    mid-flight (admission deadline, not a compute kill switch)."""
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    fut = fe.submit(queries[:2], timeout=30.0)
+    fe.flush()
+    ids, _, _ = fut.result(timeout=5)
+    assert ids.shape == (2, 10)
+
+
+def test_failed_dispatch_only_fails_its_own_batch(built, queries,
+                                                  monkeypatch):
+    """An engine failure lands on the failing dispatch's futures; requests
+    in OTHER dispatch groups (already drained from the queue) still
+    resolve — an admitted future always resolves."""
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    sess = fe._base
+    orig = sess.engine.search_padded
+
+    def flaky(qp, n_valid, k, ct):
+        if ct == 0.123:
+            raise RuntimeError("boom")
+        return orig(qp, n_valid, k, ct)
+
+    monkeypatch.setattr(sess.engine, "search_padded", flaky)
+    f_bad = fe.submit(queries[:2], cos_theta=0.123)   # its own ct group
+    f_good = fe.submit(queries[:3], cos_theta=0.9)
+    fe.flush()
+    with pytest.raises(RuntimeError, match="boom"):
+        f_bad.result(timeout=5)
+    ids, _, _ = f_good.result(timeout=5)
+    assert ids.shape == (3, 10)
+
+
+# --------------------------------------------------------------------------
+# worker thread + telemetry digest
+# --------------------------------------------------------------------------
+def test_worker_thread_serves(built, queries):
+    with _frontend(built, SearchSpec(efs=32, router="crouting")) as fe:
+        futs = [fe.submit(queries[:n]) for n in (1, 3, 8)]
+        outs = [f.result(timeout=30) for f in futs]
+    assert [o[0].shape[0] for o in outs] == [1, 3, 8]
+
+
+def test_telemetry_summary_folds_search_stats(built, queries):
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    for n in (1, 3, 8):
+        fe.search(queries[:n])
+    summ = fe.telemetry.summary()
+    assert summ["requests"]["served"] == 3
+    assert summ["recompiles_after_warmup"] == 0
+    for key in ("p50_ms", "p95_ms", "p99_ms"):
+        assert summ["latency"][key] is not None
+    assert summ["qps"] > 0
+    # the engine counters fold through SearchStats.merge -> one summary()
+    # over the whole trace (12 queries -> per-query means)
+    assert summ["search"]["router"] == "crouting"
+    assert summ["search"]["dist_calls"] > 0
+    merged = fe.telemetry.merged_stats()
+    assert merged.dist_calls.shape == (12,)
+
+
+# --------------------------------------------------------------------------
+# bucketing helpers
+# --------------------------------------------------------------------------
+def test_bucket_ladder_helpers():
+    assert validate_buckets((32, 1, 8, 8)) == (1, 8, 32)
+    assert bucket_for(1, (1, 8)) == 1
+    assert bucket_for(2, (1, 8)) == 8
+    with pytest.raises(ValueError):
+        bucket_for(9, (1, 8))
+    with pytest.raises(ValueError):
+        validate_buckets(())
+    q = np.arange(12, dtype=np.float32).reshape(3, 4)
+    qp, valid = pad_to_bucket(q, 8)
+    assert qp.shape == (8, 4) and valid.sum() == 3 and valid[:3].all()
+    np.testing.assert_array_equal(qp[3], q[0])   # pad repeats real rows
+    qs, vs = pad_to_bucket(q, 3)
+    assert qs is q and vs.all()

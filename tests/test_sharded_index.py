@@ -70,6 +70,51 @@ register_router(CountingRouter(name="counting", prunes=True,
 idx3 = ShardedAnnIndex(arrays, mesh, spec=spec.replace(router="counting"))
 _, _, stats3 = idx3.search(ds.queries[:8])
 out["extra_counter"] = int(stats3.extra["my_tests"])
+
+# --- ISSUE 5 spec parity: per-call spec routes through resolve_search_spec
+# and request-only fields (k / cos_theta) reuse the jitted serve step
+import warnings
+step0 = idx._step(idx.spec)
+n_cache0 = step0._cache_size()
+ids_k, d_k, _ = idx.search(ds.queries, spec=spec.replace(k=5, cos_theta=0.6))
+out["k_override_shape_ok"] = bool(ids_k.shape == (40, 5))
+out["k_override_no_rejit"] = bool(
+    idx._step(idx.spec) is step0 and step0._cache_size() == n_cache0
+    and len(idx._steps) == 1)
+# legacy kwarg + pre-parity positional scalar both shim with a warning
+with warnings.catch_warnings(record=True) as wlog:
+    warnings.simplefilter("always")
+    ids_kw, _, _ = idx.search(ds.queries, cos_theta=0.6, k=5)
+    ids_pos, _, _ = idx.search(ds.queries, 0.6)
+out["legacy_shims_warn"] = bool(
+    sum(issubclass(w.category, DeprecationWarning) for w in wlog) >= 2)
+out["legacy_kwarg_matches_spec"] = bool((ids_kw == ids_k).all())
+out["positional_matches_spec"] = bool((ids_pos[:, :5] == ids_k).all())
+
+# --- ISSUE 5 valid mask: padded lanes contribute ZERO to the shard-reduced
+# counter totals (the serving frontend's bucket-padding contract)
+qpad = np.concatenate([ds.queries[:10], np.repeat(ds.queries[:1], 6, 0)])
+vmask = np.arange(16) < 10
+ids_p, d_p, st_pad = idx.search(qpad, valid=vmask)
+_, _, st_ref = idx.search(ds.queries[:10])
+out["padded_counters_zero"] = bool(
+    int(st_pad.dist_calls) == int(st_ref.dist_calls)
+    and int(st_pad.hops) == int(st_ref.hops)
+    and int(st_pad.est_calls) == int(st_ref.est_calls))
+
+# --- ISSUE 5 frontend over the sharded backend: ragged trace, results
+# bit-identical to direct search, zero compiles on the request path
+from repro.serve import ServeFrontend
+fe = ServeFrontend(idx, spec, buckets=(1, 8, 16, 40))
+ok = True
+for n in (1, 3, 8, 16, 40):
+    fut = fe.submit(ds.queries[:n]); fe.flush()
+    f_ids, f_d, f_st = fut.result()
+    r_ids, r_d, r_st = idx.search(ds.queries[:n])
+    ok &= (f_ids == r_ids).all() and np.allclose(f_d, r_d)
+    ok &= int(f_st.dist_calls) == int(r_st.dist_calls)
+out["frontend_matches_direct"] = bool(ok)
+out["frontend_recompiles"] = int(fe.telemetry.recompiles_after_warmup)
 print("RESULT " + json.dumps(out))
 """
 
@@ -96,3 +141,14 @@ def test_sharded_index_subprocess():
     assert out["recall_budget"] > 0.2, out
     # plugin-router extra counters round-trip through the shard reduction
     assert out["extra_counter"] > 0, out
+    # ISSUE 5 spec parity: request-only overrides reuse the serve step, the
+    # legacy shims warn and agree, padded lanes stay out of the counters,
+    # and the serving frontend is bit-identical to direct sharded search
+    assert out["k_override_shape_ok"], out
+    assert out["k_override_no_rejit"], out
+    assert out["legacy_shims_warn"], out
+    assert out["legacy_kwarg_matches_spec"], out
+    assert out["positional_matches_spec"], out
+    assert out["padded_counters_zero"], out
+    assert out["frontend_matches_direct"], out
+    assert out["frontend_recompiles"] == 0, out
