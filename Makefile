@@ -1,6 +1,7 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
-.PHONY: verify test lint bench bench-engine bench-smoke bench-serve-smoke
+.PHONY: verify test lint bench bench-engine bench-smoke bench-serve-smoke \
+	bench-mutate-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -35,3 +36,11 @@ bench-smoke:
 bench-serve-smoke:
 	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
 		python -m benchmarks.run --only serve
+
+# CI tier: tiny streaming insert+delete trace through the mutable index
+# behind the frontend, spanning a background merge — keeps the delta +
+# tombstone + swap machinery and its zero-recompile invariant exercised
+# per-PR.  Results go to .cache/, never to BENCH_mutate.json.
+bench-mutate-smoke:
+	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
+		python -m benchmarks.run --only mutate

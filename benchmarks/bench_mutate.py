@@ -1,0 +1,149 @@
+"""Live-mutation benchmark (persisted to committed BENCH_mutate.json).
+
+One streaming trace against a ``MutableAnnIndex`` behind the bucketed
+``ServeFrontend``: ragged search requests interleaved with insert chunks
+and uniform deletes, sized so at least one background merge happens while
+requests are in flight.  Reported against a static-rebuild baseline (a
+fresh ``AnnIndex`` over the final live rows, same SearchSpec, same trace).
+
+Acceptance (ISSUE 6), all persisted in the JSON:
+
+* ``recall_ratio`` — streaming recall@10 / static-rebuild recall@10,
+  must be >= 0.95;
+* ``deleted_leaks == 0`` — a result may never contain an id deleted
+  before its request was submitted;
+* ``recompiles_after_warmup == 0`` with ``merges >= 1`` — the trace spans
+  a background merge and no request-path recompile happens (the merge
+  pre-warms the fresh snapshot at every noted bucket shape);
+* QPS + p50/p99 for the mutable path and the static baseline.
+
+``BENCH_SMOKE=1`` shrinks sizes and diverts the JSON to .cache/.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (SMOKE, dataset, emit, persist_bench,
+                               smoke_scale)
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
+from repro.data.vectors import recall_at_k
+from repro.mutate import MutableAnnIndex, MutateConfig
+from repro.serve import ServeFrontend
+
+BUCKETS = (1, 4, 8) if SMOKE else (1, 8, 32, 64)
+N_REQUESTS = 8 if SMOKE else 64
+HNSW_KW = dict(m=8, efc=48) if SMOKE else dict(m=16, efc=96)
+
+
+def _gt_live(ds, live: np.ndarray, k: int) -> np.ndarray:
+    dist = np.sum((ds.queries[:, None, :].astype(np.float64)
+                   - ds.base[None, :, :].astype(np.float64)) ** 2, axis=-1)
+    dist[:, ~live] = np.inf
+    return np.argsort(dist, axis=1)[:, :k]
+
+
+def _request_sizes(n_requests: int, top: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    sizes = np.exp(rng.uniform(0, np.log(top + 1), n_requests)).astype(int)
+    return np.clip(sizes, 1, top)
+
+
+def mutate_streaming():
+    """Streaming insert+delete trace served without downtime."""
+    ds = dataset("sift-synth", n_base=smoke_scale(4000, 600))
+    n_total = ds.base.shape[0]
+    n0 = int(n_total * 0.75)              # the rest streams in during serve
+    spec = SearchSpec(efs=64, k=10, router="crouting")
+    cfg = MutateConfig(
+        delta_capacity=smoke_scale(256, 48), auto_merge="background",
+        graph="hnsw", graph_kw=dict(HNSW_KW))
+    mi = MutableAnnIndex.build(ds.base[:n0], config=cfg, **HNSW_KW)
+    fe = ServeFrontend(mi, spec, buckets=BUCKETS,
+                       max_pending_rows=4 * BUCKETS[-1])
+
+    rng = np.random.default_rng(13)
+    sizes = _request_sizes(N_REQUESTS, BUCKETS[-1])
+    ins_chunk = max(1, (n_total - n0) // N_REQUESTS)
+    live = np.zeros(n_total, bool)
+    live[:n0] = True
+    next_ins = n0
+    dead: set = set()
+    futs = []                              # (future, dead-at-submit, query rows)
+    for i, sz in enumerate(sizes):
+        rows = rng.integers(0, len(ds.queries), int(sz))
+        futs.append((fe.submit(ds.queries[rows]), set(dead), rows))
+        fe.flush()
+        if next_ins < n_total:             # stream the held-out rows in
+            hi = min(n_total, next_ins + ins_chunk)
+            mi.insert(ds.base[next_ins:hi])
+            live[next_ins:hi] = True
+            next_ins = hi
+        if i % 4 == 3:                     # uniform churn: delete 2 live ids
+            kill = rng.choice(np.flatnonzero(live), 2, replace=False)
+            mi.delete(kill)
+            live[kill] = False
+            dead.update(int(x) for x in kill)
+    mi.wait_for_merge()
+    fe.flush()
+
+    leaks = 0
+    for fut, dead_at_submit, _rows in futs:
+        ids, _, _ = fut.result(timeout=600)
+        leaks += int(np.isin(ids, sorted(dead_at_submit)).sum())
+    summ = fe.telemetry.summary()
+    assert summ["recompiles_after_warmup"] == 0, summ
+    assert mi.merges_completed >= 1, \
+        "trace did not span a merge; grow the insert stream"
+    assert leaks == 0, f"{leaks} results contained already-deleted ids"
+
+    # final-state recall, streaming index vs from-scratch static rebuild
+    gt = _gt_live(ds, live, spec.k)
+    m_ids, _, _ = mi.search(ds.queries, spec=spec)
+    recall_mut = recall_at_k(m_ids, gt, spec.k)
+    static = AnnIndex.build(ds.base[live], graph="hnsw", **HNSW_KW)
+    ext_of_row = np.flatnonzero(live)
+    s_rows, _, _ = static.search(ds.queries, spec=spec)
+    s_ids = np.where(s_rows >= 0,
+                     ext_of_row[np.where(s_rows >= 0, s_rows, 0)], -1)
+    recall_static = recall_at_k(s_ids, gt, spec.k)
+    ratio = recall_mut / max(recall_static, 1e-9)
+    assert ratio >= 0.95, (recall_mut, recall_static)
+
+    # static baseline through the same frontend for honest QPS/p99 deltas
+    fe_s = ServeFrontend(static, spec, buckets=BUCKETS,
+                         max_pending_rows=4 * BUCKETS[-1])
+    sfuts = []
+    for sz in sizes:
+        rows = rng.integers(0, len(ds.queries), int(sz))
+        sfuts.append(fe_s.submit(ds.queries[rows]))
+        fe_s.flush()
+    fe_s.flush()
+    for f in sfuts:
+        f.result(timeout=600)
+    summ_s = fe_s.telemetry.summary()
+
+    payload = {
+        "n_base_start": n0, "n_base_total": n_total,
+        "n_live_final": int(live.sum()),
+        "deletes": len(dead), "merges": mi.merges_completed,
+        "epoch_final": mi.epoch,
+        "delta_capacity": cfg.delta_capacity,
+        "recall_streaming": round(recall_mut, 3),
+        "recall_static_rebuild": round(recall_static, 3),
+        "recall_ratio": round(ratio, 4),
+        "deleted_leaks": leaks,
+        "recompiles_after_warmup": summ["recompiles_after_warmup"],
+        "streaming": {"qps": summ["qps"], "latency": summ["latency"]},
+        "static_baseline": {"qps": summ_s["qps"],
+                            "latency": summ_s["latency"]},
+        "trace": {"requests": len(sizes), "rows": int(sizes.sum()),
+                  "insert_chunk": ins_chunk},
+    }
+    emit("mutate_streaming", 0.0,
+         {"qps": summ["qps"], "p99_ms": summ["latency"]["p99_ms"],
+          "recall_ratio": payload["recall_ratio"],
+          "merges": mi.merges_completed, "leaks": leaks,
+          "recompiles": summ["recompiles_after_warmup"]})
+    persist_bench("mutate_streaming", payload, file="BENCH_mutate.json")
+    return payload

@@ -12,6 +12,7 @@ import traceback
 from benchmarks import bench_engine as E
 from benchmarks import bench_paper as P
 from benchmarks import bench_kernels as K
+from benchmarks import bench_mutate as M
 from benchmarks import bench_roofline as R
 from benchmarks import bench_serve as S
 
@@ -22,6 +23,7 @@ BENCHES = [
     ("engine_pallas_parity", E.engine_pallas_parity),
     ("serve_single", S.serve_single),
     ("serve_sharded", S.serve_sharded),
+    ("mutate_streaming", M.mutate_streaming),
     ("fig2_time_breakdown", P.fig2_time_breakdown),
     ("fig6_8_angles", P.fig6_8_angles),
     ("fig10_recall_qps", P.fig10_recall_qps),
@@ -60,7 +62,8 @@ def main() -> None:
     # stamp the persisted perf trajectories (benchmarks/common.py)
     from benchmarks import common as C
     for prefix, file in (("engine", "BENCH_engine.json"),
-                         ("serve", "BENCH_serve.json")):
+                         ("serve", "BENCH_serve.json"),
+                         ("mutate", "BENCH_mutate.json")):
         if any(n.startswith(prefix) for n in ran):
             path = C.persist_bench("_meta", {
                 "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),

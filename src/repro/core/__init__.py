@@ -21,9 +21,6 @@ from repro.core.graph import GraphIndex  # noqa: F401
 from repro.core.spec import SearchSpec, SearchStats  # noqa: F401
 from repro.core.routers import (Router, available_routers, get_router,  # noqa: F401
                                 register_router)
-from repro.core.search import EngineConfig, SearchResult, search_batch  # noqa: F401
+from repro.core.search import SearchResult, search_batch  # noqa: F401
 from repro.core.angles import AngleProfile, sample_angle_profile, theoretical_angle_pdf  # noqa: F401
 from repro.core.index import AnnIndex  # noqa: F401
-
-# Deprecated static tuple (pre-registry); prefer available_routers().
-ROUTERS = ("none", "triangle", "crouting", "crouting_o")

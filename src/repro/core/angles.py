@@ -31,6 +31,9 @@ class AngleProfile:
     samples: np.ndarray        # raw sampled angles (radians)
     n_sample_queries: int
     sample_secs: float
+    # Corpus size at sampling time: after mutation, |n_now - corpus_n| /
+    # corpus_n measures profile staleness (MutableAnnIndex refresh policy).
+    corpus_n: int = 0
 
     def at_percentile(self, pct: float) -> "AngleProfile":
         th = float(np.percentile(self.samples, pct))
@@ -90,4 +93,5 @@ def sample_angle_profile(
         samples=samples,
         n_sample_queries=len(queries),
         sample_secs=time.time() - t0,
+        corpus_n=n,
     )

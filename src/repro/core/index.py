@@ -13,11 +13,13 @@ This is the user-facing entry point of the CRouting system:
 ``SearchSpec`` is the single request object (router registry name, beam
 width, engine, estimate strategy, ...); ``stats`` is a typed
 ``SearchStats``.  The pre-registry kwarg style
-(``idx.search(q, k=10, router="crouting")``) still works for one release
-and emits a ``DeprecationWarning``.
+(``idx.search(q, k=10, router="crouting")``) completed its one-release
+deprecation window and now raises ``TypeError``.
 
-Index persistence is a plain .npz (content-addressed in benchmarks' cache);
-a replacement serving node re-pulls only its shard (DESIGN.md §6).
+Index persistence is a plain .npz (content-addressed in benchmarks' cache)
+stamped with ``format_version``; ``load`` refuses files newer than it knows
+how to read.  A replacement serving node re-pulls only its shard
+(DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -42,6 +44,10 @@ GRAPH_BUILDERS = {"hnsw": build_hnsw, "nsg": build_nsg, "knn": build_knn_graph}
 # defaults; note SearchSpec() itself defaults to router="none").
 DEFAULT_SEARCH = SearchSpec(k=10, efs=100, router="crouting")
 
+# .npz payload schema version.  v1 (implicit — no stamp): pre-PR4 files
+# missing theta_nq/theta_secs.  v2: format_version + theta_corpus_n stamps.
+FORMAT_VERSION = 2
+
 
 @dataclasses.dataclass
 class AnnIndex:
@@ -64,8 +70,8 @@ class AnnIndex:
         # build_search_fn memoizes per (graph identity, canonical spec)
         return build_search_fn(self.graph, cfg)
 
-    def search(self, queries: np.ndarray, spec: Optional[SearchSpec] = None,
-               **legacy) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+    def search(self, queries: np.ndarray, spec: Optional[SearchSpec] = None
+               ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
         """Batched search.  Returns (ids [B,k], dists [B,k], SearchStats).
 
         ``spec`` is the one configuration object; its ``metric`` and
@@ -76,15 +82,14 @@ class AnnIndex:
         prune at theta*=90 degrees and quietly tanked recall; non-pruning
         routers (which never read the threshold) keep the ``0.0``
         placeholder.  Slots with no result carry id -1 and distance +inf.
-        Legacy kwargs (``k=/efs=/router=/...``) are shimmed with a
-        DeprecationWarning.
+        Anything other than a ``SearchSpec`` raises ``TypeError`` (the
+        legacy kwargs completed their deprecation window).
         """
         import jax.numpy as jnp
 
         from repro.core.routers import get_router
 
-        spec = resolve_search_spec(spec, legacy, DEFAULT_SEARCH,
-                                   "AnnIndex.search")
+        spec = resolve_search_spec(spec, DEFAULT_SEARCH, "AnnIndex.search")
         queries = D.preprocess_vectors(
             np.ascontiguousarray(queries, np.float32), self.graph.metric)
         cos_theta = spec.cos_theta
@@ -120,6 +125,7 @@ class AnnIndex:
     def save(self, path: str):
         g = self.graph
         payload = dict(
+            format_version=np.asarray(FORMAT_VERSION),
             vectors=g.vectors, neighbors=g.neighbors, edge_eu_dist=g.edge_eu_dist,
             entry_point=np.asarray(g.entry_point), metric=np.asarray(g.metric),
             kind=np.asarray(g.kind),
@@ -137,12 +143,21 @@ class AnnIndex:
             payload["theta_pct"] = np.asarray(self.profile.percentile)
             payload["theta_nq"] = np.asarray(self.profile.n_sample_queries)
             payload["theta_secs"] = np.asarray(self.profile.sample_secs)
+            payload["theta_corpus_n"] = np.asarray(self.profile.corpus_n)
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         np.savez_compressed(path, **payload)
 
     @classmethod
     def load(cls, path: str) -> "AnnIndex":
         z = np.load(path, allow_pickle=False)
+        # v1 files predate the stamp; anything NEWER than we know must fail
+        # loudly instead of silently defaulting fields it doesn't understand.
+        version = int(z["format_version"]) if "format_version" in z else 1
+        if version > FORMAT_VERSION:
+            raise ValueError(
+                f"{path}: index format_version={version} is newer than this "
+                f"build understands (max {FORMAT_VERSION}); upgrade the code "
+                "or re-save the index with a compatible version")
         upper_ids = upper_nbrs = None
         if "n_upper" in z:
             k = int(z["n_upper"])
@@ -156,12 +171,19 @@ class AnnIndex:
         prof = None
         if "theta_samples" in z:
             th = float(z["theta_star"])
-            # theta_nq/theta_secs are absent in pre-PR4 files; default 0
+            if version >= 2:
+                # v2 files always carry these; read strictly (a missing key
+                # here means corruption, not an old writer)
+                nq, secs = int(z["theta_nq"]), float(z["theta_secs"])
+                corpus_n = int(z["theta_corpus_n"])
+            else:
+                # v1 (pre-PR4) files legitimately lack them
+                nq = int(z["theta_nq"]) if "theta_nq" in z else 0
+                secs = float(z["theta_secs"]) if "theta_secs" in z else 0.0
+                corpus_n = 0
             prof = AngleProfile(theta_star=th, cos_theta_star=float(np.cos(th)),
                                 percentile=float(z["theta_pct"]),
                                 samples=z["theta_samples"],
-                                n_sample_queries=int(z["theta_nq"])
-                                if "theta_nq" in z else 0,
-                                sample_secs=float(z["theta_secs"])
-                                if "theta_secs" in z else 0.0)
+                                n_sample_queries=nq, sample_secs=secs,
+                                corpus_n=corpus_n)
         return cls(graph=g, profile=prof)

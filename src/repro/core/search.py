@@ -80,10 +80,6 @@ STATUS_UNVISITED = 0
 STATUS_VISITED = 1
 STATUS_PRUNED = 2
 
-# Deprecated alias (kept for one release): the engine config *is* the
-# public SearchSpec now — `repro.core.spec` holds the real definition.
-EngineConfig = SearchSpec
-
 
 class SearchResult(NamedTuple):
     ids: jax.Array        # [B, efs] int32, N = empty
@@ -272,7 +268,8 @@ def _rescue_pruned_duplicates(order, sk, prune):
     return rescued, prune_final
 
 
-def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec, valid=None):
+def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec, valid=None,
+                  tombstone=None):
     """Whole-batch Algorithm 1/2 with W-wide beam expansion per iteration.
 
     Routing is delegated to the registry (``repro.core.routers``): the
@@ -286,6 +283,17 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec, valid=None):
     padded lanes start ``done``, never expand a node, and contribute ZERO to
     every counter — so shard-reduced totals (``ShardedAnnIndex``) stay exact
     under bucket padding.  ``None`` means all lanes are real.
+
+    ``tombstone`` ([n+1] bool device array, optional; pad row MUST be
+    False) marks deleted nodes for the live-mutation path
+    (``repro.mutate``).  Dead nodes keep routing — they enter the pool,
+    get expanded, and their edges stay traversable, exactly as live nodes
+    do — but they are masked out of the RESULT pool after the hop loop
+    (id -> pad sentinel n, dist -> +inf, then re-sorted), so a deleted id
+    can never be emitted.  Tombstones deliberately do not change the
+    traversal trace: recall through a sparsely-tombstoned region matches
+    the undeleted graph's routing behavior (FreshDiskANN-style filtered
+    search).  ``None`` compiles the mask out entirely.
     """
     metric, efs, n = cfg.metric, cfg.efs, arrays["n"]
     W, engine = cfg.beam_width, cfg.engine
@@ -600,6 +608,13 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec, valid=None):
     (pool_d, pool_id, pool_exp, pool_apx, status, dcalls, ecalls, rrcalls,
      sqcalls, extras, hops, done, iters) = jax.lax.while_loop(cond, body,
                                                               State)
+    if tombstone is not None:
+        # emission-time masking: dead entries routed normally through the
+        # loop above; here they collapse to the pad sentinel so neither the
+        # sq8 final rerank nor the caller ever sees them
+        dead = tombstone[pool_id]          # pool_id in [0..n]; row n is False
+        pool_d = jnp.where(dead, jnp.inf, pool_d)
+        pool_id = jnp.where(dead, n, pool_id)
     if sq8_on:
         # stage-2 final rerank: every approx survivor still in the pool gets
         # its exact distance before results can be returned; entries
@@ -609,6 +624,12 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec, valid=None):
         nrr = jnp.sum(mask, axis=1, dtype=jnp.int32)
         rrcalls = rrcalls + nrr
         dcalls = dcalls + nrr
+        order = jnp.lexsort((pool_id, pool_d), axis=1)
+        pool_d = jnp.take_along_axis(pool_d, order, axis=1)
+        pool_id = jnp.take_along_axis(pool_id, order, axis=1)
+    elif tombstone is not None:
+        # the sq8 branch above already re-sorted; the exact path must push
+        # the newly-masked dead slots behind the survivors itself
         order = jnp.lexsort((pool_id, pool_d), axis=1)
         pool_d = jnp.take_along_axis(pool_d, order, axis=1)
         pool_id = jnp.take_along_axis(pool_id, order, axis=1)
@@ -663,21 +684,28 @@ def _graph_arrays_cached(g: GraphIndex):
     return arrays
 
 
-def build_search_fn(g: GraphIndex, cfg: SearchSpec):
-    """Returns (arrays, jitted fn(queries [B,d], cos_theta) -> SearchResult).
+def build_search_fn(g: GraphIndex, cfg: SearchSpec, tombstones: bool = False):
+    """Returns (arrays, jitted fn) for searching ``g`` under ``cfg``.
 
-    Cached per (graph identity, canonical spec, router instance): calling
-    twice with the same live graph and an equal spec returns the SAME
-    jitted callable, so repeated search_batch calls reuse the compiled
-    executable instead of re-tracing.  ``SearchSpec.k``/``cos_theta`` are
-    stripped from the key — they do not shape the trace.  The resolved
-    Router is part of the key because the jitted fn bakes its hooks in:
-    re-registering a different router under the same name must miss.
+    The fn signature depends on ``tombstones``: the default is
+    ``fn(queries [B,d], cos_theta) -> SearchResult``; with
+    ``tombstones=True`` (the live-mutation path, ``repro.mutate``) it is
+    ``fn(queries, cos_theta, tombstone [n+1] bool)`` — the mask is a traced
+    argument, so flipping tombstones on/off per delete never re-jits.
+
+    Cached per (graph identity, canonical spec, router instance,
+    tombstones): calling twice with the same live graph and an equal spec
+    returns the SAME jitted callable, so repeated search_batch calls reuse
+    the compiled executable instead of re-tracing.  ``SearchSpec.k``/
+    ``cos_theta`` are stripped from the key — they do not shape the trace.
+    The resolved Router is part of the key because the jitted fn bakes its
+    hooks in: re-registering a different router under the same name must
+    miss.
     """
     _purge_dead_cache_entries()
     cfg = cfg.canonical()
     rt = get_router(cfg.router)
-    key = (id(g), cfg, rt)
+    key = (id(g), cfg, rt, tombstones)
     hit = _ENGINE_CACHE.get(key)
     if hit is not None:
         ref, arrays, fn = hit
@@ -694,10 +722,17 @@ def build_search_fn(g: GraphIndex, cfg: SearchSpec):
     # lazy way the first time the router is configured for this graph
     rt.prepare(g, arrays)
 
-    @jax.jit
-    def run(queries, cos_theta):
-        queries = queries.astype(jnp.float32)
-        return _search_batch(arrays, queries, cos_theta, cfg)
+    if tombstones:
+        @jax.jit
+        def run(queries, cos_theta, tombstone):
+            queries = queries.astype(jnp.float32)
+            return _search_batch(arrays, queries, cos_theta, cfg,
+                                 tombstone=tombstone)
+    else:
+        @jax.jit
+        def run(queries, cos_theta):
+            queries = queries.astype(jnp.float32)
+            return _search_batch(arrays, queries, cos_theta, cfg)
 
     while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
         _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))

@@ -18,7 +18,6 @@ flattening all mesh axes into the shard axis.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -204,9 +203,9 @@ class ShardedAnnIndex:
 
     ``spec`` is the same ``SearchSpec`` the single-index path takes
     (``metric``/``use_hierarchy`` are overridden from the shard arrays);
-    the legacy kwarg style (``efs=/k=/router=/...``) is shimmed with a
-    DeprecationWarning — both at construction and per ``search`` call, for
-    API parity with ``AnnIndex.search``.  Per-call specs that differ only
+    anything else — including the retired legacy kwargs and the pre-parity
+    positional ``cos_theta`` scalar — raises ``TypeError``, for API parity
+    with ``AnnIndex.search``.  Per-call specs that differ only
     in the request-only fields (``k``/``cos_theta``) reuse the jitted serve
     step (canonical-spec contract: ``k`` slices the ``efs``-wide merge
     host-side, ``cos_theta`` is a traced scalar); engine-shaping changes
@@ -220,8 +219,8 @@ class ShardedAnnIndex:
                                 max_hops=2048)
 
     def __init__(self, arrays: ShardedIndexArrays, mesh: Mesh,
-                 spec: Optional[SearchSpec] = None, **legacy):
-        spec = resolve_search_spec(spec, legacy, self.DEFAULT_SEARCH,
+                 spec: Optional[SearchSpec] = None):
+        spec = resolve_search_spec(spec, self.DEFAULT_SEARCH,
                                    "ShardedAnnIndex")
         spec = dataclasses.replace(spec, metric=arrays.metric,
                                    use_hierarchy=False)
@@ -266,35 +265,19 @@ class ShardedAnnIndex:
         return fn
 
     def search(self, queries: np.ndarray, spec=None, *,
-               valid: Optional[np.ndarray] = None, **legacy
+               valid: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
         """Returns (ids [B,k], dists [B,k], SearchStats).
 
         ``spec`` overrides the construction spec for this call (same
-        contract as ``AnnIndex.search``; a bare positional scalar is the
-        pre-parity ``cos_theta`` override, shimmed with a
-        DeprecationWarning).  ``valid`` [B] bool marks the real lanes of a
+        contract as ``AnnIndex.search``; non-``SearchSpec`` values raise
+        ``TypeError``).  ``valid`` [B] bool marks the real lanes of a
         bucket-padded batch — padded lanes contribute zero to the counters.
         The stats fields are batch TOTALS reduced across shards (``iters``
         is the straggler's count), not per-query arrays — the per-shard
         engines ran behind one collective merge.
         """
-        if spec is not None and not isinstance(spec, SearchSpec):
-            if isinstance(spec, (int, float, np.floating)):
-                # pre-parity signature: search(queries, cos_theta)
-                warnings.warn(
-                    "ShardedAnnIndex.search(queries, cos_theta) is "
-                    "deprecated; pass spec=SearchSpec(cos_theta=...) or "
-                    "cos_theta=... instead", DeprecationWarning,
-                    stacklevel=2)
-                legacy.setdefault("cos_theta", float(spec))
-                spec = None
-            else:
-                raise TypeError(
-                    "ShardedAnnIndex.search: spec must be a SearchSpec, "
-                    f"got {type(spec).__name__}")
-        spec = resolve_search_spec(spec, legacy, self.spec,
-                                   "ShardedAnnIndex.search")
+        spec = resolve_search_spec(spec, self.spec, "ShardedAnnIndex.search")
         spec = dataclasses.replace(spec, metric=self.arrays.metric,
                                    use_hierarchy=False)
         fn = self._step(spec)

@@ -4,16 +4,17 @@
 the old ``EngineConfig`` plus the kwarg soup (``router=/cos_theta=/
 beam_width=/...``) that used to be copy-plumbed through ``AnnIndex.search``,
 ``ShardedAnnIndex``, NSG candidate acquisition, the model-cell builder,
-benchmarks and examples.  ``EngineConfig`` remains as a deprecated alias in
-``repro.core.search`` — it IS this class.
+benchmarks and examples.  The one-release deprecation shims from that
+migration (legacy search kwargs, the ``EngineConfig`` alias, dict-style
+stats access) are gone: callers pass ``spec=SearchSpec(...)`` or get a
+``TypeError``.
 
 ``SearchStats`` is the typed result-statistics record replacing the ad-hoc
 ``info`` dict ``AnnIndex.search`` used to return.  It carries the fixed
 engine counters plus ``extra`` — per-router counters a registered
 ``Router`` declares (``Router.extra_counters``, e.g. the finger router's
 ``finger_est_calls``) — and serializes uniformly into ``BENCH_engine.json``
-via ``summary()``.  Dict-style access (``stats["dist_calls"]``) still works
-for one release and emits a ``DeprecationWarning``.
+via ``summary()``.
 
 Not to be confused with ``repro.core.ref_search.SearchStats`` — the scalar
 NumPy oracle's instrumentation record (angles, pruned-id sets), which stays
@@ -22,8 +23,7 @@ oracle-local.
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -105,41 +105,20 @@ class SearchSpec:
         return dataclasses.replace(self, **changes)
 
 
-_LEGACY_SEARCH_KWARGS = ("k", "efs", "router", "cos_theta", "max_hops",
-                         "beam_width", "engine", "beam_prune", "estimate")
-
-
-def resolve_search_spec(spec: Optional["SearchSpec"], legacy: dict,
+def resolve_search_spec(spec: Optional["SearchSpec"],
                         default: "SearchSpec", owner: str) -> "SearchSpec":
-    """Shared deprecation shim: merge legacy kwargs into a SearchSpec.
+    """Validate a per-call ``spec`` (or fall back to ``default``).
 
-    ``spec`` wins when given (mixing raises); legacy kwargs emit a
-    ``DeprecationWarning`` and overlay ``default``.  Callers with no spec
-    and no kwargs get ``default`` silently (the new-style bare call).
+    The legacy-kwarg shim that used to live here shipped its one promised
+    release in PR 3 and is gone: anything that is not a ``SearchSpec`` (or
+    ``None``) raises ``TypeError``.
     """
-    if spec is not None:
-        if legacy:
-            raise TypeError(
-                f"{owner}: pass either spec=SearchSpec(...) or legacy "
-                f"keyword arguments, not both (got {sorted(legacy)})")
-        if not isinstance(spec, SearchSpec):
-            raise TypeError(f"{owner}: spec must be a SearchSpec, "
-                            f"got {type(spec).__name__}")
-        return spec
-    if not legacy:
+    if spec is None:
         return default
-    bad = set(legacy) - set(_LEGACY_SEARCH_KWARGS)
-    if bad:
-        raise TypeError(f"{owner}: unknown keyword arguments {sorted(bad)}")
-    warnings.warn(
-        f"{owner} keyword arguments {sorted(legacy)} are deprecated; pass "
-        "spec=SearchSpec(...) instead (see README 'Search API')",
-        DeprecationWarning, stacklevel=3)
-    return dataclasses.replace(default, **legacy)
-
-
-_STATS_FIELDS = ("dist_calls", "est_calls", "rerank_calls", "sq8_calls",
-                 "hops", "iters", "router")
+    if not isinstance(spec, SearchSpec):
+        raise TypeError(f"{owner}: spec must be a SearchSpec, "
+                        f"got {type(spec).__name__}")
+    return spec
 
 
 @dataclasses.dataclass
@@ -222,25 +201,3 @@ class SearchStats:
         for k, v in self.extra.items():
             out[k] = round(float(np.mean(v)), 1)
         return out
-
-    # --- legacy dict-style access (one-release deprecation shim) ----------
-    def keys(self) -> Tuple[str, ...]:
-        return _STATS_FIELDS + tuple(self.extra)
-
-    def __contains__(self, key) -> bool:
-        return key in self.keys()
-
-    def __getitem__(self, key):
-        warnings.warn(
-            "dict-style SearchStats access (info['...']) is deprecated; "
-            "use the typed attributes (stats.dist_calls, ...)",
-            DeprecationWarning, stacklevel=2)
-        if key in _STATS_FIELDS:
-            return getattr(self, key)
-        try:
-            return self.extra[key]
-        except KeyError:
-            raise KeyError(key) from None
-
-    def get(self, key, default=None):
-        return self[key] if key in self else default

@@ -9,9 +9,9 @@
 #   pool_merge.py       bitonic sorted-pool merge (VPU network)
 #   fused_expand.py     estimate + prune + conditional gather + distance in
 #                       one kernel — the beam engine's per-iteration tile op
-#                       (core/search.py, EngineConfig.engine="pallas")
+#                       (core/search.py, SearchSpec.engine="pallas")
 #   sq8_distance.py     uint8 code-row gather + dequantized distance +
 #                       conservative lower bound — stage 1 of the two-stage
-#                       engine (EngineConfig.estimate="sq8"|"both")
+#                       engine (SearchSpec.estimate="sq8"|"both")
 
 from repro.kernels import ops  # noqa: F401

@@ -1,7 +1,7 @@
 """Pallas TPU kernel: SQ8 quantized distance estimate + lower bound.
 
 Stage 1 of the two-stage distance engine (core/search.py,
-``EngineConfig.estimate``): for each candidate lane the kernel DMAs the
+``SearchSpec.estimate``): for each candidate lane the kernel DMAs the
 neighbor's **uint8 code row** (d bytes — 4x fewer than the fp32 row the
 exact path fetches), dequantizes it against the per-dimension affine grid
 and emits

@@ -1,0 +1,13 @@
+"""Live index mutation (DESIGN.md §9): delta segment + tombstones +
+background merge, served without downtime."""
+from repro.mutate.delta import DeltaSegment, delta_scan_compile_count
+from repro.mutate.index import MutableAnnIndex, MutateConfig
+from repro.mutate.sharded import MutableShardedAnnIndex
+
+__all__ = [
+    "DeltaSegment",
+    "delta_scan_compile_count",
+    "MutableAnnIndex",
+    "MutableShardedAnnIndex",
+    "MutateConfig",
+]

@@ -1,0 +1,212 @@
+"""The delta segment: where freshly-inserted vectors live before a merge.
+
+``DeltaSegment`` is a fixed-capacity, padded, brute-force-scanned side
+table (DESIGN.md §9).  New vectors do NOT enter the main graph — linking
+into an NSG/HNSW is expensive and would mutate arrays jitted engines close
+over — they land in the next free slot here, and every search scans the
+segment with one jitted kernel whose shapes never change:
+
+* the vector table is always ``[capacity, d]`` (empty slots hold zeros and
+  are masked by ``live``), so the scan compiles ONCE per (batch shape,
+  capacity, metric) and a fill-level change never re-traces;
+* distances use the same ranking convention as the graph engine (l2:
+  squared Euclidean; ip/cosine: ``1 - <q, x>``), so the host-side top-k
+  merge with the graph pool compares like with like;
+* the segment is IMMUTABLE (copy-on-write): ``insert``/``delete`` return a
+  new ``DeltaSegment`` sharing nothing mutable with the old one, which is
+  what lets ``MutableAnnIndex.search`` grab a consistent (snapshot, delta)
+  state with one reference read and no lock on the query path.
+
+Quantized scan (``use_sq8=True``, mirroring ``ensure_sq8_arrays``): the
+segment lazily encodes itself to SQ8 codes on first use; stage 1 scans the
+dequantized codes, stage 2 exactly re-ranks only the top
+``max(32, 4k)`` candidates host-side.  For the segment's size (hundreds to
+a few thousand rows) this is about bandwidth parity with the graph
+engine's two-stage path, not a win — it exists so a ``SearchSpec`` with
+``estimate="sq8"`` keeps one storage story across graph and delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import sq8 as SQ
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def _scan_dists(vectors, live, queries, metric):
+    """Ranking distances of every query to every segment slot.
+
+    vectors [cap, d], live [cap] bool, queries [B, d] -> [B, cap] f32 with
+    dead/empty slots at +inf.  Fixed shapes: fill level is data, not shape.
+    """
+    if metric == "l2":
+        diff = queries[:, None, :] - vectors[None, :, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    else:
+        d = 1.0 - queries @ vectors.T
+    return jnp.where(live[None, :], d, jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def _scan_dists_sq8(codes, lo, scale, live, queries, metric):
+    """Stage-1 approximate ranking distances over the uint8 codes."""
+    xhat = SQ.sq8_dequantize_rows(codes, lo, scale)        # [cap, d]
+    if metric == "l2":
+        diff = queries[:, None, :] - xhat[None, :, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    else:
+        d = 1.0 - queries @ xhat.T
+    return jnp.where(live[None, :], d, jnp.inf)
+
+
+def delta_scan_compile_count() -> int:
+    """Total executables behind the jitted scan kernels (all shapes/metrics).
+
+    Feeds ``MutableAnnIndex.compile_count`` so a delta-scan compile on the
+    request path is just as visible to serving telemetry as an engine one.
+    """
+    return _scan_dists._cache_size() + _scan_dists_sq8._cache_size()
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSegment:
+    """Immutable fixed-capacity segment of freshly-inserted vectors."""
+
+    vectors: np.ndarray      # [capacity, d] f32, preprocessed; empty = 0
+    ext_ids: np.ndarray      # [capacity] int64 external ids; -1 = empty slot
+    live: np.ndarray         # [capacity] bool; False = empty OR deleted
+    count: int               # high-water mark (slots [0, count) were used)
+    metric: str
+
+    @classmethod
+    def empty(cls, capacity: int, dim: int, metric: str) -> "DeltaSegment":
+        assert capacity >= 1, "delta capacity must be >= 1"
+        return cls(vectors=np.zeros((capacity, dim), np.float32),
+                   ext_ids=np.full((capacity,), -1, np.int64),
+                   live=np.zeros((capacity,), bool),
+                   count=0, metric=metric)
+
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    @property
+    def room(self) -> int:
+        return self.capacity - self.count
+
+    def insert(self, vectors: np.ndarray, ext_ids: np.ndarray
+               ) -> "DeltaSegment":
+        """Append rows (already preprocessed for ``metric``); copy-on-write."""
+        vectors = np.asarray(vectors, np.float32)
+        ext_ids = np.asarray(ext_ids, np.int64)
+        n = vectors.shape[0]
+        if n > self.room:
+            raise ValueError(
+                f"delta overflow: {n} rows into {self.room} free slots "
+                f"(capacity {self.capacity}); merge first")
+        lo, hi = self.count, self.count + n
+        vec = self.vectors.copy()
+        vec[lo:hi] = vectors
+        ids = self.ext_ids.copy()
+        ids[lo:hi] = ext_ids
+        live = self.live.copy()
+        live[lo:hi] = True
+        return dataclasses.replace(self, vectors=vec, ext_ids=ids, live=live,
+                                   count=hi)
+
+    def delete(self, ext_id: int) -> Tuple["DeltaSegment", bool]:
+        """Mark one external id dead.  Returns (segment, found)."""
+        slot = np.flatnonzero((self.ext_ids[:self.count] == ext_id)
+                              & self.live[:self.count])
+        if slot.size == 0:
+            return self, False
+        live = self.live.copy()
+        live[slot] = False
+        return dataclasses.replace(self, live=live), True
+
+    def contains(self, ext_id: int) -> bool:
+        return bool(((self.ext_ids[:self.count] == ext_id)
+                     & self.live[:self.count]).any())
+
+    def live_rows(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(vectors [m, d], ext_ids [m]) of the surviving rows (merge feed)."""
+        mask = self.live[:self.count]
+        return self.vectors[:self.count][mask], self.ext_ids[:self.count][mask]
+
+    # --- lazy SQ8 sidecar -------------------------------------------------
+    def _sq8(self):
+        # cached on the (frozen) instance: derived data, not state — each
+        # copy-on-write successor re-encodes lazily on first quantized scan
+        tables = self.__dict__.get("_sq8_tables")
+        if tables is None:
+            qp = SQ.sq8_train(self.vectors)
+            tables = (jnp.asarray(SQ.sq8_encode(self.vectors, qp)),
+                      jnp.asarray(qp.lo), jnp.asarray(qp.scale))
+            object.__setattr__(self, "_sq8_tables", tables)
+        return tables
+
+    # --- search -----------------------------------------------------------
+    def topk(self, queries: np.ndarray, k: int, use_sq8: bool = False
+             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Brute-force top-k over the live slots.
+
+        queries [B, d] (preprocessed) -> (ext_ids [B, k] int64 with -1 pads,
+        dists [B, k] ranking distances with +inf pads, scanned [B] int32 =
+        live slots each query compared against).  Runs even when the
+        segment is empty — the scan's shapes are what serving warms, and an
+        "empty" fast path would un-warm them.
+        """
+        queries = np.ascontiguousarray(queries, np.float32)
+        B = queries.shape[0]
+        live_dev = jnp.asarray(self.live)
+        if use_sq8:
+            codes, lo, scale = self._sq8()
+            d = np.asarray(_scan_dists_sq8(codes, lo, scale, live_dev,
+                                           jnp.asarray(queries), self.metric))
+            # stage 2: exact re-rank of the top-m approximate candidates
+            m = min(self.capacity, max(32, 4 * k))
+            cand = np.argpartition(d, m - 1, axis=1)[:, :m]
+            rows = self.vectors[cand]                      # [B, m, d]
+            if self.metric == "l2":
+                diff = rows - queries[:, None, :]
+                exact = np.sum(diff * diff, axis=-1)
+            else:
+                exact = 1.0 - np.einsum("bmd,bd->bm", rows, queries)
+            d = np.full_like(d, np.inf)
+            np.put_along_axis(d, cand,
+                              np.where(self.live[cand], exact, np.inf),
+                              axis=1)
+        else:
+            d = np.asarray(_scan_dists(jnp.asarray(self.vectors), live_dev,
+                                       jnp.asarray(queries), self.metric))
+        kk = min(k, self.capacity)
+        if kk < self.capacity:
+            part = np.argpartition(d, kk - 1, axis=1)[:, :kk]
+        else:
+            part = np.broadcast_to(np.arange(kk), (B, kk))
+        pd = np.take_along_axis(d, part, axis=1)
+        order = np.argsort(pd, axis=1, kind="stable")
+        idx = np.take_along_axis(part, order, axis=1)
+        dists = np.take_along_axis(pd, order, axis=1)
+        ids = self.ext_ids[idx]
+        ids = np.where(np.isfinite(dists), ids, -1)
+        if kk < k:
+            ids = np.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+            dists = np.pad(dists, ((0, 0), (0, k - kk)),
+                           constant_values=np.inf)
+        scanned = np.full((B,), self.n_live, np.int32)
+        return ids, dists, scanned

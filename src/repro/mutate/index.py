@@ -1,0 +1,494 @@
+"""Live index mutation: delta segment + tombstones + background merge.
+
+``MutableAnnIndex`` wraps ``AnnIndex`` with ``insert``/``delete``/``search``
+that work while ``ServeFrontend`` keeps answering queries (DESIGN.md §9):
+
+* inserts land in a ``DeltaSegment`` (fixed-shape jit-scanned side table);
+  its top-k merges with the main-graph pool host-side;
+* deletes become a per-node tombstone mask threaded into the engine
+  (``build_search_fn(..., tombstones=True)``): dead nodes still ROUTE —
+  their edges stay traversable so recall through a tombstoned region holds
+  — but they are masked out of the result pool, so a deleted id is never
+  returned;
+* when the delta fills past ``MutateConfig.merge_threshold`` (or the dead
+  fraction passes ``tombstone_threshold``), a merge re-links survivors +
+  delta into a fresh graph and atomically swaps the snapshot under an
+  epoch guard.  In-flight searches finish on the old snapshot (they hold a
+  reference; the state swap is one pointer write), the compiled-engine
+  cache drops the dead graph via ``_purge_dead_cache_entries``, and the
+  angle profile refreshes once the corpus drifts past
+  ``profile_refresh_fraction`` of its size at sampling time.
+
+External ids: ``insert`` assigns monotonically increasing int64 ids
+(the initial wrap takes ids ``[0, n)`` for the base rows), and every search
+returns EXTERNAL ids — merges renumber graph rows freely underneath.
+
+Zero request-path recompiles across a swap: the merge thread pre-warms the
+fresh snapshot's engines at every (spec, batch shape) the serving layer has
+noted (``note_shape``), and ``compile_count`` folds retired engines +
+pre-warm discounts so serving telemetry sees a flat count through the swap
+(the invariant ``recompiles_after_warmup == 0`` is tested across a merge).
+
+Thread model: ``search`` is lock-free (one volatile read of ``_state``);
+``insert``/``delete`` serialize on a mutation lock; merges serialize on a
+merge lock and only take the mutation lock for the final
+residual-reconcile + swap.  A background-merge failure is remembered and
+re-raised on the next mutation call (``merge_error``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core import distances as D
+from repro.core.angles import sample_angle_profile
+from repro.core.index import DEFAULT_SEARCH, GRAPH_BUILDERS, AnnIndex
+from repro.core.routers import get_router
+from repro.core.search import _purge_dead_cache_entries, build_search_fn
+from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
+from repro.mutate.delta import DeltaSegment, delta_scan_compile_count
+
+# Merge-rebuild graph parameters: modest by default (the merge runs while
+# serving; construction quality is recovered by the next merge anyway).
+# MutateConfig.graph_kw overrides.
+GRAPH_DEFAULTS = {
+    "nsg": dict(r=24, c=120, l=32, knn_k=24),
+    "hnsw": dict(m=12, efc=80),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MutateConfig:
+    """Policy knobs for the mutation machinery."""
+
+    delta_capacity: int = 1024
+    # merge when delta high-water mark passes this fraction of capacity
+    merge_threshold: float = 0.75
+    # ... or when this fraction of snapshot rows is tombstoned
+    tombstone_threshold: float = 0.25
+    # resample the angle profile when |corpus_now - corpus_at_sample| /
+    # corpus_at_sample exceeds this (profile-staleness policy, DESIGN.md §9)
+    profile_refresh_fraction: float = 0.2
+    profile_percentile: float = 90.0
+    graph: str = "nsg"            # what merges re-link into
+    graph_kw: dict = dataclasses.field(default_factory=dict)
+    auto_merge: str = "background"   # background | sync | off
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.graph in GRAPH_BUILDERS, f"unknown graph {self.graph!r}"
+        assert self.auto_merge in ("background", "sync", "off")
+        assert self.delta_capacity >= 1
+
+
+class _Snapshot:
+    """One immutable generation of the main graph (+ its engine ledger)."""
+
+    def __init__(self, index: AnnIndex, ext_ids: np.ndarray):
+        self.index = index
+        self.ext_ids = np.asarray(ext_ids, np.int64)     # row -> external id
+        self.ext_to_row: Dict[int, int] = {
+            int(e): r for r, e in enumerate(self.ext_ids)}
+        # canonical cfg -> jitted fn used on this snapshot, and how many of
+        # that fn's executables were compiled OFF the request path by the
+        # merge pre-warm (compile_count subtracts them)
+        self.engines: Dict[SearchSpec, object] = {}
+        self.warm_discount: Dict[SearchSpec, int] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class _State:
+    """What one search sees: grabbed with a single reference read."""
+
+    snapshot: _Snapshot
+    tombstone: np.ndarray        # [n] bool, host copy (mutation-side truth)
+    tombstone_dev: object        # [n+1] bool device array; pad row False
+    n_dead: int
+    delta: DeltaSegment
+    epoch: int
+
+
+def _tombstone_dev(tomb: np.ndarray):
+    import jax.numpy as jnp
+
+    return jnp.asarray(np.concatenate([tomb, np.zeros(1, bool)]))
+
+
+class MutableAnnIndex:
+    """``AnnIndex`` + insert/delete/background-merge, served without downtime."""
+
+    def __init__(self, index: AnnIndex, config: MutateConfig = MutateConfig(),
+                 spec: Optional[SearchSpec] = None):
+        g = index.graph
+        self.config = config
+        self.default_spec = spec if spec is not None else DEFAULT_SEARCH
+        snap = _Snapshot(index, np.arange(g.n, dtype=np.int64))
+        tomb = np.zeros((g.n,), bool)
+        self._state = _State(
+            snapshot=snap, tombstone=tomb, tombstone_dev=_tombstone_dev(tomb),
+            n_dead=0, epoch=0,
+            delta=DeltaSegment.empty(config.delta_capacity, g.dim, g.metric))
+        self._next_ext = g.n
+        self._lock = threading.RLock()        # state swaps + mutation ops
+        self._merge_lock = threading.Lock()   # one merge at a time
+        self._engine_lock = threading.Lock()  # engine ledger + retired count
+        self._retired = 0                     # compiles owned by dead snapshots
+        self._noted: Dict[SearchSpec, Set[int]] = {}   # cfg -> batch sizes
+        self._merge_thread: Optional[threading.Thread] = None
+        self.merge_error: Optional[BaseException] = None
+        self.merges_completed = 0
+
+    # --- convenience ------------------------------------------------------
+    @classmethod
+    def build(cls, base: np.ndarray, config: MutateConfig = MutateConfig(),
+              spec: Optional[SearchSpec] = None, graph: str = "hnsw",
+              **build_kw) -> "MutableAnnIndex":
+        return cls(AnnIndex.build(base, graph=graph, **build_kw),
+                   config=config, spec=spec)
+
+    @property
+    def metric(self) -> str:
+        return self._state.snapshot.index.graph.metric
+
+    @property
+    def dim(self) -> int:
+        return self._state.snapshot.index.graph.dim
+
+    @property
+    def epoch(self) -> int:
+        return self._state.epoch
+
+    @property
+    def n_live(self) -> int:
+        s = self._state
+        return s.snapshot.index.graph.n - s.n_dead + s.delta.n_live
+
+    def live_ids(self) -> np.ndarray:
+        """Sorted external ids currently searchable (test/debug aid)."""
+        s = self._state
+        main = s.snapshot.ext_ids[~s.tombstone]
+        _, d_ids = s.delta.live_rows()
+        return np.sort(np.concatenate([main, d_ids]))
+
+    # --- mutation ---------------------------------------------------------
+    def _check_merge_error(self):
+        if self.merge_error is not None:
+            err, self.merge_error = self.merge_error, None
+            raise RuntimeError("background merge failed") from err
+
+    def insert(self, vectors: np.ndarray) -> np.ndarray:
+        """Add rows; returns their assigned external ids (int64 [n])."""
+        self._check_merge_error()
+        vectors = np.asarray(vectors, np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        vectors = D.preprocess_vectors(np.ascontiguousarray(vectors),
+                                       self.metric)
+        n = vectors.shape[0]
+        if n > self.config.delta_capacity:
+            raise ValueError(
+                f"insert of {n} rows exceeds delta_capacity="
+                f"{self.config.delta_capacity}; insert in smaller chunks")
+        while True:
+            with self._lock:
+                state = self._state
+                if n <= state.delta.room:
+                    ids = np.arange(self._next_ext, self._next_ext + n,
+                                    dtype=np.int64)
+                    self._next_ext += n
+                    self._state = dataclasses.replace(
+                        state, delta=state.delta.insert(vectors, ids))
+                    break
+            # no room: a merge must drain the delta first.  Outside the
+            # mutation lock — the merge takes it for the final swap.
+            if self.config.auto_merge == "off":
+                raise ValueError(
+                    "delta segment full and auto_merge='off'; call merge()")
+            self.merge()
+        self.maybe_merge()
+        return ids
+
+    def delete(self, ext_ids) -> int:
+        """Remove external ids from search results; returns count removed.
+
+        Unknown or already-deleted ids raise ``KeyError`` (and the whole
+        call applies atomically: either every id dies or none do).
+        """
+        self._check_merge_error()
+        if np.ndim(ext_ids) == 0:
+            ext_ids = [ext_ids]
+        ext_ids = [int(e) for e in ext_ids]
+        with self._lock:
+            state = self._state
+            delta = state.delta
+            tomb = None
+            n_dead = state.n_dead
+            for e in ext_ids:
+                delta2, found = delta.delete(e)
+                if found:
+                    delta = delta2
+                    continue
+                row = state.snapshot.ext_to_row.get(e)
+                dead = (tomb if tomb is not None else state.tombstone)
+                if row is None or dead[row]:
+                    raise KeyError(f"external id {e} is not live")
+                if tomb is None:
+                    tomb = state.tombstone.copy()
+                tomb[row] = True
+                n_dead += 1
+            if tomb is not None:
+                state = dataclasses.replace(
+                    state, tombstone=tomb, tombstone_dev=_tombstone_dev(tomb),
+                    n_dead=n_dead)
+            self._state = dataclasses.replace(state, delta=delta)
+            removed = len(ext_ids)
+        self.maybe_merge()
+        return removed
+
+    # --- search -----------------------------------------------------------
+    def _resolve_cos_theta(self, spec: SearchSpec, snap: _Snapshot) -> float:
+        if spec.cos_theta is not None:
+            return spec.cos_theta
+        profile = snap.index.profile
+        if profile is not None:
+            return profile.cos_theta_star
+        if get_router(spec.router).prunes:
+            raise ValueError(
+                f"router {spec.router!r} prunes on the angle threshold, but "
+                "this index has no angle profile and the spec carries no "
+                "explicit cos_theta (see AnnIndex.search)")
+        return 0.0
+
+    def note_shape(self, cfg: SearchSpec, batch: int):
+        """Record a serving (spec, batch shape): merges pre-warm these on
+        the fresh snapshot so the swap costs zero request-path compiles."""
+        with self._engine_lock:
+            self._noted.setdefault(cfg.canonical(), set()).add(int(batch))
+
+    def _engine(self, snap: _Snapshot, cfg: SearchSpec):
+        _, fn = build_search_fn(snap.index.graph, cfg, tombstones=True)
+        key = cfg.canonical()
+        with self._engine_lock:
+            if key not in snap.engines:
+                snap.engines[key] = fn
+        return fn
+
+    def search(self, queries: np.ndarray, spec: Optional[SearchSpec] = None
+               ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Search main graph + delta.  Returns (ext_ids [B,k] int64 with -1
+        pads, ranking dists [B,k], SearchStats with a ``delta_scanned``
+        extra counter).  Lock-free: the (snapshot, tombstone, delta) triple
+        is one immutable state grabbed up front, so a concurrent merge swap
+        never tears a search."""
+        import jax.numpy as jnp
+
+        state = self._state            # epoch guard: one consistent state
+        snap = state.snapshot
+        g = snap.index.graph
+        spec = resolve_search_spec(spec, self.default_spec,
+                                   "MutableAnnIndex.search")
+        q = D.preprocess_vectors(np.ascontiguousarray(queries, np.float32),
+                                 g.metric)
+        cos_theta = self._resolve_cos_theta(spec, snap)
+        k = spec.k
+        cfg = dataclasses.replace(
+            spec, efs=max(spec.efs, k), metric=g.metric,
+            use_hierarchy=g.upper_neighbors is not None)
+        self.note_shape(cfg, q.shape[0])
+        fn = self._engine(snap, cfg)
+        res = fn(jnp.asarray(q), jnp.asarray(cos_theta, jnp.float32),
+                 state.tombstone_dev)
+        rows = np.asarray(res.ids[:, :k]).astype(np.int64)
+        g_dists = np.array(res.dists[:, :k])
+        pad = rows >= g.n
+        g_ids = np.where(pad, -1, snap.ext_ids[np.where(pad, 0, rows)])
+        g_dists[pad] = np.inf
+
+        d_ids, d_dists, scanned = state.delta.topk(
+            q, k, use_sq8=cfg.estimate in ("sq8", "both"))
+
+        # host-side merge: 2k candidates -> k (ids are disjoint across the
+        # graph snapshot and the delta, so no dedup pass is needed)
+        all_ids = np.concatenate([g_ids, d_ids], axis=1)
+        all_d = np.concatenate([g_dists, d_dists], axis=1)
+        order = np.argsort(all_d, axis=1, kind="stable")[:, :k]
+        out_ids = np.take_along_axis(all_ids, order, axis=1)
+        out_d = np.take_along_axis(all_d, order, axis=1)
+        out_ids = np.where(np.isfinite(out_d), out_ids, -1)
+
+        stats = SearchStats.from_result(res, router=spec.router)
+        stats.extra["delta_scanned"] = scanned
+        return out_ids, out_d, stats
+
+    # --- compile accounting ----------------------------------------------
+    def compile_count(self) -> int:
+        """Executables compiled on behalf of this index, continuous across
+        snapshot swaps: retired snapshots contribute what they had at swap
+        time, the live snapshot its cache sizes minus the merge pre-warm
+        discount, plus the (process-wide) delta-scan kernels."""
+        with self._engine_lock:
+            snap = self._state.snapshot
+            live = sum(fn._cache_size() - snap.warm_discount.get(key, 0)
+                       for key, fn in snap.engines.items())
+            return self._retired + live + delta_scan_compile_count()
+
+    # --- merge ------------------------------------------------------------
+    def needs_merge(self) -> bool:
+        s = self._state
+        cap = self.config.delta_capacity
+        if s.delta.count >= self.config.merge_threshold * cap:
+            return True
+        n = s.snapshot.index.graph.n
+        return n > 0 and s.n_dead >= self.config.tombstone_threshold * n
+
+    def maybe_merge(self):
+        """Apply the configured merge policy (called after every mutation)."""
+        if self.config.auto_merge == "off" or not self.needs_merge():
+            return
+        if self.config.auto_merge == "sync":
+            self.merge()
+            return
+        with self._lock:
+            if self._merge_thread is not None and self._merge_thread.is_alive():
+                return
+
+            def run():
+                try:
+                    self.merge()
+                except BaseException as e:    # noqa: BLE001 — surfaced later
+                    self.merge_error = e
+
+            self._merge_thread = threading.Thread(
+                target=run, name="mutate-merge", daemon=True)
+            self._merge_thread.start()
+
+    def wait_for_merge(self):
+        """Block until a background merge (if any) finishes, then re-raise
+        any failure it left behind."""
+        t = self._merge_thread
+        if t is not None:
+            t.join()
+        self._check_merge_error()
+
+    def merge(self) -> bool:
+        """Re-link survivors + delta into a fresh graph and swap it in.
+
+        Returns False when there was nothing to merge.  Safe to call
+        concurrently (merges serialize); searches continue on the old
+        snapshot until the single-reference swap at the end.
+        """
+        with self._merge_lock:
+            base = self._state
+            if base.n_dead == 0 and base.delta.count == 0:
+                return False
+            snap = base.snapshot
+            g = snap.index.graph
+
+            # 1) gather survivors + live delta rows (the merge feed)
+            keep = ~base.tombstone
+            d_vecs, d_ids = base.delta.live_rows()
+            new_base = np.concatenate([g.vectors[keep], d_vecs], axis=0)
+            new_ext = np.concatenate([snap.ext_ids[keep], d_ids])
+            if new_base.shape[0] == 0:
+                raise ValueError("merge would leave an empty index")
+
+            # 2) re-link into a fresh graph (the expensive, lock-free part)
+            kw = dict(GRAPH_DEFAULTS.get(self.config.graph, {}))
+            kw.update(self.config.graph_kw)
+            new_g = GRAPH_BUILDERS[self.config.graph](
+                new_base, metric=g.metric,
+                seed=self.config.seed + base.epoch + 1, **kw)
+
+            # 3) profile-refresh policy: resample when the corpus drifted
+            # past the configured fraction of its size at sampling time
+            profile = snap.index.profile
+            if profile is not None:
+                ref = profile.corpus_n
+                drift = abs(new_g.n - ref) / ref if ref > 0 else np.inf
+                if drift > self.config.profile_refresh_fraction:
+                    profile = sample_angle_profile(
+                        new_g, percentile=self.config.profile_percentile,
+                        seed=self.config.seed + base.epoch + 1)
+            new_snap = _Snapshot(AnnIndex(graph=new_g, profile=profile),
+                                 new_ext)
+
+            # 4) pre-warm every noted (spec, batch shape) on the fresh graph
+            # BEFORE the swap: post-swap dispatches hit a full jit cache
+            self._prewarm(new_snap)
+
+            # 5) reconcile mutations that raced the build, then swap
+            with self._lock:
+                cur = self._state
+                tomb = np.zeros((new_g.n,), bool)
+                n_dead = 0
+                # snapshot rows deleted since the merge started
+                resid = np.flatnonzero(cur.tombstone & ~base.tombstone)
+                dead_ext = [int(snap.ext_ids[r]) for r in resid]
+                # delta rows that were merged in but died since
+                bc = base.delta.count
+                died = base.delta.live[:bc] & ~cur.delta.live[:bc]
+                dead_ext += [int(e) for e in base.delta.ext_ids[:bc][died]]
+                for e in dead_ext:
+                    row = new_snap.ext_to_row.get(e)
+                    if row is not None and not tomb[row]:
+                        tomb[row] = True
+                        n_dead += 1
+                # delta rows inserted since the merge started carry over
+                # (with their live flags — a delete may have raced in too)
+                fresh = DeltaSegment.empty(self.config.delta_capacity,
+                                           new_g.dim, new_g.metric)
+                nres = cur.delta.count - bc
+                if nres > 0:
+                    fresh = fresh.insert(cur.delta.vectors[bc:bc + nres],
+                                         cur.delta.ext_ids[bc:bc + nres])
+                    live = fresh.live.copy()
+                    live[:nres] = cur.delta.live[bc:bc + nres]
+                    fresh = dataclasses.replace(fresh, live=live)
+                with self._engine_lock:
+                    # retire the old snapshot's compile ledger so the count
+                    # stays continuous across the swap
+                    for key, fn in snap.engines.items():
+                        self._retired += (fn._cache_size()
+                                          - snap.warm_discount.get(key, 0))
+                    self._state = _State(
+                        snapshot=new_snap, tombstone=tomb,
+                        tombstone_dev=_tombstone_dev(tomb), n_dead=n_dead,
+                        delta=fresh, epoch=base.epoch + 1)
+            self.merges_completed += 1
+        # old snapshot is unreferenced once in-flight searches drain; drop
+        # its compiled engines + device arrays (THE _purge_dead_cache_entries
+        # scenario: a dead graph id must not pin device buffers)
+        _purge_dead_cache_entries()
+        return True
+
+    def _prewarm(self, new_snap: _Snapshot):
+        import jax
+        import jax.numpy as jnp
+
+        g = new_snap.index.graph
+        tomb_dev = _tombstone_dev(np.zeros((g.n,), bool))
+        ct = jnp.asarray(0.0, jnp.float32)
+        with self._engine_lock:
+            noted = {key: sorted(bs) for key, bs in self._noted.items()}
+        for key, batches in noted.items():
+            cfg = dataclasses.replace(
+                key, metric=g.metric,
+                use_hierarchy=g.upper_neighbors is not None).canonical()
+            _, fn = build_search_fn(g, cfg, tombstones=True)
+            for b in batches:
+                dummy = jnp.zeros((b, g.dim), jnp.float32)
+                jax.block_until_ready(fn(dummy, ct, tomb_dev).ids)
+            with self._engine_lock:
+                new_snap.engines[cfg] = fn
+                new_snap.warm_discount[cfg] = fn._cache_size()
+
+    # --- persistence ------------------------------------------------------
+    def save(self, path: str):
+        """Persist the merged view (forces a sync merge first so the file
+        is a plain ``AnnIndex`` payload: delta drained, tombstones gone)."""
+        self.wait_for_merge()
+        self.merge()
+        self._state.snapshot.index.save(path)

@@ -1,0 +1,132 @@
+"""Per-shard deltas: mutation over a sharded corpus with staggered merges.
+
+``MutableShardedAnnIndex`` is a host-side composition of one
+``MutableAnnIndex`` per shard (children run ``auto_merge="off"``; the
+parent owns merge policy).  It is NOT the ``shard_map`` data plane of
+``ShardedAnnIndex`` — each shard is its own single-device index and the
+top-k merge happens host-side, which is exactly what the mutation story
+needs: a merge rebuilds ONE shard's graph while every other shard keeps
+serving untouched, so the rebuild cost is 1/S of the corpus at a time
+(staggering; DESIGN.md §9).
+
+Routing: inserts go to the currently-least-loaded shard (by live count),
+so deltas fill — and therefore merge — out of phase with each other.
+External ids are allocated globally by the parent and mapped to shards
+with a host dict; deletes route through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
+from repro.mutate.index import DEFAULT_SEARCH, MutableAnnIndex, MutateConfig
+
+
+class MutableShardedAnnIndex:
+    """S mutable shards behind one insert/delete/search surface."""
+
+    def __init__(self, indexes: List[AnnIndex],
+                 config: MutateConfig = MutateConfig(),
+                 spec: Optional[SearchSpec] = None):
+        if not indexes:
+            raise ValueError("need at least one shard")
+        child_cfg = dataclasses.replace(config, auto_merge="off")
+        self.config = config
+        self.default_spec = spec if spec is not None else DEFAULT_SEARCH
+        self.shards: List[MutableAnnIndex] = []
+        self._ext_to_shard: Dict[int, int] = {}
+        self._next_ext = 0
+        for s, idx in enumerate(indexes):
+            child = MutableAnnIndex(idx, config=child_cfg, spec=spec)
+            # children hand out their own ids starting at their local n;
+            # the parent overrides allocation so ids are globally unique
+            for e in child._state.snapshot.ext_ids:
+                ge = self._next_ext
+                self._remap_child_ext(child, int(e), ge)
+                self._ext_to_shard[ge] = s
+                self._next_ext += 1
+            self.shards.append(child)
+
+    @staticmethod
+    def _remap_child_ext(child: MutableAnnIndex, old: int, new: int):
+        snap = child._state.snapshot
+        row = snap.ext_to_row.pop(old)
+        snap.ext_ids[row] = new
+        snap.ext_to_row[new] = row
+
+    # --- mutation ---------------------------------------------------------
+    def insert(self, vectors: np.ndarray) -> np.ndarray:
+        vectors = np.asarray(vectors, np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        # least-loaded shard keeps delta fill (and merges) staggered
+        s = int(np.argmin([sh.n_live for sh in self.shards]))
+        child = self.shards[s]
+        ids = np.arange(self._next_ext, self._next_ext + vectors.shape[0],
+                        dtype=np.int64)
+        self._next_ext += vectors.shape[0]
+        if vectors.shape[0] > child._state.delta.room:
+            child.merge()    # children run auto_merge="off"; drain explicitly
+        with child._lock:
+            child._next_ext = int(ids[0])
+            got = child.insert(vectors)
+        assert (got == ids).all()
+        for e in ids:
+            self._ext_to_shard[int(e)] = s
+        self.maybe_merge()
+        return ids
+
+    def delete(self, ext_ids) -> int:
+        if np.ndim(ext_ids) == 0:
+            ext_ids = [ext_ids]
+        by_shard: Dict[int, List[int]] = {}
+        for e in map(int, ext_ids):
+            s = self._ext_to_shard.get(e)
+            if s is None:
+                raise KeyError(f"external id {e} is not live")
+            by_shard.setdefault(s, []).append(e)
+        removed = 0
+        for s, ids in by_shard.items():
+            removed += self.shards[s].delete(ids)
+        self.maybe_merge()
+        return removed
+
+    def maybe_merge(self):
+        """Merge AT MOST the single most-pressured shard per call, so shard
+        rebuilds stagger instead of stampeding."""
+        due = [s for s, sh in enumerate(self.shards) if sh.needs_merge()]
+        if not due:
+            return
+        s = max(due, key=lambda i: self.shards[i]._state.delta.count)
+        self.shards[s].merge()
+
+    # --- search -----------------------------------------------------------
+    def search(self, queries: np.ndarray,
+               spec: Optional[SearchSpec] = None
+               ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Fan out to every shard, host-merge the per-shard top-k."""
+        spec = resolve_search_spec(spec, self.default_spec,
+                                   "MutableShardedAnnIndex.search")
+        k = spec.k
+        parts = [sh.search(queries, spec=spec) for sh in self.shards]
+        all_ids = np.concatenate([p[0] for p in parts], axis=1)
+        all_d = np.concatenate([p[1] for p in parts], axis=1)
+        order = np.argsort(all_d, axis=1, kind="stable")[:, :k]
+        out_ids = np.take_along_axis(all_ids, order, axis=1)
+        out_d = np.take_along_axis(all_d, order, axis=1)
+        out_ids = np.where(np.isfinite(out_d), out_ids, -1)
+        stats = parts[0][2] if len(parts) == 1 else SearchStats.merge(
+            [p[2] for p in parts])
+        return out_ids, out_d, stats
+
+    @property
+    def n_live(self) -> int:
+        return sum(sh.n_live for sh in self.shards)
+
+    @property
+    def epochs(self) -> Tuple[int, ...]:
+        return tuple(sh.epoch for sh in self.shards)

@@ -3,7 +3,7 @@
 #   sq8.py   per-dimension affine int8 scalar quantization (SQ8) of the base
 #            vector table + the conservative distance lower bound the
 #            two-stage engine prunes with (core/search.py,
-#            EngineConfig.estimate), and the per-tensor symmetric int8
+#            SearchSpec.estimate), and the per-tensor symmetric int8
 #            helpers shared with gradient compression (train/compress.py) —
 #            ONE quantization implementation repo-wide.
 

@@ -4,7 +4,7 @@ This module owns every int8 quantizer in the repo:
 
 * **SQ8 (per-dimension affine, uint8)** — the companion representation of the
   base-vector table used by the two-stage distance engine
-  (``EngineConfig.estimate`` in core/search.py).  Each dimension j stores an
+  (``SearchSpec.estimate`` in core/search.py).  Each dimension j stores an
   affine grid ``x ~ lo[j] + code * scale[j]`` with ``code in [0, 255]``, so a
   row costs d bytes instead of 4d — the stage-1 estimate reads 4x fewer HBM
   bytes than the fp32 row DMA it replaces.

@@ -12,8 +12,8 @@ Public surface::
 
 See DESIGN.md §6 (serving frontend) and the README "Serving" section.
 """
-from repro.serve.backends import (SingleIndexSession, ShardedIndexSession,
-                                  make_session)
+from repro.serve.backends import (MutableIndexSession, SingleIndexSession,
+                                  ShardedIndexSession, make_session)
 from repro.serve.bucketing import (DEFAULT_BUCKETS, bucket_for, pad_to_bucket,
                                    validate_buckets)
 from repro.serve.frontend import (DeadlineExceeded, QueueFull,
@@ -24,5 +24,6 @@ __all__ = [
     "ServeFrontend", "ServeTelemetry", "BucketStats",
     "RequestRejected", "QueueFull", "DeadlineExceeded",
     "DEFAULT_BUCKETS", "bucket_for", "pad_to_bucket", "validate_buckets",
-    "SingleIndexSession", "ShardedIndexSession", "make_session",
+    "SingleIndexSession", "ShardedIndexSession", "MutableIndexSession",
+    "make_session",
 ]

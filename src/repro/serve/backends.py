@@ -13,6 +13,14 @@ engine stacks:
   shard-reduced counter totals exclude padded lanes; stats are batch totals
   behind one collective merge and cannot be split per request (each request
   of a dispatch sees the dispatch's totals).
+* ``MutableIndexSession`` — ``MutableAnnIndex`` (delta + tombstones +
+  background merge, DESIGN.md §9).  The session does NOT pin a graph or a
+  jitted fn: every dispatch resolves the index's current snapshot, so a
+  concurrent merge swap is invisible to the request path.  Warmup notes
+  each bucket shape with the index (``note_shape``), merges pre-warm those
+  shapes on the fresh graph before swapping, and ``compile_count`` folds
+  retired + pre-warmed engines — so ``recompiles_after_warmup`` stays 0
+  across snapshot swaps.
 
 Request-only fields (``k``/``cos_theta``) never recompile — the canonical-
 spec contract from ``repro.core.spec`` — so a session's compile count is
@@ -107,12 +115,56 @@ class ShardedIndexSession:
         return stats
 
 
+class MutableIndexSession:
+    """``MutableAnnIndex`` behind the serving protocol (per-query stats).
+
+    Snapshot-agnostic: holds only the user spec.  Graph-dependent spec
+    fields (``metric``/``use_hierarchy``) are resolved inside
+    ``MutableAnnIndex.search`` against whatever snapshot is live at
+    dispatch time, so bucket sessions survive a merge swap with zero
+    request-path recompiles (the merge pre-warms every shape this session
+    warmed, via ``note_shape``).
+    """
+
+    splits_stats = True   # per-request stats slices are exact
+
+    def __init__(self, index, spec: SearchSpec):
+        self.index = index
+        self.spec = dataclasses.replace(spec, efs=max(spec.efs, spec.k))
+
+    @property
+    def dim(self) -> int:
+        return self.index.dim
+
+    def compile_count(self) -> int:
+        # engines across every snapshot generation + the delta-scan kernels
+        return self.index.compile_count()
+
+    def sample_query(self) -> np.ndarray:
+        g = self.index._state.snapshot.index.graph
+        return np.asarray(g.vectors[0], np.float32)
+
+    def search_padded(self, queries: np.ndarray, n_valid: int, k: int,
+                      cos_theta: Optional[float]
+                      ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        ids, dists, stats = self.index.search(
+            queries, spec=self.spec.replace(k=k, cos_theta=cos_theta))
+        return (ids[:n_valid], dists[:n_valid],
+                self.stats_for_rows(stats, 0, n_valid))
+
+    stats_for_rows = SingleIndexSession.stats_for_rows
+
+
 def make_session(index, spec: Optional[SearchSpec] = None):
     """Bind an index to the serving protocol (dispatch on index type)."""
+    from repro.mutate.index import MutableAnnIndex
+
     if isinstance(index, AnnIndex):
         return SingleIndexSession(index, spec or DEFAULT_SEARCH)
     if isinstance(index, ShardedAnnIndex):
         return ShardedIndexSession(index, spec or index.spec)
+    if isinstance(index, MutableAnnIndex):
+        return MutableIndexSession(index, spec or index.default_spec)
     raise TypeError(
-        f"cannot serve {type(index).__name__}; expected AnnIndex or "
-        "ShardedAnnIndex")
+        f"cannot serve {type(index).__name__}; expected AnnIndex, "
+        "ShardedAnnIndex, or MutableAnnIndex")

@@ -4,7 +4,8 @@ import numpy as np
 
 from repro.core.angles import sample_angle_profile, theoretical_angle_pdf
 from repro.core.ref_search import search_ref
-from repro.core.search import EngineConfig, search_batch
+from repro.core.search import search_batch
+from repro.core.spec import SearchSpec
 from repro.data.vectors import recall_at_k
 
 
@@ -63,8 +64,8 @@ def test_theoretical_pdf_integrates_to_one():
 def test_crouting_reduces_distance_calls(small_ds, hnsw_index, hnsw_profile):
     """Headline claim: substantially fewer exact distance calls at the same efs."""
     g = hnsw_index
-    plain = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="none"))
-    cr = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="crouting"),
+    plain = search_batch(g, small_ds.queries, SearchSpec(efs=48, router="none"))
+    cr = search_batch(g, small_ds.queries, SearchSpec(efs=48, router="crouting"),
                       cos_theta=hnsw_profile.cos_theta_star)
     reduction = 1 - np.mean(cr.dist_calls) / np.mean(plain.dist_calls)
     assert reduction > 0.20, f"only {reduction:.1%} fewer distance calls"
@@ -78,7 +79,7 @@ def test_error_correction_recovers_recall(small_ds, hnsw_index, hnsw_profile,
     ct = hnsw_profile.cos_theta_star
     # efs=16 keeps the pool under pressure so the prune-only collapse shows
     # (at large efs this tiny dataset saturates recall for every router)
-    cfgs = {r: search_batch(g, small_ds.queries, EngineConfig(efs=16, router=r),
+    cfgs = {r: search_batch(g, small_ds.queries, SearchSpec(efs=16, router=r),
                             cos_theta=ct)
             for r in ("none", "crouting", "crouting_o")}
     rec = {r: recall_at_k(np.asarray(v.ids[:, :10]), ground_truth, 10)
@@ -94,8 +95,8 @@ def test_error_correction_recovers_recall(small_ds, hnsw_index, hnsw_profile,
 def test_triangle_inequality_barely_prunes(small_ds, hnsw_index):
     """§3.2: the triangle lower bound is too loose to prune (~0.08% on SIFT)."""
     g = hnsw_index
-    plain = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="none"))
-    tri = search_batch(g, small_ds.queries, EngineConfig(efs=48, router="triangle"))
+    plain = search_batch(g, small_ds.queries, SearchSpec(efs=48, router="none"))
+    tri = search_batch(g, small_ds.queries, SearchSpec(efs=48, router="triangle"))
     reduction = 1 - np.mean(tri.dist_calls) / np.mean(plain.dist_calls)
     assert reduction < 0.05, f"triangle pruned {reduction:.1%} (too much?)"
 
@@ -137,7 +138,7 @@ def test_higher_percentile_prunes_more(small_ds, hnsw_index, hnsw_profile):
     for pct in (50, 90, 99):
         prof = hnsw_profile.at_percentile(pct)
         r = search_batch(g, small_ds.queries[:16],
-                         EngineConfig(efs=48, router="crouting_o"),
+                         SearchSpec(efs=48, router="crouting_o"),
                          cos_theta=prof.cos_theta_star)
         calls.append(float(np.mean(r.dist_calls)))
     assert calls[0] >= calls[1] >= calls[2], calls

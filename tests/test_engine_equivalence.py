@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.ref_search import search_ref
-from repro.core.search import (EngineConfig, build_search_fn, search_batch)
+from repro.core.search import build_search_fn, search_batch
 from repro.core.spec import SearchSpec
 
 
@@ -16,7 +16,7 @@ def _pools_match(eng_ids, ref_ids, n):
 
 def test_plain_greedy_exact_match(small_ds, hnsw_index):
     g = hnsw_index
-    res = search_batch(g, small_ds.queries, EngineConfig(efs=40, router="none"))
+    res = search_batch(g, small_ds.queries, SearchSpec(efs=40, router="none"))
     for i, q in enumerate(small_ds.queries):
         ids, _, st = search_ref(g, q, efs=40, k=40)
         assert _pools_match(res.ids[i], ids, g.n), f"pool mismatch q{i}"
@@ -27,7 +27,7 @@ def test_crouting_matches_stale_bound_oracle(small_ds, hnsw_index, hnsw_profile)
     g = hnsw_index
     ct = hnsw_profile.cos_theta_star
     res = search_batch(g, small_ds.queries,
-                       EngineConfig(efs=40, router="crouting"), cos_theta=ct)
+                       SearchSpec(efs=40, router="crouting"), cos_theta=ct)
     for i, q in enumerate(small_ds.queries):
         ids, _, st = search_ref(g, q, efs=40, k=40, router="crouting",
                                 cos_theta=ct, stale_bound=True)
@@ -40,7 +40,7 @@ def test_crouting_o_matches_oracle(small_ds, hnsw_index, hnsw_profile):
     g = hnsw_index
     ct = hnsw_profile.cos_theta_star
     res = search_batch(g, small_ds.queries[:16],
-                       EngineConfig(efs=40, router="crouting_o"), cos_theta=ct)
+                       SearchSpec(efs=40, router="crouting_o"), cos_theta=ct)
     for i, q in enumerate(small_ds.queries[:16]):
         ids, _, st = search_ref(g, q, efs=40, k=40, router="crouting_o",
                                 cos_theta=ct, stale_bound=True)
@@ -52,8 +52,8 @@ def test_triangle_router_is_safe(small_ds, hnsw_index):
     """Triangle-inequality pruning uses an exact lower bound: the result pool
     must equal plain greedy's (paper §3.2: correct but barely prunes)."""
     g = hnsw_index
-    plain = search_batch(g, small_ds.queries, EngineConfig(efs=40, router="none"))
-    tri = search_batch(g, small_ds.queries, EngineConfig(efs=40, router="triangle"))
+    plain = search_batch(g, small_ds.queries, SearchSpec(efs=40, router="none"))
+    tri = search_batch(g, small_ds.queries, SearchSpec(efs=40, router="triangle"))
     for i in range(len(small_ds.queries)):
         assert _pools_match(tri.ids[i], np.asarray(plain.ids[i]), g.n)
         assert int(tri.dist_calls[i]) <= int(plain.dist_calls[i])
@@ -112,8 +112,8 @@ def test_pallas_engine_matches_jnp(tiny_graph, router):
     ds, g, ct = tiny_graph
     _assert_engines_match(
         g, ds.queries, ct,
-        EngineConfig(efs=24, router=router),
-        EngineConfig(efs=24, router=router, engine="pallas"))
+        SearchSpec(efs=24, router=router),
+        SearchSpec(efs=24, router=router, engine="pallas"))
 
 
 @pytest.mark.parametrize("beam_prune", ["best", "all"])
@@ -121,9 +121,9 @@ def test_pallas_engine_matches_jnp_beam(tiny_graph, beam_prune):
     ds, g, ct = tiny_graph
     _assert_engines_match(
         g, ds.queries, ct,
-        EngineConfig(efs=24, router="crouting", beam_width=4,
+        SearchSpec(efs=24, router="crouting", beam_width=4,
                      beam_prune=beam_prune),
-        EngineConfig(efs=24, router="crouting", beam_width=4,
+        SearchSpec(efs=24, router="crouting", beam_width=4,
                      beam_prune=beam_prune, engine="pallas"))
 
 
@@ -177,8 +177,8 @@ def test_pallas_unfused_engine_matches_jnp(tiny_graph):
     ds, g, ct = tiny_graph
     _assert_engines_match(
         g, ds.queries[:4], ct,
-        EngineConfig(efs=16, router="crouting", beam_width=2),
-        EngineConfig(efs=16, router="crouting", beam_width=2,
+        SearchSpec(efs=16, router="crouting", beam_width=2),
+        SearchSpec(efs=16, router="crouting", beam_width=2,
                      engine="pallas_unfused"))
 
 
@@ -192,8 +192,8 @@ def test_pallas_engine_matches_jnp_sq8(tiny_graph, router, estimate, W):
     ds, g, ct = tiny_graph
     _assert_engines_match(
         g, ds.queries, ct,
-        EngineConfig(efs=24, router=router, estimate=estimate, beam_width=W),
-        EngineConfig(efs=24, router=router, estimate=estimate, beam_width=W,
+        SearchSpec(efs=24, router=router, estimate=estimate, beam_width=W),
+        SearchSpec(efs=24, router=router, estimate=estimate, beam_width=W,
                      engine="pallas"))
 
 
@@ -201,9 +201,9 @@ def test_pallas_unfused_engine_matches_jnp_sq8(tiny_graph):
     ds, g, ct = tiny_graph
     _assert_engines_match(
         g, ds.queries[:4], ct,
-        EngineConfig(efs=16, router="crouting", estimate="both",
+        SearchSpec(efs=16, router="crouting", estimate="both",
                      beam_width=2),
-        EngineConfig(efs=16, router="crouting", estimate="both", beam_width=2,
+        SearchSpec(efs=16, router="crouting", estimate="both", beam_width=2,
                      engine="pallas_unfused"))
 
 
@@ -214,9 +214,9 @@ def test_beam_cuts_iterations_without_recall_loss(small_ds, hnsw_index,
     from repro.data.vectors import recall_at_k
 
     g = hnsw_index
-    r1 = search_batch(g, small_ds.queries, EngineConfig(efs=40), k=10)
+    r1 = search_batch(g, small_ds.queries, SearchSpec(efs=40), k=10)
     r4 = search_batch(g, small_ds.queries,
-                      EngineConfig(efs=40, beam_width=4), k=10)
+                      SearchSpec(efs=40, beam_width=4), k=10)
     assert int(r4.iters) * 2 <= int(r1.iters), (int(r1.iters), int(r4.iters))
     rec1 = recall_at_k(np.asarray(r1.ids), ground_truth, 10)
     rec4 = recall_at_k(np.asarray(r4.ids), ground_truth, 10)
@@ -251,7 +251,7 @@ def test_beam_tile_dedup_first_valid_occurrence_wins():
 def test_beam_pools_have_no_duplicate_ids(small_ds, hnsw_index):
     g = hnsw_index
     res = search_batch(g, small_ds.queries,
-                       EngineConfig(efs=40, router="crouting", beam_width=6),
+                       SearchSpec(efs=40, router="crouting", beam_width=6),
                        cos_theta=0.9)
     for row in np.asarray(res.ids):
         real = row[row < g.n]
@@ -263,19 +263,19 @@ def test_beam_respects_exact_hop_budget(small_ds, hnsw_index):
     even when the beam would overshoot mid-iteration."""
     g = hnsw_index
     res = search_batch(g, small_ds.queries,
-                       EngineConfig(efs=40, beam_width=4, max_hops=9))
+                       SearchSpec(efs=40, beam_width=4, max_hops=9))
     assert int(np.asarray(res.hops).max()) <= 9
 
 
 def test_build_search_fn_caches_compiled_engine(hnsw_index):
     """search_batch must reuse the jitted executable across calls (the
     serving path re-enters with fresh batches every request)."""
-    cfg = EngineConfig(efs=12, router="none")
+    cfg = SearchSpec(efs=12, router="none")
     arrays1, fn1 = build_search_fn(hnsw_index, cfg)
-    arrays2, fn2 = build_search_fn(hnsw_index, EngineConfig(efs=12,
+    arrays2, fn2 = build_search_fn(hnsw_index, SearchSpec(efs=12,
                                                             router="none"))
     assert fn1 is fn2 and arrays1 is arrays2
-    _, fn3 = build_search_fn(hnsw_index, EngineConfig(efs=13, router="none"))
+    _, fn3 = build_search_fn(hnsw_index, SearchSpec(efs=13, router="none"))
     assert fn3 is not fn1
 
 
@@ -296,8 +296,8 @@ def test_engine_cache_does_not_grow_across_rebuilt_indexes():
     for i in range(6):
         g = build_hnsw(ds.base, m=6, efc=24, seed=i)
         # two configs per rebuild: both compiled-fn entries must die with g
-        search_batch(g, ds.queries, EngineConfig(efs=12, router="none"))
-        search_batch(g, ds.queries, EngineConfig(efs=12, router="crouting"))
+        search_batch(g, ds.queries, SearchSpec(efs=12, router="none"))
+        search_batch(g, ds.queries, SearchSpec(efs=12, router="crouting"))
         del g
         gc.collect()
         assert len(_ARRAYS_CACHE) <= baseline_arrays + 1

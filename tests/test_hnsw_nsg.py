@@ -4,7 +4,8 @@ import pytest
 
 from repro.core.graph import validate_graph
 from repro.core.index import AnnIndex
-from repro.core.search import EngineConfig, search_batch
+from repro.core.search import search_batch
+from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
 
 
@@ -36,7 +37,7 @@ def test_nsg_structure(nsg_index):
 def test_recall_floor(small_ds, hnsw_index, nsg_index, ground_truth, which):
     g = hnsw_index if which == "hnsw" else nsg_index
     res = search_batch(g, small_ds.queries,
-                       EngineConfig(efs=48, router="none",
+                       SearchSpec(efs=48, router="none",
                                     use_hierarchy=g.upper_neighbors is not None))
     rec = recall_at_k(np.asarray(res.ids[:, :10]), ground_truth, 10)
     # NSG floor is lower: our candidate pools use the final search pool only

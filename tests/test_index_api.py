@@ -1,12 +1,12 @@
-"""Public index API (ISSUE 4 satellites): the SearchSpec surface, the
-legacy-kwarg deprecation shim, typed SearchStats, the pad-slot distance
-fix, and the save/load roundtrip incl. the full angle profile."""
+"""Public index API (ISSUE 4 satellites, shims retired in ISSUE 6): the
+SearchSpec surface, typed SearchStats, the pad-slot distance fix, and the
+versioned save/load roundtrip incl. the full angle profile."""
 import os
 
 import numpy as np
 import pytest
 
-from repro.core.index import AnnIndex
+from repro.core.index import AnnIndex, FORMAT_VERSION
 from repro.core.spec import SearchSpec, SearchStats
 from repro.data.vectors import make_dataset
 
@@ -17,22 +17,13 @@ def built(small_ds):
 
 
 # --------------------------------------------------------------------------
-# legacy-kwarg deprecation shim
+# legacy call styles are GONE (the ISSUE 4 one-release shim expired): every
+# pre-SearchSpec spelling must raise TypeError, never silently misbehave
 # --------------------------------------------------------------------------
-def test_legacy_kwargs_still_work_and_warn(small_ds, built):
-    """Old call style returns identical results to the SearchSpec path and
-    emits DeprecationWarning (one-release shim)."""
-    q = small_ds.queries
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        ids_l, d_l, st_l = built.search(q, k=10, efs=48, router="crouting",
-                                        beam_width=4)
-    ids_s, d_s, st_s = built.search(
-        q, spec=SearchSpec(k=10, efs=48, router="crouting", beam_width=4))
-    np.testing.assert_array_equal(ids_l, ids_s)
-    np.testing.assert_array_equal(d_l, d_s)
-    assert (st_l.dist_calls == st_s.dist_calls).all()
-    assert (st_l.est_calls == st_s.est_calls).all()
-    assert st_l.iters == st_s.iters
+def test_legacy_kwargs_raise_type_error(small_ds, built):
+    with pytest.raises(TypeError):
+        built.search(small_ds.queries, k=10, efs=48, router="crouting",
+                     beam_width=4)
 
 
 def test_bare_call_uses_default_spec_without_warning(small_ds, built, recwarn):
@@ -43,13 +34,8 @@ def test_bare_call_uses_default_spec_without_warning(small_ds, built, recwarn):
                 if issubclass(w.category, DeprecationWarning)]
 
 
-def test_mixing_spec_and_legacy_kwargs_raises(small_ds, built):
-    with pytest.raises(TypeError, match="not both"):
-        built.search(small_ds.queries[:2], spec=SearchSpec(), efs=32)
-
-
-def test_unknown_legacy_kwarg_raises(small_ds, built):
-    with pytest.raises(TypeError, match="unknown keyword"):
+def test_unknown_kwarg_raises(small_ds, built):
+    with pytest.raises(TypeError):
         built.search(small_ds.queries[:2], ef_search=32)
 
 
@@ -69,10 +55,9 @@ def test_search_returns_typed_stats(small_ds, built):
     assert stats.dist_calls.shape == (4,)
     summ = stats.summary()
     assert summ["router"] == "crouting" and summ["dist_calls"] > 0
-    # dict-style access still works for one release, with a warning
-    with pytest.warns(DeprecationWarning):
-        assert (stats["dist_calls"] == stats.dist_calls).all()
-    assert "dist_calls" in stats and "nope" not in stats
+    # dict-style access was a one-release shim; it's gone
+    with pytest.raises(TypeError):
+        stats["dist_calls"]
 
 
 def test_k_and_cos_theta_do_not_retrigger_jit(built):
@@ -162,6 +147,9 @@ def test_save_load_roundtrip_hierarchy_and_profile(tmp_path, small_ds):
     # regression: these two were silently zeroed on load before ISSUE 4
     assert p1.n_sample_queries == p0.n_sample_queries > 0
     assert p1.sample_secs == pytest.approx(p0.sample_secs)
+    # ISSUE 6: corpus size at profile-sample time survives the roundtrip
+    # (mutation-staleness detection needs it)
+    assert p1.corpus_n == p0.corpus_n == 800
 
     # and the loaded index searches identically (profile drives cos_theta)
     spec = SearchSpec(k=10, efs=32, router="crouting")
@@ -169,3 +157,43 @@ def test_save_load_roundtrip_hierarchy_and_profile(tmp_path, small_ds):
     ids_b, d_b, _ = back.search(small_ds.queries[:8], spec=spec)
     np.testing.assert_array_equal(ids_a, ids_b)
     np.testing.assert_allclose(d_a, d_b, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# payload versioning (ISSUE 6 satellite): save stamps format_version, load
+# refuses futures and keeps reading unstamped v1 files
+# --------------------------------------------------------------------------
+def test_save_stamps_current_format_version(tmp_path, small_ds):
+    idx = AnnIndex.build(small_ds.base[:200], graph="knn", k=4, profile=False)
+    path = os.path.join(tmp_path, "v.npz")
+    idx.save(path)
+    z = np.load(path, allow_pickle=False)
+    assert int(z["format_version"]) == FORMAT_VERSION == 2
+
+
+def test_load_rejects_future_format_version(tmp_path, small_ds):
+    idx = AnnIndex.build(small_ds.base[:200], graph="knn", k=4, profile=False)
+    path = os.path.join(tmp_path, "future.npz")
+    idx.save(path)
+    z = dict(np.load(path, allow_pickle=False))
+    z["format_version"] = np.asarray(FORMAT_VERSION + 1)
+    np.savez_compressed(path, **z)
+    with pytest.raises(ValueError, match="format_version"):
+        AnnIndex.load(path)
+
+
+def test_load_accepts_unstamped_v1_file(tmp_path, small_ds):
+    """Pre-PR4 files carry no stamp and legitimately lack the newer profile
+    fields; they must keep loading with the documented defaults."""
+    idx = AnnIndex.build(small_ds.base[:300], graph="knn", k=4)
+    path = os.path.join(tmp_path, "v1.npz")
+    idx.save(path)
+    z = dict(np.load(path, allow_pickle=False))
+    for key in ("format_version", "theta_nq", "theta_secs", "theta_corpus_n"):
+        z.pop(key, None)
+    np.savez_compressed(path, **z)
+    back = AnnIndex.load(path)
+    assert back.profile is not None
+    assert back.profile.n_sample_queries == 0
+    assert back.profile.corpus_n == 0
+    np.testing.assert_allclose(back.profile.theta_star, idx.profile.theta_star)

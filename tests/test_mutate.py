@@ -1,0 +1,325 @@
+"""Live mutation (ISSUE 6 tentpole): delta segment, tombstones, background
+merge + snapshot swap, serving across a merge with zero recompiles, cache
+hygiene over many merge cycles, and per-shard delta staggering."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
+from repro.data.vectors import make_dataset, recall_at_k
+from repro.mutate import (DeltaSegment, MutableAnnIndex,
+                          MutableShardedAnnIndex, MutateConfig)
+
+SPEC = SearchSpec(k=10, efs=48, router="crouting")
+HNSW_KW = dict(m=12, efc=64)
+
+
+@pytest.fixture(scope="module")
+def mds():
+    return make_dataset(n_base=1500, n_query=30, dim=32, n_clusters=12,
+                        seed=0)
+
+
+def _gt_live(ds, live, k=10):
+    dist = np.sum((ds.queries[:, None, :] - ds.base[None, :, :]) ** 2,
+                  axis=-1)
+    dist[:, ~live] = np.inf
+    return np.argsort(dist, axis=1)[:, :k]
+
+
+def _mutable(ds, n0, auto="sync", graph="hnsw", cap=128, **cfg_kw):
+    cfg = MutateConfig(delta_capacity=cap, auto_merge=auto, graph=graph,
+                       graph_kw=dict(HNSW_KW) if graph == "hnsw" else {},
+                       **cfg_kw)
+    return MutableAnnIndex.build(ds.base[:n0], config=cfg, **HNSW_KW)
+
+
+# --------------------------------------------------------------------------
+# delta segment unit behavior
+# --------------------------------------------------------------------------
+def test_delta_segment_insert_delete_topk():
+    rng = np.random.default_rng(0)
+    seg = DeltaSegment.empty(16, 8, "l2")
+    v = rng.normal(size=(5, 8)).astype(np.float32)
+    seg2 = seg.insert(v, np.arange(100, 105))
+    # copy-on-write: the original is untouched
+    assert seg.n_live == 0 and seg2.n_live == 5
+    ids, d, scanned = seg2.topk(v[:2], k=3)
+    assert ids.shape == (2, 3) and (ids[0, 0] == 100) and (ids[1, 0] == 101)
+    assert d[0, 0] == pytest.approx(0.0, abs=1e-5)
+    assert (scanned == 5).all()
+    seg3, found = seg2.delete(101)
+    assert found and seg3.n_live == 4 and seg2.n_live == 5
+    ids3, _, _ = seg3.topk(v[1:2], k=1)
+    assert ids3[0, 0] != 101
+    _, missing = seg3.delete(999)
+    assert not missing
+    # ask for more than capacity: -1 / +inf pads
+    ids4, d4, _ = seg3.topk(v[:1], k=20)
+    assert ids4.shape == (1, 20) and (ids4[0, 4:] == -1).all()
+    assert np.isinf(d4[0, 4:]).all()
+
+
+def test_delta_segment_overflow_raises():
+    seg = DeltaSegment.empty(4, 8, "l2")
+    seg = seg.insert(np.zeros((3, 8), np.float32), np.arange(3))
+    with pytest.raises(ValueError, match="delta overflow"):
+        seg.insert(np.zeros((2, 8), np.float32), np.arange(10, 12))
+
+
+def test_delta_segment_sq8_matches_exact_topk():
+    rng = np.random.default_rng(1)
+    seg = DeltaSegment.empty(64, 16, "l2")
+    seg = seg.insert(rng.normal(size=(48, 16)).astype(np.float32),
+                     np.arange(48))
+    q = rng.normal(size=(4, 16)).astype(np.float32)
+    ids_e, d_e, _ = seg.topk(q, k=5)
+    ids_q, d_q, _ = seg.topk(q, k=5, use_sq8=True)
+    # stage-2 exact rerank makes the quantized path agree on ids + dists
+    np.testing.assert_array_equal(ids_e, ids_q)
+    np.testing.assert_allclose(d_e, d_q, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# engine-level tombstone semantics: dead nodes still route, but masking is
+# bit-identical to filtering the no-tombstone pool host-side
+# --------------------------------------------------------------------------
+def test_engine_tombstone_mask_equals_host_filter(mds):
+    import jax.numpy as jnp
+
+    from repro.core.search import build_search_fn
+
+    idx = AnnIndex.build(mds.base[:800], **HNSW_KW)
+    g = idx.graph
+    cfg = dataclasses.replace(SPEC, metric=g.metric,
+                              use_hierarchy=g.upper_neighbors is not None)
+    ct = jnp.asarray(idx.profile.cos_theta_star, jnp.float32)
+    q = jnp.asarray(mds.queries)
+    rng = np.random.default_rng(5)
+    tomb = np.zeros(g.n, bool)
+    tomb[rng.choice(g.n, 60, replace=False)] = True
+
+    _, f0 = build_search_fn(g, cfg)
+    r0 = f0(q, ct)
+    ids0, d0 = np.asarray(r0.ids), np.asarray(r0.dists)
+    _, f1 = build_search_fn(g, cfg, tombstones=True)
+    r1 = f1(q, ct, jnp.asarray(np.concatenate([tomb, [False]])))
+    ids1, d1 = np.asarray(r1.ids), np.asarray(r1.dists)
+
+    # identical traversal counters: tombstones must not change routing
+    np.testing.assert_array_equal(np.asarray(r0.hops), np.asarray(r1.hops))
+    np.testing.assert_array_equal(np.asarray(r0.dist_calls),
+                                  np.asarray(r1.dist_calls))
+    for b in range(q.shape[0]):
+        keep = [(d0[b, j], ids0[b, j]) for j in range(ids0.shape[1])
+                if ids0[b, j] < g.n and not tomb[ids0[b, j]]]
+        want = [i for _, i in keep]
+        got = [i for i in ids1[b] if i < g.n]
+        assert got == want[:len(got)] and len(got) == len(want)
+        assert np.isinf(d1[b, len(got):]).all()
+
+
+# --------------------------------------------------------------------------
+# mutable index end to end
+# --------------------------------------------------------------------------
+def test_insert_is_immediately_searchable(mds):
+    mi = _mutable(mds, 1400, auto="off")
+    new = mds.queries[:3] + 1e-4
+    ids = mi.insert(new)
+    got, d, stats = mi.search(mds.queries[:3], spec=SPEC)
+    assert (got[np.arange(3), 0] == ids).all()
+    assert (stats.extra["delta_scanned"] == 3).all()
+    assert mi.epoch == 0, "no merge should have happened"
+
+
+def test_deleted_ids_never_returned_interleaved(mds):
+    """Property: across an interleaved trace — including deletes of rows
+    still in the delta and deletes racing a merge — no search ever returns
+    a dead id."""
+    mi = _mutable(mds, 1300, auto="sync", cap=64)
+    rng = np.random.default_rng(11)
+    live = set(range(1300))
+    for step in range(12):
+        ids = mi.insert(mds.base[1300 + (step * 10) % 200:][:10]
+                        + rng.normal(0, 1e-3, (10, 32)).astype(np.float32))
+        live.update(int(i) for i in ids)
+        kill = rng.choice(sorted(live), size=6, replace=False)
+        mi.delete(kill)
+        live.difference_update(int(i) for i in kill)
+        got, _, _ = mi.search(mds.queries[:8], spec=SPEC)
+        real = got[got >= 0]
+        assert set(real.tolist()) <= live, "dead id leaked into results"
+    assert mi.merges_completed >= 1
+    assert mi.n_live == len(live)
+    assert np.array_equal(mi.live_ids(), np.array(sorted(live)))
+
+
+def test_recall_ratio_vs_static_rebuild(mds):
+    """ISSUE 6 acceptance: after an interleaved insert/delete trace,
+    recall@10 >= 0.95x a from-scratch static rebuild at equal SearchSpec."""
+    mi = _mutable(mds, 1200, auto="sync", cap=96)
+    rng = np.random.default_rng(7)
+    live = np.zeros(1500, bool)
+    live[:1200] = True
+    for lo in range(1200, 1500, 75):
+        mi.insert(mds.base[lo:lo + 75])
+        live[lo:lo + 75] = True
+        kill = rng.choice(np.flatnonzero(live), size=20, replace=False)
+        mi.delete(kill)
+        live[kill] = False
+    ids, _, _ = mi.search(mds.queries, spec=SPEC)
+    assert not np.isin(ids, np.flatnonzero(~live)).any()
+    gt = _gt_live(mds, live)
+    rec_mut = recall_at_k(ids, gt, 10)
+
+    static = AnnIndex.build(mds.base[live], graph="hnsw", **HNSW_KW)
+    ext_of_row = np.flatnonzero(live)
+    sr, _, _ = static.search(mds.queries, spec=SPEC)
+    sids = np.where(sr >= 0, ext_of_row[np.where(sr >= 0, sr, 0)], -1)
+    rec_static = recall_at_k(sids, gt, 10)
+    assert rec_mut >= 0.95 * rec_static, (rec_mut, rec_static)
+
+
+def test_overflow_triggers_sync_merge_and_off_raises(mds):
+    mi = _mutable(mds, 600, auto="sync", cap=32, merge_threshold=2.0,
+                  tombstone_threshold=2.0)   # only overflow can merge
+    mi.insert(mds.base[600:600 + 30])
+    assert mi.epoch == 0
+    mi.insert(mds.base[630:630 + 10])        # 30 + 10 > 32: must merge
+    assert mi.epoch == 1 and mi.n_live == 640
+    off = _mutable(mds, 600, auto="off", cap=16)
+    off.insert(mds.base[600:616])
+    with pytest.raises(ValueError, match="auto_merge"):
+        off.insert(mds.base[616:617])
+
+
+def test_profile_refresh_policy(mds):
+    """Angle profile resamples only once the corpus drifts past the
+    configured fraction of its size at sampling time."""
+    mi = _mutable(mds, 1000, auto="off", cap=512,
+                  profile_refresh_fraction=0.2)
+    p0 = mi._state.snapshot.index.profile
+    assert p0.corpus_n == 1000
+    mi.insert(mds.base[1000:1100])           # +10% < 20%: carried
+    mi.merge()
+    p1 = mi._state.snapshot.index.profile
+    assert p1 is p0 and p1.corpus_n == 1000
+    mi.insert(mds.base[1100:1400])           # now 1400 vs 1000: 40% drift
+    mi.merge()
+    p2 = mi._state.snapshot.index.profile
+    assert p2 is not p0 and p2.corpus_n == 1400
+
+
+def test_save_forces_merge_and_roundtrips(tmp_path, mds):
+    mi = _mutable(mds, 900, auto="off", cap=64)
+    mi.insert(mds.base[900:940])
+    mi.delete(list(range(0, 20)))
+    path = str(tmp_path / "mut.npz")
+    mi.save(path)
+    back = AnnIndex.load(path)
+    assert back.graph.n == 920          # 900 - 20 + 40, delta drained
+    assert mi.epoch >= 1
+
+
+def test_cache_hygiene_across_merge_cycles(mds):
+    """ISSUE 6 satellite: N insert->merge cycles must not grow the
+    compiled-engine caches beyond one live graph id per spec."""
+    from repro.core.search import _ARRAYS_CACHE, _ENGINE_CACHE
+
+    mi = _mutable(mds, 700, auto="off", cap=64)
+    mi.search(mds.queries[:4], spec=SPEC)    # warm one engine
+    for cycle in range(4):
+        mi.insert(mds.base[700 + cycle * 8:][:8])
+        mi.merge()
+        mi.search(mds.queries[:4], spec=SPEC)
+    graph_ids = {id(mi._state.snapshot.index.graph)}
+    mine_e = [k for k in _ENGINE_CACHE
+              if k[0] in graph_ids or _ENGINE_CACHE[k][0]() is None]
+    mine_a = [k for k in _ARRAYS_CACHE
+              if k in graph_ids or _ARRAYS_CACHE[k][0]() is None]
+    # dead snapshots were purged: nothing but the live graph remains (the
+    # weakref check catches any entry whose graph was collected but whose
+    # device arrays are still pinned in the cache)
+    dead_e = [k for k in mine_e if _ENGINE_CACHE[k][0]() is None]
+    dead_a = [k for k in mine_a if _ARRAYS_CACHE[k][0]() is None]
+    assert not dead_e, f"dead engine-cache entries survived: {dead_e}"
+    assert not dead_a, f"dead arrays-cache entries survived: {dead_a}"
+    live_e = [k for k in _ENGINE_CACHE if k[0] in graph_ids]
+    assert len(live_e) == 1, "expected exactly one live engine for the spec"
+
+
+# --------------------------------------------------------------------------
+# serving across a background merge: every request completes, zero
+# request-path recompiles (the merge pre-warms the fresh snapshot)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_serve_across_background_merge_zero_recompiles(mds):
+    from repro.serve import MutableIndexSession, ServeFrontend, make_session
+
+    cfg = MutateConfig(delta_capacity=48, auto_merge="background",
+                       graph="hnsw", graph_kw=dict(HNSW_KW))
+    mi = MutableAnnIndex.build(mds.base[:1300], config=cfg, **HNSW_KW)
+    assert isinstance(make_session(mi, SPEC), MutableIndexSession)
+    fe = ServeFrontend(mi, SPEC, buckets=(1, 8, 32))
+    warm = mi.compile_count()
+    assert warm > 0 and fe.telemetry.recompiles_after_warmup == 0
+
+    rng = np.random.default_rng(3)
+    futs = []
+    for step in range(24):
+        n = [1, 5, 8, 20][step % 4]
+        futs.append(fe.submit(mds.queries[rng.integers(0, 30, n)]))
+        fe.flush()
+        mi.insert(mds.base[1300 + (step * 6) % 180:][:6]
+                  + rng.normal(0, 1e-3, (6, 32)).astype(np.float32))
+        if step % 4 == 0:
+            mi.delete(rng.choice(mi.live_ids(), 2, replace=False))
+    mi.wait_for_merge()
+    fe.flush()
+    for f in futs:
+        ids, d, st = f.result(timeout=120)
+        assert ids.shape[1] == SPEC.k
+        assert (st.extra["delta_scanned"] >= 0).all()
+    assert mi.merges_completed >= 1, "trace was meant to span a merge"
+    assert fe.telemetry.recompiles_after_warmup == 0
+    assert mi.compile_count() == warm, "swap leaked compiles into telemetry"
+
+
+# --------------------------------------------------------------------------
+# per-shard deltas: merges stagger (one shard at a time)
+# --------------------------------------------------------------------------
+def test_sharded_mutable_staggered_merges(mds):
+    shards = [AnnIndex.build(mds.base[i * 400:(i + 1) * 400], **HNSW_KW)
+              for i in range(3)]
+    cfg = MutateConfig(delta_capacity=32, merge_threshold=0.5,
+                       graph="hnsw", graph_kw=dict(HNSW_KW))
+    ms = MutableShardedAnnIndex(shards, config=cfg)
+    assert ms.n_live == 1200
+    # global external ids are disjoint across shards
+    all_ids = np.concatenate([sh._state.snapshot.ext_ids
+                              for sh in ms.shards])
+    assert len(set(all_ids.tolist())) == 1200
+
+    ids, d, stats = ms.search(mds.queries[:6], spec=SPEC)
+    assert ids.shape == (6, 10) and (ids >= 0).all()
+
+    rng = np.random.default_rng(9)
+    dead = []
+    for step in range(10):
+        got = ms.insert(mds.base[1200 + (step * 8) % 300:][:8]
+                        + rng.normal(0, 1e-3, (8, 32)).astype(np.float32))
+        kill = rng.choice(ms.shards[step % 3]._state.snapshot.ext_ids, 2,
+                          replace=False)
+        kill = [int(e) for e in kill if int(e) not in dead]
+        if kill:
+            ms.delete(kill)
+            dead.extend(kill)
+        # at most one shard merges per trigger: epochs differ by design
+        ids, _, _ = ms.search(mds.queries[:4], spec=SPEC)
+        assert not np.isin(ids, dead).any()
+        assert got.shape == (8,)
+    assert sum(e > 0 for e in ms.epochs) >= 1
+    # staggering: the trace must never have merged all shards in lockstep
+    assert len(set(ms.epochs)) > 1 or min(ms.epochs) == 0

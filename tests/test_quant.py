@@ -148,15 +148,16 @@ def test_sq8_returned_distances_are_exact(suite):
 
 
 def test_estimate_validation():
-    from repro.core.search import EngineConfig, search_batch
+    from repro.core.search import search_batch
+    from repro.core.spec import SearchSpec
     from repro.data.vectors import make_dataset
     from repro.core.hnsw import build_hnsw
 
     ds = make_dataset(n_base=300, n_query=2, dim=16, n_clusters=6, seed=1)
     g = build_hnsw(ds.base, m=6, efc=24, seed=0)
     with pytest.raises(AssertionError):
-        search_batch(g, ds.queries, EngineConfig(efs=16, estimate="nope"))
+        search_batch(g, ds.queries, SearchSpec(efs=16, estimate="nope"))
     with pytest.raises(AssertionError):
         # "angle"/"both" demand a pruning router
         search_batch(g, ds.queries,
-                     EngineConfig(efs=16, router="none", estimate="angle"))
+                     SearchSpec(efs=16, router="none", estimate="angle"))

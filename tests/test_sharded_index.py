@@ -73,7 +73,6 @@ out["extra_counter"] = int(stats3.extra["my_tests"])
 
 # --- ISSUE 5 spec parity: per-call spec routes through resolve_search_spec
 # and request-only fields (k / cos_theta) reuse the jitted serve step
-import warnings
 step0 = idx._step(idx.spec)
 n_cache0 = step0._cache_size()
 ids_k, d_k, _ = idx.search(ds.queries, spec=spec.replace(k=5, cos_theta=0.6))
@@ -81,15 +80,21 @@ out["k_override_shape_ok"] = bool(ids_k.shape == (40, 5))
 out["k_override_no_rejit"] = bool(
     idx._step(idx.spec) is step0 and step0._cache_size() == n_cache0
     and len(idx._steps) == 1)
-# legacy kwarg + pre-parity positional scalar both shim with a warning
-with warnings.catch_warnings(record=True) as wlog:
-    warnings.simplefilter("always")
-    ids_kw, _, _ = idx.search(ds.queries, cos_theta=0.6, k=5)
-    ids_pos, _, _ = idx.search(ds.queries, 0.6)
-out["legacy_shims_warn"] = bool(
-    sum(issubclass(w.category, DeprecationWarning) for w in wlog) >= 2)
-out["legacy_kwarg_matches_spec"] = bool((ids_kw == ids_k).all())
-out["positional_matches_spec"] = bool((ids_pos[:, :5] == ids_k).all())
+# legacy kwargs and the pre-parity positional scalar are retired: both
+# spellings must raise TypeError now (ISSUE 6 shim removal)
+def _raises_type_error(fn):
+    try:
+        fn()
+    except TypeError:
+        return True
+    return False
+
+out["legacy_kwarg_raises"] = _raises_type_error(
+    lambda: idx.search(ds.queries, cos_theta=0.6, k=5))
+out["positional_scalar_raises"] = _raises_type_error(
+    lambda: idx.search(ds.queries, 0.6))
+out["ctor_kwarg_raises"] = _raises_type_error(
+    lambda: ShardedAnnIndex(arrays, mesh, k=5))
 
 # --- ISSUE 5 valid mask: padded lanes contribute ZERO to the shard-reduced
 # counter totals (the serving frontend's bucket-padding contract)
@@ -146,9 +151,9 @@ def test_sharded_index_subprocess():
     # and the serving frontend is bit-identical to direct sharded search
     assert out["k_override_shape_ok"], out
     assert out["k_override_no_rejit"], out
-    assert out["legacy_shims_warn"], out
-    assert out["legacy_kwarg_matches_spec"], out
-    assert out["positional_matches_spec"], out
+    assert out["legacy_kwarg_raises"], out
+    assert out["positional_scalar_raises"], out
+    assert out["ctor_kwarg_raises"], out
     assert out["padded_counters_zero"], out
     assert out["frontend_matches_direct"], out
     assert out["frontend_recompiles"] == 0, out
