@@ -1,7 +1,7 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
 .PHONY: verify test lint bench bench-engine bench-smoke bench-serve-smoke \
-	bench-mutate-smoke
+	bench-mutate-smoke bench-chaos-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -44,3 +44,11 @@ bench-serve-smoke:
 bench-mutate-smoke:
 	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
 		python -m benchmarks.run --only mutate
+
+# CI tier: seeded fault schedule through the frontend over a sharded
+# mutable index — availability (every admitted request resolves), partial
+# results with shards_failed set, merge retry/quarantine recovery, all
+# exercised per-PR.  Results go to .cache/, never to BENCH_chaos.json.
+bench-chaos-smoke:
+	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
+		python -m benchmarks.run --only chaos

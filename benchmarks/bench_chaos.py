@@ -1,0 +1,243 @@
+"""Chaos harness (persisted to committed BENCH_chaos.json).
+
+Replays a SEEDED fault schedule (repro.fault failpoints — deterministic
+for a given seed and call order) through the full serving stack: a
+``ServeFrontend`` over a 3-shard ``MutableShardedAnnIndex`` taking
+inserts/deletes while ragged search requests stream in.  Four phases:
+
+1. **Chaos trace** — intermittent shard-0 kills (``shard.search.0``),
+   whole-dispatch faults (``serve.dispatch``) and a bounded merge fault
+   (``mutate.merge.build``, ``max_fires=2`` so the retry budget recovers
+   it) all armed at once.  Acceptance: EVERY admitted request resolves —
+   a result (possibly degraded) or a typed error, never a hang.
+2. **Recall under degradation** — controlled A/B: the same queries with
+   all shards healthy vs. shard 0 hard-down.  Degraded searches must
+   return results from the survivors with ``stats.shards_failed > 0``.
+3. **Merge recovery** — a freshly armed ``max_fires=2`` merge fault, then
+   a forced delta drain: the shard must recover within the retry budget
+   (no quarantine) while serving from its pre-merge snapshot, and the
+   wall-clock to the recovered epoch is recorded.
+4. **Quarantine round-trip** — an always-firing merge fault exhausts the
+   budget: the shard quarantines, searches and mutations keep working,
+   and after the fault heals + ``clear_quarantine()`` the next drain
+   merges cleanly.
+
+``BENCH_SMOKE=1`` shrinks sizes and diverts the JSON to .cache/.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import TimeoutError as FutureTimeout
+
+import numpy as np
+
+from benchmarks.common import (SMOKE, dataset, emit, persist_bench,
+                               smoke_scale)
+from repro import fault
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
+from repro.data.vectors import recall_at_k
+from repro.mutate import (MergeQuarantinedError, MutableShardedAnnIndex,
+                          MutateConfig)
+from repro.serve import ServeFrontend
+
+BUCKETS = (1, 4, 8) if SMOKE else (1, 8, 32)
+N_REQUESTS = 12 if SMOKE else 48
+N_SHARDS = 3
+HNSW_KW = dict(m=8, efc=48) if SMOKE else dict(m=12, efc=64)
+
+# the seeded chaos schedule for phase 1 (recorded verbatim in the JSON)
+SCHEDULE = {
+    "shard.search.0": dict(kind="raise", p=0.15, seed=113),
+    "serve.dispatch": dict(kind="raise", p=0.08, seed=102),
+    "mutate.merge.build": dict(kind="raise", max_fires=2, seed=103),
+}
+
+
+def _gt_live(ds, live: np.ndarray, k: int) -> np.ndarray:
+    dist = np.sum((ds.queries[:, None, :].astype(np.float64)
+                   - ds.base[None, :, :].astype(np.float64)) ** 2, axis=-1)
+    dist[:, ~live] = np.inf
+    return np.argsort(dist, axis=1)[:, :k]
+
+
+def _request_sizes(n_requests: int, top: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    sizes = np.exp(rng.uniform(0, np.log(top + 1), n_requests)).astype(int)
+    return np.clip(sizes, 1, top)
+
+
+def chaos_serving():
+    """Availability + degradation + recovery under a seeded fault schedule."""
+    fault.disarm()
+    ds = dataset("sift-synth", n_base=smoke_scale(3000, 600))
+    n_total = ds.base.shape[0]
+    n0 = int(n_total * 0.8)               # the rest streams in during chaos
+    per = n0 // N_SHARDS
+    spec = SearchSpec(efs=64, k=10, router="crouting")
+    cfg = MutateConfig(
+        delta_capacity=smoke_scale(128, 32), auto_merge="background",
+        merge_threshold=0.5, graph="hnsw", graph_kw=dict(HNSW_KW),
+        merge_retries=3, merge_backoff_s=0.02, merge_backoff_cap_s=0.2,
+        quarantine_cooldown_s=30.0)
+    shards = [AnnIndex.build(ds.base[i * per:(i + 1) * per], graph="hnsw",
+                             **HNSW_KW) for i in range(N_SHARDS)]
+    ms = MutableShardedAnnIndex(shards, config=cfg, spec=spec)
+    fe = ServeFrontend(ms, spec, buckets=BUCKETS,
+                       max_pending_rows=4 * BUCKETS[-1])
+    # external id == base row: shards wrap ds.base[:n0] in order and the
+    # streaming inserts below append ds.base[n0:] in order
+    live = np.zeros(n_total, bool)
+    live[:N_SHARDS * per] = True
+
+    # --- phase 1: seeded chaos trace -----------------------------------
+    rng = np.random.default_rng(21)
+    sizes = _request_sizes(N_REQUESTS, BUCKETS[-1])
+    ins_chunk = max(1, (n_total - n0) // N_REQUESTS)
+    next_ins = N_SHARDS * per
+    futs = []
+    with fault.scoped({s: fault.FaultSpec(**kw)
+                       for s, kw in SCHEDULE.items()}):
+        for i, sz in enumerate(sizes):
+            rows = rng.integers(0, len(ds.queries), int(sz))
+            futs.append(fe.submit(ds.queries[rows]))
+            fe.flush()
+            if next_ins < n_total:
+                hi = min(n_total, next_ins + ins_chunk)
+                ms.insert(ds.base[next_ins:hi])
+                live[next_ins:hi] = True
+                next_ins = hi
+            if i % 5 == 4:
+                kill = rng.choice(np.flatnonzero(live), 2, replace=False)
+                ms.delete(kill)
+                live[kill] = False
+        ms.wait_for_merges()
+        fe.flush()
+        fired = fault.snapshot()          # per-site hit/fire accounting
+
+    resolved_ok = resolved_err = degraded_results = hangs = 0
+    error_types: dict = {}
+    for f in futs:
+        try:
+            _ids, _d, st = f.result(timeout=120)
+            resolved_ok += 1
+            if st.degraded:
+                degraded_results += 1
+        except (FutureTimeout, TimeoutError):
+            hangs += 1                    # an admitted future hung: fatal
+        except Exception as e:            # noqa: BLE001 — typed resolution
+            resolved_err += 1
+            error_types[type(e).__name__] = \
+                error_types.get(type(e).__name__, 0) + 1
+    admitted = len(futs)
+    assert hangs == 0, f"{hangs} admitted futures never resolved"
+    availability = (resolved_ok + resolved_err) / admitted
+    assert availability == 1.0
+    trace_epochs = ms.epochs
+
+    # --- phase 2: recall under controlled degradation -------------------
+    ms.wait_for_merges()
+    gt = _gt_live(ds, live, spec.k)
+    ids0, _, st0 = ms.search(ds.queries, spec=spec)
+    recall_base = recall_at_k(ids0, gt, spec.k)
+    assert st0.shards_failed == 0 and not st0.degraded
+    fault.arm("shard.search.0", kind="raise")     # shard 0 hard-down
+    ids1, _, st1 = ms.search(ds.queries, spec=spec)
+    fault.disarm()
+    recall_degraded = recall_at_k(ids1, gt, spec.k)
+    assert st1.degraded and st1.shards_failed == 1, st1
+    assert (ids1 >= 0).all(), "survivors must fill the pool"
+    s0 = set(int(e) for e in ms.shards[0]._state.snapshot.ext_ids)
+    assert not any(int(i) in s0 for i in ids1.ravel()), \
+        "a dead shard's ids leaked into a degraded result"
+    assert recall_degraded >= 0.25, recall_degraded
+
+    # --- phase 3: merge recovery within the retry budget ----------------
+    retries_before = sum(s.merge_retries_used for s in ms.shards)
+    epochs_before = ms.epochs
+    fault.arm("mutate.merge.build", kind="raise", max_fires=2)
+    t0 = time.perf_counter()
+    need = int(cfg.merge_threshold * cfg.delta_capacity) + 1
+    ms.insert(ds.base[rng.integers(0, n_total, need)]
+              + rng.normal(0, 1e-3, (need, ds.base.shape[1]))
+              .astype(np.float32))
+    # pre-merge snapshot serves while the faulted merge retries
+    mid_ids, _, _ = ms.search(ds.queries[:8], spec=spec)
+    assert (mid_ids >= 0).all()
+    ms.wait_for_merges()
+    recovery_s = time.perf_counter() - t0
+    fault.disarm()
+    retries_used = sum(s.merge_retries_used for s in ms.shards) \
+        - retries_before
+    assert sum(ms.epochs) > sum(epochs_before), \
+        "faulted merge did not recover within the retry budget"
+    assert not any(s.quarantined for s in ms.shards)
+    assert retries_used >= 2, retries_used
+
+    # --- phase 4: quarantine round-trip ---------------------------------
+    fault.arm("mutate.merge.build", kind="raise")  # never heals (until we do)
+    q_entered = q_served = False
+    try:
+        for _ in range(2 * cfg.delta_capacity):
+            ms.insert(ds.base[rng.integers(0, n_total, 4)]
+                      + rng.normal(0, 1e-3, (4, ds.base.shape[1]))
+                      .astype(np.float32))
+            ms.wait_for_merges()
+            if ms.quarantined_shards:
+                q_entered = True
+                break
+    except MergeQuarantinedError:
+        q_entered = True                 # delta filled before we polled
+    q_ids, _, _ = ms.search(ds.queries[:8], spec=spec)
+    q_served = bool((q_ids >= 0).all())
+    assert q_entered and q_served
+    fault.disarm()                        # the fault "heals"
+    ms.clear_quarantine()
+    epochs_q = ms.epochs
+    ms.insert(ds.base[rng.integers(0, n_total, need)]
+              + rng.normal(0, 1e-3, (need, ds.base.shape[1]))
+              .astype(np.float32))
+    ms.wait_for_merges()
+    assert sum(ms.epochs) > sum(epochs_q), "post-quarantine merge failed"
+    assert not ms.quarantined_shards
+
+    summ = fe.telemetry.summary()
+    payload = {
+        "n_base_start": N_SHARDS * per, "n_shards": N_SHARDS,
+        "delta_capacity": cfg.delta_capacity,
+        "schedule": SCHEDULE,
+        "faults_fired": fired,
+        "trace": {
+            "admitted": admitted, "rows": int(sizes.sum()),
+            "resolved_ok": resolved_ok, "resolved_typed_error": resolved_err,
+            "hangs": hangs, "degraded_results": degraded_results,
+            "error_types": error_types, "epochs_after_trace": trace_epochs,
+        },
+        "availability": availability,
+        "recall": {
+            "healthy": round(recall_base, 3),
+            "one_shard_down": round(recall_degraded, 3),
+            "ratio": round(recall_degraded / max(recall_base, 1e-9), 4),
+        },
+        "merge_recovery": {
+            "retries_used": retries_used,
+            "recovery_s": round(recovery_s, 3),
+            "epochs_before": epochs_before, "epochs_after": ms.epochs,
+        },
+        "quarantine": {"entered": q_entered, "served_during": q_served,
+                       "recovered": True},
+        "telemetry": {
+            "requests": summ["requests"],
+            "dispatch_failures": summ["dispatch_failures"],
+            "worker_errors": summ["worker_errors"],
+            "recompiles_after_warmup": summ["recompiles_after_warmup"],
+        },
+    }
+    emit("chaos_serving", 0.0, {
+        "availability": availability, "degraded": degraded_results,
+        "typed_errors": resolved_err,
+        "recall_ratio": payload["recall"]["ratio"],
+        "merge_retries": retries_used,
+        "recovery_s": payload["merge_recovery"]["recovery_s"]})
+    persist_bench("chaos_serving", payload, file="BENCH_chaos.json")
+    return payload

@@ -9,6 +9,7 @@ import sys
 import time
 import traceback
 
+from benchmarks import bench_chaos as C_
 from benchmarks import bench_engine as E
 from benchmarks import bench_paper as P
 from benchmarks import bench_kernels as K
@@ -24,6 +25,7 @@ BENCHES = [
     ("serve_single", S.serve_single),
     ("serve_sharded", S.serve_sharded),
     ("mutate_streaming", M.mutate_streaming),
+    ("chaos_serving", C_.chaos_serving),
     ("fig2_time_breakdown", P.fig2_time_breakdown),
     ("fig6_8_angles", P.fig6_8_angles),
     ("fig10_recall_qps", P.fig10_recall_qps),
@@ -54,7 +56,7 @@ def main() -> None:
         try:
             fn()
             ran.append(name)
-        except Exception as e:
+        except Exception as e:   # noqa: BLE001 — harness: one bench must not kill the run
             failed.append(name)
             print(f"{name},nan,{{\"error\": \"{e!r}\"}}")
             traceback.print_exc()
@@ -63,7 +65,8 @@ def main() -> None:
     from benchmarks import common as C
     for prefix, file in (("engine", "BENCH_engine.json"),
                          ("serve", "BENCH_serve.json"),
-                         ("mutate", "BENCH_mutate.json")):
+                         ("mutate", "BENCH_mutate.json"),
+                         ("chaos", "BENCH_chaos.json")):
         if any(n.startswith(prefix) for n in ran):
             path = C.persist_bench("_meta", {
                 "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),

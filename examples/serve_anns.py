@@ -12,8 +12,9 @@ import jax
 from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
 from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
+from repro.fault import RetryPolicy
 from repro.launch.mesh import make_local_mesh
-from repro.serve import ServeFrontend
+from repro.serve import QueueFull, ServeFrontend
 
 
 def main():
@@ -39,11 +40,15 @@ def main():
     # executables only — zero XLA compiles on the request path
     fe = ServeFrontend(idx, base_spec, buckets=(1, 8, 32, 64))
     rng = np.random.default_rng(3)
+    # QueueFull backpressure: jittered capped backoff (repro.fault) rather
+    # than hammering submit in a tight loop
+    backoff = RetryPolicy(max_attempts=64, base_s=0.005, cap_s=0.25, seed=3)
     futs, spans = [], []
     s = 0
     while s < 512:
         n = int(min(rng.integers(1, 65), 512 - s))
-        futs.append(fe.submit(ds.queries[s:s + n]))
+        futs.append(backoff.call(fe.submit, ds.queries[s:s + n],
+                                 retry_on=QueueFull))
         spans.append((s, s + n))
         if len(futs) % 4 == 0:
             fe.flush()                      # micro-batcher coalesces 4-ish

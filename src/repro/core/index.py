@@ -20,14 +20,25 @@ Index persistence is a plain .npz (content-addressed in benchmarks' cache)
 stamped with ``format_version``; ``load`` refuses files newer than it knows
 how to read.  A replacement serving node re-pulls only its shard
 (DESIGN.md §6).
+
+Crash safety (DESIGN.md §10): ``save`` writes a temp file, fsyncs, stamps a
+content checksum, and atomically renames into place — a ``kill -9`` at any
+instant leaves either the old version or the new one at ``path``, never a
+torn file.  ``load`` verifies the checksum and raises a typed
+``CorruptIndexError`` on truncation/corruption instead of surfacing an
+opaque ``zipfile``/``zlib`` error.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional, Tuple
+import zipfile
+import zlib
+from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.fault import CorruptIndexError, failpoints as fault
 
 from repro.core import distances as D
 from repro.core.angles import AngleProfile, sample_angle_profile
@@ -46,7 +57,36 @@ DEFAULT_SEARCH = SearchSpec(k=10, efs=100, router="crouting")
 
 # .npz payload schema version.  v1 (implicit — no stamp): pre-PR4 files
 # missing theta_nq/theta_secs.  v2: format_version + theta_corpus_n stamps.
-FORMAT_VERSION = 2
+# v3: content ``checksum`` entry, required and verified on load.
+FORMAT_VERSION = 3
+
+
+def _payload_checksum(payload: Dict[str, np.ndarray]) -> int:
+    """CRC32 over every array's name, dtype, shape, and bytes (sorted by
+    name) — deterministic across a save/load round trip, independent of the
+    zip container, so it catches damage the container's own CRCs can miss
+    (and torn rewrites of uncompressed entries)."""
+    crc = 0
+    for name in sorted(payload):
+        a = np.ascontiguousarray(payload[name])
+        for token in (name, str(a.dtype), str(a.shape)):
+            crc = zlib.crc32(token.encode(), crc)
+        crc = zlib.crc32(a.tobytes(), crc)
+    return crc
+
+
+def _damage_file(path: str, kind: str) -> None:
+    """Apply an armed ``index.save.write`` data fault to the temp file."""
+    size = os.path.getsize(path)
+    if kind == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return
+    with open(path, "r+b") as f:          # "corrupt": flip a byte run
+        f.seek(size // 3)
+        chunk = bytearray(f.read(min(64, max(size - size // 3, 1))))
+        f.seek(size // 3)
+        f.write(bytes(b ^ 0xFF for b in chunk))
 
 
 @dataclasses.dataclass
@@ -123,6 +163,16 @@ class AnnIndex:
 
     # --- persistence ----------------------------------------------------------
     def save(self, path: str):
+        """Atomically persist the index (temp file + fsync + rename).
+
+        The payload carries a content checksum; a crash at ANY point leaves
+        ``path`` holding either the previous version or the complete new
+        one — ``load`` can never silently accept a torn write.  Failpoint
+        sites: ``index.save.write`` (raise = crash mid-save; ``corrupt`` /
+        ``truncate`` = damage the bytes before publication, exercising the
+        ``load`` integrity checks) and ``index.save.rename`` (crash in the
+        write→publish window).
+        """
         g = self.graph
         payload = dict(
             format_version=np.asarray(FORMAT_VERSION),
@@ -144,12 +194,51 @@ class AnnIndex:
             payload["theta_nq"] = np.asarray(self.profile.n_sample_queries)
             payload["theta_secs"] = np.asarray(self.profile.sample_secs)
             payload["theta_corpus_n"] = np.asarray(self.profile.corpus_n)
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        np.savez_compressed(path, **payload)
+        payload["checksum"] = np.asarray(_payload_checksum(payload), np.uint64)
+        dirname = os.path.dirname(os.path.abspath(path))
+        os.makedirs(dirname, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez_compressed(f, **payload)
+                action = fault.hit("index.save.write")
+                f.flush()
+                os.fsync(f.fileno())
+            if action in ("corrupt", "truncate"):
+                _damage_file(tmp, action)
+            fault.hit("index.save.rename")
+            os.replace(tmp, path)         # atomic publish
+            dfd = os.open(dirname, os.O_RDONLY)
+            try:
+                os.fsync(dfd)             # make the rename itself durable
+            finally:
+                os.close(dfd)
+        except BaseException:   # noqa: BLE001 — temp-file hygiene, re-raised
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @classmethod
     def load(cls, path: str) -> "AnnIndex":
-        z = np.load(path, allow_pickle=False)
+        """Load a persisted index, verifying integrity first.
+
+        Truncated or corrupted files — unreadable zip structure, entry
+        decompression failures, or (v3+) a content-checksum mismatch —
+        raise ``CorruptIndexError``.  A future ``format_version`` raises
+        ``ValueError`` (an incompatibility, not damage).
+        """
+        try:
+            with np.load(path, allow_pickle=False) as npz:
+                z = {k: npz[k] for k in npz.files}
+        except FileNotFoundError:
+            raise
+        except (zipfile.BadZipFile, zlib.error, OSError, EOFError,
+                KeyError, ValueError) as e:
+            raise CorruptIndexError(
+                f"{path}: unreadable index file ({type(e).__name__}: {e}); "
+                "the bytes on disk are truncated or corrupted") from e
         # v1 files predate the stamp; anything NEWER than we know must fail
         # loudly instead of silently defaulting fields it doesn't understand.
         version = int(z["format_version"]) if "format_version" in z else 1
@@ -158,6 +247,21 @@ class AnnIndex:
                 f"{path}: index format_version={version} is newer than this "
                 f"build understands (max {FORMAT_VERSION}); upgrade the code "
                 "or re-save the index with a compatible version")
+        if version >= 3:
+            # v3 files always carry a checksum; a missing or stale one means
+            # the payload was modified after the save stamped it
+            if "checksum" not in z:
+                raise CorruptIndexError(
+                    f"{path}: format_version={version} file is missing its "
+                    "content checksum")
+            want = int(z["checksum"])
+            got = _payload_checksum(
+                {k: v for k, v in z.items() if k != "checksum"})
+            if got != want:
+                raise CorruptIndexError(
+                    f"{path}: content checksum mismatch (stored "
+                    f"{want:#010x}, computed {got:#010x}) — the payload "
+                    "was corrupted after it was written")
         upper_ids = upper_nbrs = None
         if "n_upper" in z:
             k = int(z["n_upper"])

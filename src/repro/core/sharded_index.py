@@ -32,6 +32,7 @@ from repro.core.graph import GraphIndex
 from repro.core.routers import get_router
 from repro.core.search import _search_batch
 from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
+from repro.fault import failpoints as fault
 from repro.quant import sq8 as SQ
 
 
@@ -280,6 +281,11 @@ class ShardedAnnIndex:
         spec = resolve_search_spec(spec, self.spec, "ShardedAnnIndex.search")
         spec = dataclasses.replace(spec, metric=self.arrays.metric,
                                    use_hierarchy=False)
+        # the device data plane is one collective: no partial results here —
+        # a fault fails the whole dispatch, and the serving frontend
+        # contains it per-batch (DESIGN.md §10 documents the asymmetry
+        # with MutableShardedAnnIndex's host-side composition)
+        fault.hit("sharded.search")
         fn = self._step(spec)
         q = D.preprocess_vectors(np.ascontiguousarray(queries, np.float32),
                                  self.arrays.metric)

@@ -140,6 +140,11 @@ class SearchStats:
     iters: int                   # batch-level hop-loop iterations
     router: str = "none"
     extra: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # graceful-degradation record (DESIGN.md §10): a host-composed sharded
+    # search that lost shards still RESOLVES, with the survivors' pool and
+    # these fields set — partial results are data, not an exception
+    shards_failed: int = 0
+    degraded: bool = False
 
     @classmethod
     def from_result(cls, res, router: str = "none") -> "SearchStats":
@@ -190,6 +195,8 @@ class SearchStats:
             router=stats_list[0].router,
             extra={k: comb([s.extra[k] for s in stats_list if k in s.extra])
                    for k in sorted(keys)},
+            shards_failed=sum(int(s.shards_failed) for s in stats_list),
+            degraded=any(s.degraded for s in stats_list),
         )
 
     def summary(self) -> Dict[str, object]:
@@ -200,4 +207,6 @@ class SearchStats:
             out[f] = round(float(np.mean(getattr(self, f))), 1)
         for k, v in self.extra.items():
             out[k] = round(float(np.mean(v)), 1)
+        out["shards_failed"] = int(self.shards_failed)
+        out["degraded"] = bool(self.degraded)
         return out

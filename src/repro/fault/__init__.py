@@ -1,0 +1,26 @@
+"""Failure domains: failpoints, retry policy, typed degradation errors.
+
+Public surface (DESIGN.md §10)::
+
+    from repro import fault
+
+    fault.arm("serve.dispatch", kind="raise", hits={3})
+    fault.disarm()                       # everything off; hit() is free
+    with fault.scoped({"shard.search.1": fault.FaultSpec(p=0.3, seed=7)}):
+        ...                              # seeded chaos schedule
+
+    policy = fault.RetryPolicy(max_attempts=6, base_s=0.01, cap_s=0.5)
+    fut = policy.call(frontend.submit, queries, retry_on=QueueFull)
+"""
+from repro.fault.errors import (CorruptIndexError, DegradedSearchError,
+                                MergeQuarantinedError)
+from repro.fault.failpoints import (FaultInjected, FaultSpec, arm, disarm,
+                                    fires, hit, scoped, snapshot)
+from repro.fault.retry import RetryPolicy
+
+__all__ = [
+    "FaultInjected", "FaultSpec", "arm", "disarm", "fires", "hit",
+    "scoped", "snapshot",
+    "RetryPolicy",
+    "CorruptIndexError", "DegradedSearchError", "MergeQuarantinedError",
+]

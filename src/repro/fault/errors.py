@@ -1,0 +1,34 @@
+"""Typed failure-domain errors (DESIGN.md §10).
+
+Every degradation path in the stack resolves to one of these instead of an
+opaque ``RuntimeError``/``zipfile.BadZipFile``/silent wrong answer, so
+callers (and the chaos harness) can tell an injected or operational fault
+from a programming bug:
+
+* ``CorruptIndexError`` — a persisted index file failed its integrity
+  checks on ``AnnIndex.load`` (truncation, bit flips, stale checksum).  An
+  interrupted ``save()`` can never produce one at the *published* path —
+  the atomic-rename protocol leaves the old version — so seeing this means
+  the bytes on disk were damaged after publication.
+* ``DegradedSearchError`` — EVERY shard of a host-composed sharded search
+  failed or timed out; there is no surviving pool to answer from.  Partial
+  failure is NOT an error: it returns results from the surviving shards
+  with ``SearchStats.shards_failed > 0``.
+* ``MergeQuarantinedError`` — the delta segment is full while background
+  merges are quarantined (the retry budget was exhausted); the mutation is
+  refused as typed backpressure rather than risking a poisoned index.
+  Retry after the quarantine cooldown, or call ``clear_quarantine()``.
+"""
+from __future__ import annotations
+
+
+class CorruptIndexError(RuntimeError):
+    """A persisted index failed checksum/structure verification on load."""
+
+
+class DegradedSearchError(RuntimeError):
+    """No shard survived a fan-out search — nothing to degrade onto."""
+
+
+class MergeQuarantinedError(RuntimeError):
+    """Delta full while merges are quarantined: typed mutation backpressure."""

@@ -1,0 +1,182 @@
+"""Deterministic failpoints: named fault-injection sites (DESIGN.md §10).
+
+A *failpoint* is a named call site threaded through the serving, mutation,
+sharding and persistence paths (``serve.dispatch``, ``shard.search``,
+``mutate.merge.build``, ``index.save.write``, ...).  Production code calls
+``hit(site)`` at each one; with nothing armed that is a single module-flag
+check and an immediate return.  Tests and the chaos harness arm sites with
+a ``FaultSpec`` describing *when* to fire (explicit hit indices, or a
+seeded per-site probability — the schedule is deterministic for a given
+seed and call order) and *what* to do:
+
+* ``raise``    — raise ``FaultInjected`` (a process "crash" at that site);
+* ``delay``    — sleep ``delay_s`` then continue (stragglers, timeouts);
+* ``corrupt``/``truncate`` — return the kind string; the site applies the
+  damage itself (only sites that own bytes — e.g. ``index.save.write`` —
+  honor these; everywhere else an armed corrupt kind is a no-op).
+
+Sub-targeting: a site that fans out over numbered children (shards) calls
+``hit("shard.search", sub="1")``; arming ``shard.search`` fires on every
+child while ``shard.search.1`` fires on child 1 only.
+
+Accounting: every armed site counts hits and fires (``snapshot()``), so a
+chaos run can persist exactly which faults its seeded schedule delivered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from contextlib import contextmanager
+from typing import Dict, FrozenSet, Optional
+
+KINDS = ("raise", "delay", "corrupt", "truncate")
+
+
+class FaultInjected(RuntimeError):
+    """An armed failpoint fired with ``kind="raise"``."""
+
+    def __init__(self, site: str, hit_index: int):
+        super().__init__(f"failpoint {site!r} fired (hit {hit_index})")
+        self.site = site
+        self.hit_index = hit_index
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """When and how one armed site fires.
+
+    ``hits`` names explicit 0-based hit indices (fully deterministic);
+    with ``hits=None`` every hit fires with probability ``p`` drawn from a
+    per-site PRNG seeded with ``seed`` (deterministic for a given call
+    order).  ``max_fires`` caps total fires either way — the knob for
+    "fail twice, then recover" schedules.
+    """
+
+    kind: str = "raise"
+    hits: Optional[FrozenSet[int]] = None
+    p: float = 1.0
+    max_fires: Optional[int] = None
+    delay_s: float = 0.05
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.kind in KINDS, f"unknown fault kind {self.kind!r}"
+        assert 0.0 <= self.p <= 1.0, "p must be a probability"
+        if self.hits is not None:
+            object.__setattr__(self, "hits", frozenset(int(h) for h in self.hits))
+
+
+class _Armed:
+    """Mutable per-site schedule state (guarded by the registry lock)."""
+
+    def __init__(self, spec: FaultSpec):
+        self.spec = spec
+        self.rng = random.Random(spec.seed)
+        self.hit_count = 0
+        self.fire_count = 0
+
+    def decide(self) -> bool:
+        i, self.hit_count = self.hit_count, self.hit_count + 1
+        s = self.spec
+        if s.max_fires is not None and self.fire_count >= s.max_fires:
+            return False
+        if s.hits is not None:
+            fire = i in s.hits
+        else:
+            fire = s.p >= 1.0 or self.rng.random() < s.p
+        if fire:
+            self.fire_count += 1
+        return fire
+
+
+_LOCK = threading.Lock()
+_SITES: Dict[str, _Armed] = {}
+_ACTIVE = False          # fast path: hit() is one bool check when disarmed
+
+
+def arm(site: str, spec: Optional[FaultSpec] = None, **kw) -> None:
+    """Arm ``site`` with ``spec`` (or ``FaultSpec(**kw)``), resetting its
+    hit/fire counters."""
+    global _ACTIVE
+    if spec is None:
+        spec = FaultSpec(**kw)
+    elif kw:
+        raise TypeError("pass a FaultSpec or kwargs, not both")
+    with _LOCK:
+        _SITES[site] = _Armed(spec)
+        _ACTIVE = True
+
+
+def disarm(site: Optional[str] = None) -> None:
+    """Disarm one site, or every site (``site=None``).  Counters drop."""
+    global _ACTIVE
+    with _LOCK:
+        if site is None:
+            _SITES.clear()
+        else:
+            _SITES.pop(site, None)
+        _ACTIVE = bool(_SITES)
+
+
+@contextmanager
+def scoped(schedule: Dict[str, FaultSpec]):
+    """Arm a whole schedule for the duration of a ``with`` block."""
+    for site, spec in schedule.items():
+        arm(site, spec)
+    try:
+        yield
+    finally:
+        for site in schedule:
+            disarm(site)
+
+
+def hit(site: str, sub: Optional[str] = None) -> Optional[str]:
+    """One pass through the failpoint ``site``.
+
+    Disarmed (the common case): returns ``None`` after a single flag
+    check.  Armed and scheduled to fire: ``raise`` kinds raise
+    ``FaultInjected``; ``delay`` sleeps then returns ``"delay"``; data
+    kinds (``corrupt``/``truncate``) return the kind string for the call
+    site to act on.  ``sub`` checks ``f"{site}.{sub}"`` as well, most
+    specific first.
+    """
+    if not _ACTIVE:
+        return None
+    with _LOCK:
+        ent = None
+        name = site
+        if sub is not None:
+            name = f"{site}.{sub}"
+            ent = _SITES.get(name)
+        if ent is None:
+            name = site
+            ent = _SITES.get(site)
+        if ent is None:
+            return None
+        fire = ent.decide()
+        spec = ent.spec
+        index = ent.hit_count - 1
+    if not fire:
+        return None
+    if spec.kind == "raise":
+        raise FaultInjected(name, index)
+    if spec.kind == "delay":
+        time.sleep(spec.delay_s)
+        return "delay"
+    return spec.kind
+
+
+def fires(site: str) -> int:
+    """How many times ``site`` has fired since it was armed (0 if never)."""
+    with _LOCK:
+        ent = _SITES.get(site)
+        return ent.fire_count if ent is not None else 0
+
+
+def snapshot() -> Dict[str, Dict[str, int]]:
+    """Per-site ``{"hits": n, "fires": m}`` accounting for chaos reports."""
+    with _LOCK:
+        return {name: {"hits": ent.hit_count, "fires": ent.fire_count}
+                for name, ent in sorted(_SITES.items())}

@@ -134,7 +134,7 @@ def main():
                           f"t=({rec['compute_s']:.2e},{rec['memory_s']:.2e},"
                           f"{rec['collective_s']:.2e})s "
                           f"compile={rec['compile_s']}s", flush=True)
-                except Exception as e:
+                except Exception as e:   # noqa: BLE001 — sweep survey: record + continue
                     rec = {"arch": arch_id, "shape": shape_id,
                            "mesh": "2x16x16" if mp else "16x16",
                            "status": "error", "error": repr(e),

@@ -23,6 +23,7 @@ from repro.core.index import AnnIndex
 from repro.core.sharded_index import shard_dataset, ShardedAnnIndex
 from repro.core.spec import SearchSpec
 from repro.data.vectors import make_dataset, exact_ground_truth, recall_at_k
+from repro.fault import RetryPolicy
 from repro.launch.mesh import make_local_mesh
 from repro.serve import QueueFull, ServeFrontend
 
@@ -83,16 +84,14 @@ def main():
 
     gt = exact_ground_truth(ds, k=args.k)
     offsets = np.concatenate([[0], np.cumsum(sizes)])
+    # QueueFull backpressure: capped exponential backoff with jitter
+    # (decorrelates many clients) instead of a hand-rolled fixed-sleep spin
+    backoff = RetryPolicy(max_attempts=64, base_s=0.005, cap_s=0.25, seed=1)
     with fe:                                     # background flush worker
         futs = []
         for i in range(len(sizes)):
             q = ds.queries[offsets[i]:offsets[i + 1]]
-            while True:
-                try:
-                    futs.append(fe.submit(q))
-                    break
-                except QueueFull:                # backpressure: wait it out
-                    time.sleep(0.01)
+            futs.append(backoff.call(fe.submit, q, retry_on=QueueFull))
         done = [f.result() for f in futs]
     rec = recall_at_k(np.concatenate([ids for ids, _, _ in done]), gt, args.k)
 

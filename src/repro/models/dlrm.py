@@ -124,7 +124,7 @@ def table_parallel_lookup(tables, ids):
     try:
         from jax._src.mesh import thread_resources
         mesh = thread_resources.env.physical_mesh
-    except Exception:
+    except Exception:   # noqa: BLE001 — jax-internal API probe; no-mesh fallback
         mesh = None
     if mesh is None or mesh.empty:
         return [jnp.take(t, ids[:, i], axis=0) for i, t in enumerate(tables)]

@@ -34,7 +34,7 @@ def shard_hint(x, *spec):
     try:
         from jax._src.mesh import thread_resources
         mesh = thread_resources.env.physical_mesh
-    except Exception:
+    except Exception:   # noqa: BLE001 — jax-internal API probe; no-mesh fallback
         return x
     if mesh.empty:
         return x

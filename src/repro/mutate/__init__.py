@@ -1,5 +1,8 @@
 """Live index mutation (DESIGN.md §9): delta segment + tombstones +
-background merge, served without downtime."""
+background merge, served without downtime.  Merge failures retry with
+backoff and quarantine on exhaustion (DESIGN.md §10) — see
+``repro.fault`` for the policy pieces."""
+from repro.fault import MergeQuarantinedError
 from repro.mutate.delta import DeltaSegment, delta_scan_compile_count
 from repro.mutate.index import MutableAnnIndex, MutateConfig
 from repro.mutate.sharded import MutableShardedAnnIndex
@@ -7,6 +10,7 @@ from repro.mutate.sharded import MutableShardedAnnIndex
 __all__ = [
     "DeltaSegment",
     "delta_scan_compile_count",
+    "MergeQuarantinedError",
     "MutableAnnIndex",
     "MutableShardedAnnIndex",
     "MutateConfig",

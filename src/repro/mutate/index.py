@@ -32,13 +32,23 @@ pre-warm discounts so serving telemetry sees a flat count through the swap
 Thread model: ``search`` is lock-free (one volatile read of ``_state``);
 ``insert``/``delete`` serialize on a mutation lock; merges serialize on a
 merge lock and only take the mutation lock for the final
-residual-reconcile + swap.  A background-merge failure is remembered and
-re-raised on the next mutation call (``merge_error``).
+residual-reconcile + swap.
+
+Failure domains (DESIGN.md §10): a failed merge is retried under a capped
+exponential backoff (``MutateConfig.merge_retries`` / ``merge_backoff_s``);
+when the budget is exhausted the index enters *quarantine* for
+``quarantine_cooldown_s`` — the pre-merge snapshot keeps serving, mutations
+stay accepted while the delta has room, and ``maybe_merge`` stops
+re-attempting until the cooldown lapses (or ``clear_quarantine()``).  The
+exhausting error is kept in ``merge_error`` and re-raised by
+``wait_for_merge``; a full delta during quarantine surfaces as typed
+backpressure (``MergeQuarantinedError``), never a hang.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, Optional, Set, Tuple
 
 import numpy as np
@@ -49,6 +59,8 @@ from repro.core.index import DEFAULT_SEARCH, GRAPH_BUILDERS, AnnIndex
 from repro.core.routers import get_router
 from repro.core.search import _purge_dead_cache_entries, build_search_fn
 from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
+from repro.fault import MergeQuarantinedError, RetryPolicy
+from repro.fault import failpoints as fault
 from repro.mutate.delta import DeltaSegment, delta_scan_compile_count
 
 # Merge-rebuild graph parameters: modest by default (the merge runs while
@@ -76,12 +88,20 @@ class MutateConfig:
     graph: str = "nsg"            # what merges re-link into
     graph_kw: dict = dataclasses.field(default_factory=dict)
     auto_merge: str = "background"   # background | sync | off
+    # merge-failure policy (DESIGN.md §10): retries after a failed attempt,
+    # backoff between them, and how long the index sits quarantined (no
+    # further merge attempts) once the whole budget is exhausted
+    merge_retries: int = 3
+    merge_backoff_s: float = 0.05
+    merge_backoff_cap_s: float = 1.0
+    quarantine_cooldown_s: float = 5.0
     seed: int = 0
 
     def __post_init__(self):
         assert self.graph in GRAPH_BUILDERS, f"unknown graph {self.graph!r}"
         assert self.auto_merge in ("background", "sync", "off")
         assert self.delta_capacity >= 1
+        assert self.merge_retries >= 0
 
 
 class _Snapshot:
@@ -140,6 +160,8 @@ class MutableAnnIndex:
         self._merge_thread: Optional[threading.Thread] = None
         self.merge_error: Optional[BaseException] = None
         self.merges_completed = 0
+        self.merge_retries_used = 0          # backoff retries ever taken
+        self._quarantined_until = 0.0        # time.monotonic() deadline
 
     # --- convenience ------------------------------------------------------
     @classmethod
@@ -180,8 +202,13 @@ class MutableAnnIndex:
             raise RuntimeError("background merge failed") from err
 
     def insert(self, vectors: np.ndarray) -> np.ndarray:
-        """Add rows; returns their assigned external ids (int64 [n])."""
-        self._check_merge_error()
+        """Add rows; returns their assigned external ids (int64 [n]).
+
+        Accepted even while merges are failing (quarantine) — the delta
+        absorbs writes until it is genuinely full, at which point a
+        quarantined index raises ``MergeQuarantinedError`` (typed
+        backpressure) rather than attempting a merge it knows is sick.
+        """
         vectors = np.asarray(vectors, np.float32)
         if vectors.ndim == 1:
             vectors = vectors[None, :]
@@ -207,7 +234,19 @@ class MutableAnnIndex:
             if self.config.auto_merge == "off":
                 raise ValueError(
                     "delta segment full and auto_merge='off'; call merge()")
-            self.merge()
+            if self.quarantined:
+                raise MergeQuarantinedError(
+                    "delta segment full while merges are quarantined "
+                    f"({self._quarantined_until - time.monotonic():.1f}s of "
+                    "cooldown left); retry later or clear_quarantine()")
+            try:
+                self._merge_with_retry()
+            except Exception as e:   # noqa: BLE001 — typed backpressure
+                # the drain itself exhausted its budget (we are quarantined
+                # now): callers get one typed error, whatever the cause
+                raise MergeQuarantinedError(
+                    "delta segment full and the drain merge failed "
+                    "(index now quarantined)") from e
         self.maybe_merge()
         return ids
 
@@ -216,8 +255,8 @@ class MutableAnnIndex:
 
         Unknown or already-deleted ids raise ``KeyError`` (and the whole
         call applies atomically: either every id dies or none do).
+        Accepted during merge quarantine — tombstones are cheap.
         """
-        self._check_merge_error()
         if np.ndim(ext_ids) == 0:
             ext_ids = [ext_ids]
         ext_ids = [int(e) for e in ext_ids]
@@ -324,16 +363,22 @@ class MutableAnnIndex:
         return out_ids, out_d, stats
 
     # --- compile accounting ----------------------------------------------
-    def compile_count(self) -> int:
-        """Executables compiled on behalf of this index, continuous across
-        snapshot swaps: retired snapshots contribute what they had at swap
-        time, the live snapshot its cache sizes minus the merge pre-warm
-        discount, plus the (process-wide) delta-scan kernels."""
+    def engine_compile_count(self) -> int:
+        """Graph-engine executables compiled on behalf of THIS index:
+        retired snapshots at their swap-time counts, plus the live
+        snapshot's cache sizes minus the merge pre-warm discount.  Excludes
+        the delta-scan kernels, which are process-wide — a sharded wrapper
+        sums this per shard and adds ``delta_scan_compile_count()`` once."""
         with self._engine_lock:
             snap = self._state.snapshot
             live = sum(fn._cache_size() - snap.warm_discount.get(key, 0)
                        for key, fn in snap.engines.items())
-            return self._retired + live + delta_scan_compile_count()
+            return self._retired + live
+
+    def compile_count(self) -> int:
+        """``engine_compile_count`` + the (process-wide) delta-scan
+        kernels — continuous across snapshot swaps."""
+        return self.engine_compile_count() + delta_scan_compile_count()
 
     # --- merge ------------------------------------------------------------
     def needs_merge(self) -> bool:
@@ -344,12 +389,57 @@ class MutableAnnIndex:
         n = s.snapshot.index.graph.n
         return n > 0 and s.n_dead >= self.config.tombstone_threshold * n
 
+    # --- merge-failure policy (DESIGN.md §10) ----------------------------
+    @property
+    def quarantined(self) -> bool:
+        """True while the quarantine cooldown from an exhausted merge-retry
+        budget is running: no merge attempts, pre-merge snapshot serves."""
+        return time.monotonic() < self._quarantined_until
+
+    def clear_quarantine(self):
+        """Operator override: forget the quarantine and its stored error."""
+        with self._lock:
+            self._quarantined_until = 0.0
+            self.merge_error = None
+
+    def _merge_with_retry(self) -> bool:
+        """``merge()`` under the configured backoff; exhaustion quarantines.
+
+        Each failed attempt backs off (capped exponential, seeded jitter)
+        and retries; when ``merge_retries`` are all spent the index enters
+        quarantine, the exhausting error is stored in ``merge_error``, and
+        the error re-raises (background callers swallow it — the state IS
+        the record).  Data loss: none — a failed merge never swapped, so
+        the pre-merge snapshot + delta keep serving and mutating.
+        """
+        policy = RetryPolicy(
+            max_attempts=self.config.merge_retries + 1,
+            base_s=self.config.merge_backoff_s,
+            cap_s=self.config.merge_backoff_cap_s,
+            seed=self.config.seed)
+
+        def count_retry(_attempt, _exc):
+            self.merge_retries_used += 1
+
+        try:
+            return policy.call(self.merge, on_retry=count_retry)
+        except Exception as e:   # noqa: BLE001 — converted to quarantine state
+            with self._lock:
+                self.merge_error = e
+                self._quarantined_until = (
+                    time.monotonic() + self.config.quarantine_cooldown_s)
+            raise
+
     def maybe_merge(self):
-        """Apply the configured merge policy (called after every mutation)."""
+        """Apply the configured merge policy (called after every mutation).
+        Quarantined: no-op — mutations keep landing in the delta/tombstones
+        and the next call after the cooldown retries the merge."""
         if self.config.auto_merge == "off" or not self.needs_merge():
             return
+        if self.quarantined:
+            return
         if self.config.auto_merge == "sync":
-            self.merge()
+            self._merge_with_retry()
             return
         with self._lock:
             if self._merge_thread is not None and self._merge_thread.is_alive():
@@ -357,9 +447,9 @@ class MutableAnnIndex:
 
             def run():
                 try:
-                    self.merge()
-                except BaseException as e:    # noqa: BLE001 — surfaced later
-                    self.merge_error = e
+                    self._merge_with_retry()
+                except Exception:   # noqa: BLE001 — recorded as quarantine
+                    pass            # merge_error + cooldown already set
 
             self._merge_thread = threading.Thread(
                 target=run, name="mutate-merge", daemon=True)
@@ -396,6 +486,7 @@ class MutableAnnIndex:
                 raise ValueError("merge would leave an empty index")
 
             # 2) re-link into a fresh graph (the expensive, lock-free part)
+            fault.hit("mutate.merge.build")
             kw = dict(GRAPH_DEFAULTS.get(self.config.graph, {}))
             kw.update(self.config.graph_kw)
             new_g = GRAPH_BUILDERS[self.config.graph](
@@ -420,6 +511,7 @@ class MutableAnnIndex:
             self._prewarm(new_snap)
 
             # 5) reconcile mutations that raced the build, then swap
+            fault.hit("mutate.merge.swap")
             with self._lock:
                 cur = self._state
                 tomb = np.zeros((new_g.n,), bool)

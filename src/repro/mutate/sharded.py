@@ -13,16 +13,31 @@ Routing: inserts go to the currently-least-loaded shard (by live count),
 so deltas fill — and therefore merge — out of phase with each other.
 External ids are allocated globally by the parent and mapped to shards
 with a host dict; deletes route through it.
+
+Failure domains (DESIGN.md §10): because the top-k composition is
+host-side, a shard that fails or stalls can simply be LEFT OUT — the
+batch resolves with the survivors' pool and ``SearchStats.shards_failed``
+/ ``degraded`` set (partial results are data, not an exception; only when
+every shard fails does ``search`` raise ``DegradedSearchError``).  With
+``shard_timeout_s`` set, per-shard searches run on a thread pool and a
+straggler past the deadline is dropped the same way.  Merge policy is
+quarantine-aware: a shard whose merge-retry budget is exhausted sits out
+(its pre-merge snapshot serves) and inserts route around it.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor, wait
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.index import AnnIndex
 from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
+from repro.fault import DegradedSearchError, MergeQuarantinedError
+from repro.fault import failpoints as fault
+from repro.mutate.delta import delta_scan_compile_count
 from repro.mutate.index import DEFAULT_SEARCH, MutableAnnIndex, MutateConfig
 
 
@@ -31,15 +46,23 @@ class MutableShardedAnnIndex:
 
     def __init__(self, indexes: List[AnnIndex],
                  config: MutateConfig = MutateConfig(),
-                 spec: Optional[SearchSpec] = None):
+                 spec: Optional[SearchSpec] = None, *,
+                 shard_timeout_s: Optional[float] = None):
         if not indexes:
             raise ValueError("need at least one shard")
         child_cfg = dataclasses.replace(config, auto_merge="off")
         self.config = config
         self.default_spec = spec if spec is not None else DEFAULT_SEARCH
+        self.shard_timeout_s = shard_timeout_s
         self.shards: List[MutableAnnIndex] = []
         self._ext_to_shard: Dict[int, int] = {}
         self._next_ext = 0
+        self._merge_threads: Dict[int, threading.Thread] = {}
+        # pool only when a timeout is configured: the serial path has no
+        # per-search executor overhead and identical degradation semantics
+        self._pool = (ThreadPoolExecutor(
+            max_workers=len(indexes), thread_name_prefix="shard-search")
+            if shard_timeout_s is not None else None)
         for s, idx in enumerate(indexes):
             child = MutableAnnIndex(idx, config=child_cfg, spec=spec)
             # children hand out their own ids starting at their local n;
@@ -59,18 +82,39 @@ class MutableShardedAnnIndex:
         snap.ext_to_row[new] = row
 
     # --- mutation ---------------------------------------------------------
+    def _pick_shard(self, n_rows: int) -> int:
+        """Least-loaded shard that can absorb ``n_rows`` now: a quarantined
+        shard with a full delta cannot drain, so inserts route around it.
+        Every shard full AND quarantined is typed backpressure."""
+        order = sorted(range(len(self.shards)),
+                       key=lambda i: self.shards[i].n_live)
+        for s in order:
+            child = self.shards[s]
+            if n_rows <= child._state.delta.room or not child.quarantined:
+                return s
+        raise MergeQuarantinedError(
+            "every shard's delta is full and its merges are quarantined; "
+            "retry after a cooldown or clear_quarantine() per shard")
+
     def insert(self, vectors: np.ndarray) -> np.ndarray:
         vectors = np.asarray(vectors, np.float32)
         if vectors.ndim == 1:
             vectors = vectors[None, :]
-        # least-loaded shard keeps delta fill (and merges) staggered
-        s = int(np.argmin([sh.n_live for sh in self.shards]))
+        # least-loaded (non-quarantined-full) shard keeps fill staggered
+        s = self._pick_shard(vectors.shape[0])
         child = self.shards[s]
+        if vectors.shape[0] > child._state.delta.room:
+            try:
+                # children run auto_merge="off"; drain explicitly (with the
+                # child's retry budget — exhaustion quarantines the shard)
+                child._merge_with_retry()
+            except Exception as e:   # noqa: BLE001 — typed backpressure
+                raise MergeQuarantinedError(
+                    f"shard delta full and its drain merge failed "
+                    f"(shard now quarantined)") from e
         ids = np.arange(self._next_ext, self._next_ext + vectors.shape[0],
                         dtype=np.int64)
         self._next_ext += vectors.shape[0]
-        if vectors.shape[0] > child._state.delta.room:
-            child.merge()    # children run auto_merge="off"; drain explicitly
         with child._lock:
             child._next_ext = int(ids[0])
             got = child.insert(vectors)
@@ -96,23 +140,107 @@ class MutableShardedAnnIndex:
         return removed
 
     def maybe_merge(self):
-        """Merge AT MOST the single most-pressured shard per call, so shard
-        rebuilds stagger instead of stampeding."""
-        due = [s for s, sh in enumerate(self.shards) if sh.needs_merge()]
+        """Merge AT MOST the single most-pressured, non-quarantined shard
+        per call, so shard rebuilds stagger instead of stampeding.  The
+        parent owns merge policy: ``sync`` merges inline (failures raise
+        after the retry budget), ``background`` rebuilds on a daemon thread
+        per shard (failures quarantine the shard silently — the state is
+        the record), ``off`` leaves merges to explicit calls."""
+        if self.config.auto_merge == "off":
+            return
+        due = [s for s, sh in enumerate(self.shards)
+               if sh.needs_merge() and not sh.quarantined]
         if not due:
             return
         s = max(due, key=lambda i: self.shards[i]._state.delta.count)
-        self.shards[s].merge()
+        sh = self.shards[s]
+        if self.config.auto_merge == "sync":
+            sh._merge_with_retry()
+            return
+        t = self._merge_threads.get(s)
+        if t is not None and t.is_alive():
+            return
+
+        def run():
+            try:
+                sh._merge_with_retry()
+            except Exception:   # noqa: BLE001 — recorded as shard quarantine
+                pass
+
+        t = threading.Thread(target=run, name=f"shard-merge-{s}", daemon=True)
+        self._merge_threads[s] = t
+        t.start()
+
+    def wait_for_merges(self):
+        """Join outstanding background shard merges.  Does NOT raise:
+        failures live on as per-shard quarantine + ``merge_error``."""
+        for t in list(self._merge_threads.values()):
+            t.join()
+
+    def clear_quarantine(self):
+        """Operator override: lift every shard's quarantine."""
+        for sh in self.shards:
+            sh.clear_quarantine()
+
+    @property
+    def quarantined_shards(self) -> Tuple[int, ...]:
+        return tuple(s for s, sh in enumerate(self.shards) if sh.quarantined)
 
     # --- search -----------------------------------------------------------
+    def _shard_search(self, s: int, queries: np.ndarray, spec: SearchSpec):
+        fault.hit("shard.search", sub=str(s))
+        return self.shards[s].search(queries, spec=spec)
+
     def search(self, queries: np.ndarray,
                spec: Optional[SearchSpec] = None
                ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
-        """Fan out to every shard, host-merge the per-shard top-k."""
+        """Fan out to every shard, host-merge the per-shard top-k.
+
+        Graceful degradation: a shard that raises (or, with
+        ``shard_timeout_s``, misses its deadline) is dropped from the
+        composition — the batch resolves with the survivors' pool,
+        ``stats.shards_failed`` counting the losses and ``stats.degraded``
+        set.  Only when EVERY shard fails does the search raise
+        (``DegradedSearchError`` chained to the first failure).
+        """
         spec = resolve_search_spec(spec, self.default_spec,
                                    "MutableShardedAnnIndex.search")
         k = spec.k
-        parts = [sh.search(queries, spec=spec) for sh in self.shards]
+        parts: List[Tuple[np.ndarray, np.ndarray, SearchStats]] = []
+        failed = 0
+        first_err: Optional[BaseException] = None
+        if self._pool is None:
+            for s in range(len(self.shards)):
+                try:
+                    parts.append(self._shard_search(s, queries, spec))
+                except Exception as e:   # noqa: BLE001 — degrade, not fail
+                    failed += 1
+                    if first_err is None:
+                        first_err = e
+        else:
+            futs = {self._pool.submit(self._shard_search, s, queries, spec): s
+                    for s in range(len(self.shards))}
+            done, not_done = wait(futs, timeout=self.shard_timeout_s)
+            for f in futs:
+                if f in done:
+                    try:
+                        parts.append(f.result())
+                        continue
+                    except Exception as e:   # noqa: BLE001 — degrade
+                        err: BaseException = e
+                else:
+                    # straggler: abandoned (its thread finishes into the
+                    # void; results are discarded), the batch moves on
+                    f.cancel()
+                    err = TimeoutError(
+                        f"shard {futs[f]} search missed the "
+                        f"{self.shard_timeout_s}s deadline")
+                failed += 1
+                if first_err is None:
+                    first_err = err
+        if not parts:
+            raise DegradedSearchError(
+                f"all {len(self.shards)} shards failed") from first_err
         all_ids = np.concatenate([p[0] for p in parts], axis=1)
         all_d = np.concatenate([p[1] for p in parts], axis=1)
         order = np.argsort(all_d, axis=1, kind="stable")[:, :k]
@@ -121,7 +249,26 @@ class MutableShardedAnnIndex:
         out_ids = np.where(np.isfinite(out_d), out_ids, -1)
         stats = parts[0][2] if len(parts) == 1 else SearchStats.merge(
             [p[2] for p in parts])
+        if failed:
+            stats = dataclasses.replace(
+                stats, shards_failed=stats.shards_failed + failed,
+                degraded=True)
         return out_ids, out_d, stats
+
+    # --- accounting -------------------------------------------------------
+    def compile_count(self) -> int:
+        """Graph-engine compiles summed over shards, plus the process-wide
+        delta-scan kernels counted ONCE (shards share those jit caches)."""
+        return (sum(sh.engine_compile_count() for sh in self.shards)
+                + delta_scan_compile_count())
+
+    @property
+    def metric(self) -> str:
+        return self.shards[0].metric
+
+    @property
+    def dim(self) -> int:
+        return self.shards[0].dim
 
     @property
     def n_live(self) -> int:

@@ -12,18 +12,22 @@ Public surface::
 
 See DESIGN.md §6 (serving frontend) and the README "Serving" section.
 """
-from repro.serve.backends import (MutableIndexSession, SingleIndexSession,
-                                  ShardedIndexSession, make_session)
+from repro.serve.backends import (MutableIndexSession,
+                                  MutableShardedIndexSession,
+                                  SingleIndexSession, ShardedIndexSession,
+                                  make_session)
 from repro.serve.bucketing import (DEFAULT_BUCKETS, bucket_for, pad_to_bucket,
                                    validate_buckets)
 from repro.serve.frontend import (DeadlineExceeded, QueueFull,
-                                  RequestRejected, ServeFrontend)
+                                  RequestRejected, ServeFrontend,
+                                  WorkerFailure)
 from repro.serve.telemetry import BucketStats, ServeTelemetry
 
 __all__ = [
     "ServeFrontend", "ServeTelemetry", "BucketStats",
-    "RequestRejected", "QueueFull", "DeadlineExceeded",
+    "RequestRejected", "QueueFull", "DeadlineExceeded", "WorkerFailure",
     "DEFAULT_BUCKETS", "bucket_for", "pad_to_bucket", "validate_buckets",
     "SingleIndexSession", "ShardedIndexSession", "MutableIndexSession",
+    "MutableShardedIndexSession",
     "make_session",
 ]

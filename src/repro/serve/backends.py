@@ -21,6 +21,12 @@ engine stacks:
   shapes on the fresh graph before swapping, and ``compile_count`` folds
   retired + pre-warmed engines — so ``recompiles_after_warmup`` stays 0
   across snapshot swaps.
+* ``MutableShardedIndexSession`` — ``MutableShardedAnnIndex`` (host-side
+  per-shard composition, DESIGN.md §9/§10).  Stats are the dispatch's
+  shard-merged record (no per-request split), which is what carries the
+  graceful-degradation fields: a dispatch that lost shards resolves its
+  futures with ``stats.degraded``/``shards_failed`` set rather than an
+  exception.
 
 Request-only fields (``k``/``cos_theta``) never recompile — the canonical-
 spec contract from ``repro.core.spec`` — so a session's compile count is
@@ -155,9 +161,53 @@ class MutableIndexSession:
     stats_for_rows = SingleIndexSession.stats_for_rows
 
 
+class MutableShardedIndexSession:
+    """``MutableShardedAnnIndex`` behind the serving protocol.
+
+    The host-side top-k composition means per-shard failures degrade the
+    dispatch instead of failing it (``MutableShardedAnnIndex.search``);
+    the shard-merged stats carry ``shards_failed``/``degraded`` to every
+    request of the dispatch.  Stats are batch-level (per-query arrays from
+    S shards concatenate under ``SearchStats.merge``, so a per-request row
+    slice would be meaningless) — each request sees the dispatch's record,
+    like the device-sharded session.
+    """
+
+    splits_stats = False
+
+    def __init__(self, index, spec: SearchSpec):
+        self.index = index
+        self.spec = dataclasses.replace(spec, efs=max(spec.efs, spec.k))
+
+    @property
+    def dim(self) -> int:
+        return self.index.dim
+
+    def compile_count(self) -> int:
+        # per-shard engines across snapshot generations + the (shared)
+        # delta-scan kernels counted once
+        return self.index.compile_count()
+
+    def sample_query(self) -> np.ndarray:
+        g = self.index.shards[0]._state.snapshot.index.graph
+        return np.asarray(g.vectors[0], np.float32)
+
+    def search_padded(self, queries: np.ndarray, n_valid: int, k: int,
+                      cos_theta: Optional[float]
+                      ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        ids, dists, stats = self.index.search(
+            queries, spec=self.spec.replace(k=k, cos_theta=cos_theta))
+        return ids[:n_valid], dists[:n_valid], stats
+
+    def stats_for_rows(self, stats: SearchStats, lo: int, hi: int
+                       ) -> SearchStats:
+        return stats
+
+
 def make_session(index, spec: Optional[SearchSpec] = None):
     """Bind an index to the serving protocol (dispatch on index type)."""
     from repro.mutate.index import MutableAnnIndex
+    from repro.mutate.sharded import MutableShardedAnnIndex
 
     if isinstance(index, AnnIndex):
         return SingleIndexSession(index, spec or DEFAULT_SEARCH)
@@ -165,6 +215,8 @@ def make_session(index, spec: Optional[SearchSpec] = None):
         return ShardedIndexSession(index, spec or index.spec)
     if isinstance(index, MutableAnnIndex):
         return MutableIndexSession(index, spec or index.default_spec)
+    if isinstance(index, MutableShardedAnnIndex):
+        return MutableShardedIndexSession(index, spec or index.default_spec)
     raise TypeError(
         f"cannot serve {type(index).__name__}; expected AnnIndex, "
-        "ShardedAnnIndex, or MutableAnnIndex")
+        "ShardedAnnIndex, MutableAnnIndex, or MutableShardedAnnIndex")

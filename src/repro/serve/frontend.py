@@ -45,6 +45,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.spec import SearchSpec
+from repro.fault import failpoints as fault
 from repro.serve.backends import make_session
 from repro.serve.bucketing import (DEFAULT_BUCKETS, bucket_for,
                                    pad_to_bucket, validate_buckets)
@@ -61,6 +62,13 @@ class QueueFull(RequestRejected):
 
 class DeadlineExceeded(RequestRejected):
     """The request's deadline passed while it waited in the queue."""
+
+
+class WorkerFailure(RuntimeError):
+    """The background flush loop itself failed (NOT a per-batch engine
+    error — those resolve onto their batch's futures).  Stored on the
+    frontend and re-raised, wrapped, from the next ``submit()``/``flush()``
+    on a caller thread, so a silent worker death cannot strand a trace."""
 
 
 @dataclasses.dataclass
@@ -165,6 +173,7 @@ class ServeFrontend:
         admission deadline.  Raises ``RequestRejected``/``QueueFull``
         synchronously — an admitted future always resolves.
         """
+        self._raise_worker_error()
         with self._lock:
             self.telemetry.submitted += 1
         q = np.ascontiguousarray(queries, np.float32)
@@ -237,7 +246,22 @@ class ServeFrontend:
         with self._dispatch_lock:
             for sess, admitted in work:
                 n_dispatched += self._dispatch_admitted(sess, admitted)
+        # AFTER the drain: queued futures resolve first, then a stored
+        # worker failure surfaces to the calling thread
+        self._raise_worker_error()
         return n_dispatched
+
+    def _raise_worker_error(self):
+        """Surface a background-worker failure on a CALLER thread (the
+        worker itself flushes too — re-raising there would just loop)."""
+        if self.worker_error is None:
+            return
+        if threading.current_thread() is self._worker:
+            return
+        err, self.worker_error = self.worker_error, None
+        raise WorkerFailure(
+            "background serve worker hit an unexpected error; queued "
+            "requests were drained — call start() again to resume") from err
 
     def _drain(self, sess: _Session) -> List[_Request]:
         """Pop the session queue (state lock held); fail expired futures."""
@@ -286,12 +310,14 @@ class ServeFrontend:
         c0 = sess.engine.compile_count()
         t0 = time.perf_counter()
         try:
+            fault.hit("serve.dispatch")
             ids, dists, stats = sess.engine.search_padded(
                 qp, rows, k_d, cos_theta)
         except Exception as e:                     # noqa: BLE001
             # the failure belongs to THIS batch's futures only: callers see
             # it via result(), and the flush loop keeps dispatching the
             # other groups/sessions (an admitted future always resolves)
+            self.telemetry.observe_dispatch_failure(len(batch))
             for r in batch:
                 r.future.set_exception(e)
             return
@@ -320,12 +346,14 @@ class ServeFrontend:
                 self._wake.wait(timeout=poll_s)
                 self._wake.clear()
                 try:
+                    fault.hit("serve.worker")
                     self.flush()
                 except Exception as e:             # noqa: BLE001
                     # per-batch failures land on their futures inside
                     # _dispatch; anything reaching here is unexpected — keep
                     # the worker alive and surface it on the frontend
                     self.worker_error = e
+                    self.telemetry.worker_errors += 1
 
         self._worker = threading.Thread(target=loop, daemon=True,
                                         name="serve-frontend")

@@ -78,6 +78,9 @@ class ServeTelemetry:
         self.served = 0
         self.rejected = 0           # oversized / backpressure, at submit
         self.expired = 0            # deadline passed before dispatch
+        self.failed = 0             # requests resolved with an exception
+        self.dispatch_failures = 0  # engine-call failures (whole batches)
+        self.worker_errors = 0      # background flush-loop failures
         self.recompiles_after_warmup = 0
         self._warm = False
         self._stats: Deque[SearchStats] = _window()
@@ -119,6 +122,12 @@ class ServeTelemetry:
         self.request_lat_s.append(total_s)
         self.queue_wait_s.append(wait_s)
 
+    def observe_dispatch_failure(self, n_requests: int):
+        """A whole engine call failed: its requests RESOLVED with the
+        error on their futures (admission contract), not results."""
+        self.dispatch_failures += 1
+        self.failed += n_requests
+
     # --- reporting --------------------------------------------------------
     def merged_stats(self) -> Optional[SearchStats]:
         """Engine stats folded over the sample window (last WINDOW
@@ -140,7 +149,10 @@ class ServeTelemetry:
         qps = self.qps()
         out: Dict[str, object] = {
             "requests": {"submitted": self.submitted, "served": self.served,
-                         "rejected": self.rejected, "expired": self.expired},
+                         "rejected": self.rejected, "expired": self.expired,
+                         "failed": self.failed},
+            "dispatch_failures": self.dispatch_failures,
+            "worker_errors": self.worker_errors,
             "latency": _pcts(self.request_lat_s),
             "queue_wait": _pcts(self.queue_wait_s),
             "qps": round(qps, 1) if qps else None,

@@ -1,0 +1,408 @@
+"""Failure domains (ISSUE 7): the failpoint registry and RetryPolicy units,
+crash-safe persistence (an interrupted ``save()`` never leaves a file
+``load()`` accepts silently), partial sharded results + ``shard_timeout_s``
+stragglers, merge retry/backoff -> quarantine -> recovery, and fault
+containment through the serving frontend (``serve.dispatch`` failures and
+``WorkerFailure`` surfacing)."""
+import glob
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
+from repro.fault import (CorruptIndexError, DegradedSearchError,
+                         FaultInjected, FaultSpec, MergeQuarantinedError,
+                         RetryPolicy)
+from repro.fault import failpoints as fault
+from repro.mutate import MutableAnnIndex, MutableShardedAnnIndex, MutateConfig
+from repro.serve import ServeFrontend, WorkerFailure
+
+SPEC = SearchSpec(k=5, efs=24, router="crouting")
+
+
+@pytest.fixture(autouse=True)
+def _disarm_all():
+    """No fault schedule may leak between tests."""
+    yield
+    fault.disarm()
+
+
+@pytest.fixture(scope="module")
+def tiny_index(small_ds):
+    return AnnIndex.build(small_ds.base[:400], graph="hnsw", m=8, efc=48)
+
+
+@pytest.fixture(scope="module")
+def shard_indexes(small_ds):
+    return [AnnIndex.build(small_ds.base[s * 200:(s + 1) * 200],
+                           graph="hnsw", m=8, efc=48) for s in range(3)]
+
+
+def _sharded(shard_indexes, **kw):
+    cfg = MutateConfig(delta_capacity=32, auto_merge="off")
+    return MutableShardedAnnIndex(shard_indexes, config=cfg, spec=SPEC, **kw)
+
+
+# --------------------------------------------------------------------------
+# failpoint registry
+# --------------------------------------------------------------------------
+def test_disarmed_hit_is_none():
+    assert fault.hit("no.such.site") is None
+    assert fault.fires("no.such.site") == 0
+
+
+def test_explicit_hit_schedule():
+    fault.arm("x", hits={1, 3})
+    fired = []
+    for i in range(5):
+        try:
+            fault.hit("x")
+        except FaultInjected as e:
+            fired.append(i)
+            assert e.hit_index == i
+    assert fired == [1, 3]
+    assert fault.fires("x") == 2
+    assert fault.snapshot()["x"] == {"hits": 5, "fires": 2}
+
+
+def test_seeded_probability_is_deterministic():
+    def trace():
+        fault.arm("p", kind="raise", p=0.4, seed=7)
+        out = []
+        for _ in range(30):
+            try:
+                fault.hit("p")
+                out.append(0)
+            except FaultInjected:
+                out.append(1)
+        return out
+
+    a, b = trace(), trace()
+    assert a == b
+    assert 0 < sum(a) < 30, "p=0.4 over 30 hits must fire sometimes"
+
+
+def test_max_fires_caps_the_schedule():
+    fault.arm("cap", kind="raise", p=1.0, max_fires=2)
+    n_raised = 0
+    for _ in range(6):
+        try:
+            fault.hit("cap")
+        except FaultInjected:
+            n_raised += 1
+    assert n_raised == 2 and fault.fires("cap") == 2
+
+
+def test_sub_targeting_most_specific_wins():
+    fault.arm("shard.search.1", kind="raise")
+    fault.hit("shard.search", sub="0")          # other children untouched
+    with pytest.raises(FaultInjected, match="shard.search.1"):
+        fault.hit("shard.search", sub="1")
+    fault.disarm("shard.search.1")
+    fault.arm("shard.search", kind="raise")     # bare site: every child
+    with pytest.raises(FaultInjected):
+        fault.hit("shard.search", sub="0")
+
+
+def test_delay_and_data_kinds_return_not_raise():
+    fault.arm("slow", kind="delay", delay_s=0.01)
+    t0 = time.perf_counter()
+    assert fault.hit("slow") == "delay"
+    assert time.perf_counter() - t0 >= 0.01
+    fault.arm("bytes", kind="corrupt")
+    assert fault.hit("bytes") == "corrupt"
+
+
+def test_scoped_arms_and_disarms():
+    with fault.scoped({"a": FaultSpec(kind="raise")}):
+        with pytest.raises(FaultInjected):
+            fault.hit("a")
+    assert fault.hit("a") is None
+
+
+# --------------------------------------------------------------------------
+# RetryPolicy
+# --------------------------------------------------------------------------
+def test_retry_delays_deterministic_and_capped():
+    p = RetryPolicy(max_attempts=6, base_s=0.01, cap_s=0.05, jitter=0.5,
+                    seed=3)
+    a, b = list(p.delays()), list(p.delays())
+    assert a == b and len(a) == 5
+    assert all(d <= 0.05 * 1.5 for d in a)
+    assert list(RetryPolicy(max_attempts=1).delays()) == []
+
+
+def test_retry_call_recovers_then_propagates():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky(fail_times):
+        calls["n"] += 1
+        if calls["n"] <= fail_times:
+            raise ValueError("transient")
+        return "ok"
+
+    p = RetryPolicy(max_attempts=4, base_s=0.0, seed=0)
+    assert p.call(flaky, 2, sleep=sleeps.append) == "ok"
+    assert calls["n"] == 3 and len(sleeps) == 2
+
+    calls["n"] = 0
+    with pytest.raises(ValueError, match="transient"):
+        p.call(flaky, 99, sleep=sleeps.append)     # budget exhausted: raw error
+    assert calls["n"] == 4
+
+
+def test_retry_on_filters_exception_types():
+    def bad():
+        raise KeyError("not transient")
+
+    p = RetryPolicy(max_attempts=5, base_s=0.0)
+    calls = []
+    with pytest.raises(KeyError):
+        p.call(lambda: (calls.append(1), bad()), retry_on=ValueError,
+               sleep=lambda s: None)
+    assert len(calls) == 1, "a non-matching exception must not retry"
+
+
+# --------------------------------------------------------------------------
+# crash-safe persistence: interrupted save() never leaves a file load()
+# accepts silently (ISSUE 7 acceptance)
+# --------------------------------------------------------------------------
+def _no_tmp_litter(path):
+    assert glob.glob(f"{path}.tmp.*") == [], "temp files must be cleaned up"
+
+
+def test_save_load_roundtrip_with_checksum(tiny_index, tmp_path):
+    path = str(tmp_path / "idx.npz")
+    tiny_index.save(path)
+    back = AnnIndex.load(path)
+    np.testing.assert_array_equal(back.graph.vectors,
+                                  tiny_index.graph.vectors)
+    assert back.profile is not None
+    _no_tmp_litter(path)
+
+
+def test_interrupted_save_leaves_old_version(tiny_index, small_ds, tmp_path):
+    path = str(tmp_path / "idx.npz")
+    tiny_index.save(path)
+    newer = AnnIndex.build(small_ds.base[:300], graph="hnsw", m=8, efc=48)
+    for site in ("index.save.write", "index.save.rename"):
+        fault.arm(site, kind="raise")
+        with pytest.raises(FaultInjected):
+            newer.save(path)
+        fault.disarm(site)
+        back = AnnIndex.load(path)       # the OLD version, fully intact
+        assert back.graph.n == tiny_index.graph.n
+        _no_tmp_litter(path)
+
+
+@pytest.mark.parametrize("kind", ["corrupt", "truncate"])
+def test_damaged_bytes_never_load_silently(tiny_index, tmp_path, kind):
+    path = str(tmp_path / f"idx_{kind}.npz")
+    fault.arm("index.save.write", kind=kind)
+    tiny_index.save(path)                # publishes damaged bytes
+    fault.disarm("index.save.write")
+    with pytest.raises(CorruptIndexError):
+        AnnIndex.load(path)
+
+
+def test_checksum_catches_post_publish_tamper(tiny_index, tmp_path):
+    path = str(tmp_path / "idx.npz")
+    tiny_index.save(path)
+    with np.load(path, allow_pickle=False) as npz:
+        z = {k: npz[k] for k in npz.files}
+    v = z["vectors"].copy()
+    v[0, 0] += 1.0                       # one flipped value, stale checksum
+    z["vectors"] = v
+    np.savez(path, **z)
+    with pytest.raises(CorruptIndexError, match="checksum"):
+        AnnIndex.load(path)
+    del z["checksum"]                    # v3 file missing its checksum
+    np.savez(path, **z)
+    with pytest.raises(CorruptIndexError, match="checksum"):
+        AnnIndex.load(path)
+
+
+def test_v2_files_without_checksum_still_load(tiny_index, tmp_path):
+    path = str(tmp_path / "idx.npz")
+    tiny_index.save(path)
+    with np.load(path, allow_pickle=False) as npz:
+        z = {k: npz[k] for k in npz.files}
+    del z["checksum"]
+    z["format_version"] = np.asarray(2)
+    np.savez(path, **z)
+    assert AnnIndex.load(path).graph.n == tiny_index.graph.n
+
+
+# --------------------------------------------------------------------------
+# partial sharded results: a dead shard degrades, it does not fail
+# --------------------------------------------------------------------------
+def test_one_dead_shard_degrades_with_survivor_results(shard_indexes,
+                                                       small_ds):
+    ms = _sharded(shard_indexes)
+    q = small_ds.queries[:4]
+    ids0, _, st0 = ms.search(q)
+    assert st0.shards_failed == 0 and not st0.degraded
+
+    fault.arm("shard.search.1", kind="raise")
+    ids, _, st = ms.search(q)
+    assert st.degraded and st.shards_failed == 1
+    assert (ids >= 0).all(), "3 surviving shards fill k=5 easily"
+    dead = (ids >= 200) & (ids < 400)    # shard 1 owns global ids [200, 400)
+    assert not dead.any(), "a dropped shard's ids must not appear"
+
+
+def test_all_shards_dead_raises_degraded_error(shard_indexes, small_ds):
+    ms = _sharded(shard_indexes)
+    fault.arm("shard.search", kind="raise")     # bare site: every child
+    with pytest.raises(DegradedSearchError, match="all 3 shards"):
+        ms.search(small_ds.queries[:2])
+
+
+def test_shard_timeout_drops_straggler(shard_indexes, small_ds):
+    q = small_ds.queries[:2]
+    # compile every shard engine OFF the deadline clock (the serving stack
+    # pre-warms; a cold XLA compile inside the pool would miss any deadline)
+    _sharded(shard_indexes).search(q)
+    ms = _sharded(shard_indexes, shard_timeout_s=0.75)
+    _, _, st0 = ms.search(q)              # pooled warm pass
+    assert not st0.degraded
+    fault.arm("shard.search.2", kind="delay", delay_s=2.0)
+    ids, _, st = ms.search(q)
+    assert st.degraded and st.shards_failed == 1
+    assert (ids >= 0).all()
+    assert not ((ids >= 400) & (ids < 600)).any(), \
+        "the straggler's ids must be dropped, not merged late"
+
+
+# --------------------------------------------------------------------------
+# merge retry/backoff -> quarantine -> recovery
+# --------------------------------------------------------------------------
+def _mutable(small_ds, **cfg_kw):
+    cfg = MutateConfig(delta_capacity=8, merge_threshold=0.5, graph="hnsw",
+                       graph_kw=dict(m=8, efc=48), merge_backoff_s=0.001,
+                       merge_backoff_cap_s=0.002, **cfg_kw)
+    return MutableAnnIndex(
+        AnnIndex.build(small_ds.base[:200], graph="hnsw", m=8, efc=48),
+        config=cfg, spec=SPEC)
+
+
+def test_merge_retry_recovers_within_budget(small_ds):
+    m = _mutable(small_ds, auto_merge="sync", merge_retries=3)
+    fault.arm("mutate.merge.build", kind="raise", max_fires=2)
+    m.insert(small_ds.base[200:205])      # past threshold: sync merge
+    assert m.epoch == 1, "the 3rd attempt must land the merge"
+    assert m.merge_retries_used == 2
+    assert not m.quarantined and m.merge_error is None
+
+
+def test_exhausted_retries_quarantine_not_poison(small_ds):
+    m = _mutable(small_ds, auto_merge="background", merge_retries=1,
+                 quarantine_cooldown_s=60.0)
+    fault.arm("mutate.merge.build", kind="raise", p=1.0)
+    m.insert(small_ds.base[200:205])      # spawns the failing merge
+    m._merge_thread.join()
+    assert m.quarantined and isinstance(m.merge_error, FaultInjected)
+    assert m.epoch == 0, "a failed merge must never swap"
+
+    # quarantined =/= down: searching and mutating both still work
+    ids, _, _ = m.search(small_ds.queries[:2])
+    assert (ids >= 0).all()
+    m.delete(int(ids[0, 0]))
+    m.insert(small_ds.base[205:208])      # delta still has room
+    with pytest.raises(MergeQuarantinedError, match="quarantined"):
+        m.insert(small_ds.base[208:216])  # genuinely full: typed backpressure
+
+    # operator heals the fault and lifts the quarantine: merges resume
+    fault.disarm("mutate.merge.build")
+    m.clear_quarantine()
+    assert m.merge_error is None
+    m.maybe_merge()
+    m.wait_for_merge()
+    assert m.epoch == 1
+    m.insert(small_ds.base[208:216])      # the refused write now lands
+
+
+def test_sharded_inserts_route_around_quarantined_shard(shard_indexes,
+                                                        small_ds):
+    cfg = MutateConfig(delta_capacity=8, merge_threshold=0.9, graph="hnsw",
+                       graph_kw=dict(m=8, efc=48), auto_merge="background",
+                       merge_retries=0, merge_backoff_s=0.001,
+                       quarantine_cooldown_s=60.0)
+    ms = MutableShardedAnnIndex(shard_indexes, config=cfg, spec=SPEC)
+    far = time.monotonic() + 60.0
+    # shard 0: quarantined AND full (cannot drain) — yet least loaded
+    ms.shards[0]._quarantined_until = far
+    ms.shards[0].insert(small_ds.base[600:608])    # fills its delta
+    ms.delete(list(range(40)))                     # 0 is least loaded now
+    assert ms.quarantined_shards == (0,)
+    before0 = ms.shards[0].n_live
+    ids = ms.insert(small_ds.base[608:612])
+    assert ms.shards[0].n_live == before0, \
+        "inserts must route around a full quarantined shard"
+    assert all(ms._ext_to_shard[int(e)] != 0 for e in ids)
+    ms.clear_quarantine()
+    assert ms.quarantined_shards == ()
+    # every shard full + quarantined: typed backpressure, never a hang
+    for sh in ms.shards:
+        room = sh._state.delta.room
+        if room:
+            sh.insert(small_ds.base[612:612 + room])
+        sh._quarantined_until = far
+    with pytest.raises(MergeQuarantinedError, match="every shard"):
+        ms.insert(small_ds.base[700:701])
+
+
+# --------------------------------------------------------------------------
+# fault containment through the serving frontend
+# --------------------------------------------------------------------------
+def test_dispatch_fault_fails_only_its_batch(tiny_index, small_ds):
+    fe = ServeFrontend(tiny_index, SPEC, buckets=(1, 4))
+    q = small_ds.queries
+    fault.arm("serve.dispatch", hits={0})
+    f_bad = fe.submit(q[:2], cos_theta=0.111)   # group 1 -> first dispatch
+    f_good = fe.submit(q[:2], cos_theta=0.999)  # group 2 -> second dispatch
+    fe.flush()
+    with pytest.raises(FaultInjected):
+        f_bad.result(timeout=5)
+    ids, _, _ = f_good.result(timeout=5)
+    assert ids.shape == (2, 5)
+    assert fe.telemetry.dispatch_failures == 1
+    assert fe.telemetry.summary()["requests"]["failed"] == 1
+    # the frontend is not poisoned: the next request serves normally
+    ids, _, _ = fe.search(q[:1])
+    assert ids.shape == (1, 5)
+
+
+def test_degraded_shard_search_resolves_through_frontend(shard_indexes,
+                                                         small_ds):
+    ms = _sharded(shard_indexes)
+    fe = ServeFrontend(ms, SPEC, buckets=(1, 4))
+    fault.arm("shard.search.0", kind="raise")
+    ids, _, st = fe.search(small_ds.queries[:2])
+    assert st.degraded and st.shards_failed == 1 and (ids >= 0).all()
+    assert fe.telemetry.recompiles_after_warmup == 0
+
+
+def test_worker_failure_surfaces_on_next_submit(tiny_index, small_ds):
+    """Satellite: a background-worker failure must not die silently — it
+    raises ``WorkerFailure`` from the next caller-thread ``submit()``/
+    ``flush()`` and counts in ``worker_errors``."""
+    fe = ServeFrontend(tiny_index, SPEC, buckets=(1, 4))
+    fault.arm("serve.worker", hits={0})
+    fe.start(poll_s=0.005)
+    deadline = time.time() + 5
+    while fe.telemetry.worker_errors == 0 and time.time() < deadline:
+        time.sleep(0.005)
+    assert fe.telemetry.worker_errors == 1
+    with pytest.raises(WorkerFailure) as ei:
+        fe.submit(small_ds.queries[:1])
+    assert isinstance(ei.value.__cause__, FaultInjected)
+    assert fe.telemetry.summary()["worker_errors"] == 1
+    # the error is consumed and the worker loop survived: serving resumes
+    fut = fe.submit(small_ds.queries[:2])
+    ids, _, _ = fut.result(timeout=10)
+    assert ids.shape == (2, 5)
+    fe.stop()

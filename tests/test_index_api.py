@@ -168,7 +168,8 @@ def test_save_stamps_current_format_version(tmp_path, small_ds):
     path = os.path.join(tmp_path, "v.npz")
     idx.save(path)
     z = np.load(path, allow_pickle=False)
-    assert int(z["format_version"]) == FORMAT_VERSION == 2
+    assert int(z["format_version"]) == FORMAT_VERSION == 3
+    assert "checksum" in z.files   # v3: content checksum stamped at save
 
 
 def test_load_rejects_future_format_version(tmp_path, small_ds):

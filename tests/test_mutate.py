@@ -320,6 +320,7 @@ def test_sharded_mutable_staggered_merges(mds):
         ids, _, _ = ms.search(mds.queries[:4], spec=SPEC)
         assert not np.isin(ids, dead).any()
         assert got.shape == (8,)
+    ms.wait_for_merges()   # parent merges run in the background now
     assert sum(e > 0 for e in ms.epochs) >= 1
     # staggering: the trace must never have merged all shards in lockstep
     assert len(set(ms.epochs)) > 1 or min(ms.epochs) == 0

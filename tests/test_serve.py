@@ -193,6 +193,45 @@ def test_expired_deadline_fails_future(built, queries):
     assert fe.telemetry.expired == 1
 
 
+def test_default_timeout_expires_only_stale_requests(built, queries):
+    """``default_timeout`` is the admission deadline for every request that
+    doesn't set its own: one queued past it fails with ``DeadlineExceeded``
+    at dispatch, while a later-admitted request in the SAME flush (with a
+    live deadline) resolves normally."""
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"),
+                   default_timeout=0.05)
+    f_stale = fe.submit(queries[:2])            # inherits the 50ms default
+    time.sleep(0.12)
+    f_live = fe.submit(queries[:3], timeout=30.0)
+    assert fe.flush() == 1, "only the live request dispatches"
+    with pytest.raises(DeadlineExceeded):
+        f_stale.result(timeout=5)
+    ids, _, _ = f_live.result(timeout=5)
+    assert ids.shape == (3, 10)
+    assert fe.telemetry.expired == 1
+    assert fe.telemetry.served == 1
+
+
+def test_stop_drains_expired_and_live_correctly(built, queries):
+    """``stop()``'s final drain applies the same deadline split: expired
+    requests fail typed, live ones resolve — nothing is stranded.  The
+    state lock (reentrant for this thread) parks the worker's flush so both
+    requests are still queued when the deadline passes."""
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"),
+                   default_timeout=0.05)
+    with fe._lock:
+        fe.start(poll_s=0.005)
+        f_stale = fe.submit(queries[:2])        # default 50ms deadline
+        f_live = fe.submit(queries[:3], timeout=30.0)
+        time.sleep(0.12)                        # both still queued
+    fe.stop()
+    with pytest.raises(DeadlineExceeded):
+        f_stale.result(timeout=5)
+    ids, _, _ = f_live.result(timeout=5)
+    assert ids.shape == (3, 10)
+    assert fe.telemetry.expired == 1
+
+
 def test_admitted_future_always_resolves(built, queries):
     """Once dispatched, a request completes even if its deadline passes
     mid-flight (admission deadline, not a compute kill switch)."""
