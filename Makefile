@@ -1,7 +1,7 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
 .PHONY: verify test lint bench bench-engine bench-smoke bench-serve-smoke \
-	bench-mutate-smoke bench-chaos-smoke
+	bench-mutate-smoke bench-chaos-smoke bench-recovery-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -52,3 +52,11 @@ bench-mutate-smoke:
 bench-chaos-smoke:
 	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
 		python -m benchmarks.run --only chaos
+
+# CI tier: tiny WAL ingest / crash-recover / kill-at-every-site sweep so
+# the durability stack (fsync ack point, checkpoint rotation, replay) and
+# its zero-acked-loss guarantee stay exercised per-PR.  Results go to
+# .cache/, never to BENCH_recovery.json.
+bench-recovery-smoke:
+	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
+		python -m benchmarks.run --only recovery

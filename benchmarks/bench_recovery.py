@@ -1,0 +1,143 @@
+"""Durability benchmarks (persisted to committed BENCH_recovery.json).
+
+Three sections over the ISSUE 8 WAL + checkpoint + recover stack:
+
+1. **recovery_ingest** — acked-insert throughput per WAL fsync policy
+   (``every`` / ``interval`` / ``off``): the price of the durability ack
+   point, measured through the real ``MutableAnnIndex`` mutation path.
+2. **recovery_replay** — recovery wall-clock vs log length: crash after N
+   acked mutations, then time ``MutableAnnIndex.recover`` (manifest read +
+   checkpoint load + WAL replay) back to a serving index.
+3. **recovery_chaos** — kill-at-every-site crash/recover sweep over the
+   five durability failpoints; records (and asserts) zero acknowledged
+   loss and zero deleted-id resurrection.
+
+``BENCH_SMOKE=1`` shrinks sizes and diverts the JSON to .cache/.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+
+from benchmarks.common import (CACHE, dataset, emit, persist_bench,
+                               smoke_scale)
+from repro import fault
+from repro.core.index import AnnIndex
+from repro.durable import WalFailedError
+from repro.fault import FaultInjected
+from repro.mutate import MutableAnnIndex, MutateConfig
+
+FILE = "BENCH_recovery.json"
+HNSW_KW = dict(m=8, efc=48)
+CHAOS_SITES = ("wal.append", "wal.fsync", "wal.rotate", "checkpoint.write",
+               "manifest.rename")
+
+
+def _workdir(name: str) -> str:
+    d = os.path.join(CACHE, "bench_recovery", name)
+    shutil.rmtree(d, ignore_errors=True)
+    os.makedirs(d)
+    return d
+
+
+def _cfg(**kw):
+    base = dict(auto_merge="off", graph="hnsw", graph_kw=dict(HNSW_KW))
+    base.update(kw)
+    return MutateConfig(**base)
+
+
+def _base_index(n_base: int) -> AnnIndex:
+    ds = dataset("sift-synth", n_base=n_base)
+    return AnnIndex.build(ds.base, graph="hnsw", **HNSW_KW)
+
+
+def recovery_ingest():
+    """Acked-insert rows/s per fsync policy (batch=8 through the WAL)."""
+    n_base = smoke_scale(2000, 400)
+    n_ins = smoke_scale(512, 96)
+    batch = 8
+    ds = dataset("sift-synth", n_base=n_base + n_ins)
+    base = AnnIndex.build(ds.base[:n_base], graph="hnsw", **HNSW_KW)
+    derived = {"n_base": n_base, "rows": n_ins, "batch": batch}
+    for policy in ("every", "interval", "off"):
+        cfg = _cfg(delta_capacity=n_ins + batch, wal_fsync=policy,
+                   wal_fsync_interval_s=0.002)
+        mi = MutableAnnIndex(base, config=cfg,
+                             durable_dir=_workdir(f"ingest-{policy}"))
+        t0 = time.perf_counter()
+        for lo in range(n_base, n_base + n_ins, batch):
+            mi.insert(ds.base[lo:lo + batch])      # returns at the ack point
+        dt = time.perf_counter() - t0
+        mi.close()
+        derived[f"rows_per_s_{policy}"] = round(n_ins / dt, 1)
+        derived[f"ack_us_{policy}"] = round(dt / (n_ins / batch) * 1e6, 1)
+    emit("recovery_ingest", derived["ack_us_every"], derived)
+    persist_bench("recovery_ingest", derived, file=FILE)
+
+
+def recovery_replay():
+    """Recovery wall-clock as the un-checkpointed log grows."""
+    n_base = smoke_scale(2000, 400)
+    lengths = [smoke_scale(128, 32), smoke_scale(512, 64),
+               smoke_scale(1024, 96)]
+    ds = dataset("sift-synth", n_base=n_base + max(lengths))
+    base = AnnIndex.build(ds.base[:n_base], graph="hnsw", **HNSW_KW)
+    derived = {"n_base": n_base, "points": []}
+    for n_log in lengths:
+        cfg = _cfg(delta_capacity=n_log + 8, wal_fsync="off")
+        d = _workdir(f"replay-{n_log}")
+        mi = MutableAnnIndex(base, config=cfg, durable_dir=d)
+        for lo in range(n_base, n_base + n_log, 8):
+            mi.insert(ds.base[lo:lo + 8])
+        mi.delete(list(range(0, n_log // 8)))
+        want = mi.n_live
+        mi.close()                                  # simulated crash point
+        t0 = time.perf_counter()
+        back = MutableAnnIndex.recover(d, config=cfg)
+        dt = time.perf_counter() - t0
+        assert back.n_live == want
+        back.close()
+        derived["points"].append({
+            "log_records": n_log // 8 + 1, "log_rows": n_log,
+            "recover_ms": round(dt * 1e3, 1)})
+    emit("recovery_replay", derived["points"][-1]["recover_ms"] * 1e3,
+         derived)
+    persist_bench("recovery_replay", derived, file=FILE)
+
+
+def recovery_chaos():
+    """Seeded crash at every durability failpoint; recover; count losses."""
+    n_base = smoke_scale(1200, 400)
+    ds = dataset("sift-synth", n_base=n_base + 64)
+    base = AnnIndex.build(ds.base[:n_base], graph="hnsw", **HNSW_KW)
+    lost = resurrected = crashes = 0
+    t0 = time.perf_counter()
+    for site in CHAOS_SITES:
+        fault.disarm()
+        cfg = _cfg(delta_capacity=256)
+        d = _workdir(f"chaos-{site.replace('.', '-')}")
+        mi = MutableAnnIndex(base, config=cfg, durable_dir=d)
+        ids = mi.insert(ds.base[n_base:n_base + 48])           # acked
+        deleted = [int(ids[1]), int(ids[9]), 3]
+        mi.delete(deleted)                                     # acked
+        acked = set(map(int, mi.live_ids()))
+        fault.arm(site, kind="raise", hits={0})
+        try:
+            mi.insert(ds.base[n_base + 48:n_base + 64])        # unacked
+            mi.checkpoint()             # checkpoint-path sites fire here
+        except (FaultInjected, WalFailedError):
+            crashes += 1
+        fault.disarm()
+        back = MutableAnnIndex.recover(d, config=cfg)
+        recovered = set(map(int, back.live_ids()))
+        lost += len(acked - recovered)
+        resurrected += len(recovered & set(deleted))
+        back.close()
+    dt = time.perf_counter() - t0
+    derived = {"sites": len(CHAOS_SITES), "crashes": crashes,
+               "acked_lost": lost, "resurrected_deletes": resurrected}
+    assert crashes == len(CHAOS_SITES), "every armed site must fire"
+    assert lost == 0 and resurrected == 0
+    emit("recovery_chaos", dt / len(CHAOS_SITES) * 1e6, derived)
+    persist_bench("recovery_chaos", derived, file=FILE)

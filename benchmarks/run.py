@@ -14,6 +14,7 @@ from benchmarks import bench_engine as E
 from benchmarks import bench_paper as P
 from benchmarks import bench_kernels as K
 from benchmarks import bench_mutate as M
+from benchmarks import bench_recovery as D
 from benchmarks import bench_roofline as R
 from benchmarks import bench_serve as S
 
@@ -26,6 +27,9 @@ BENCHES = [
     ("serve_sharded", S.serve_sharded),
     ("mutate_streaming", M.mutate_streaming),
     ("chaos_serving", C_.chaos_serving),
+    ("recovery_ingest", D.recovery_ingest),
+    ("recovery_replay", D.recovery_replay),
+    ("recovery_chaos", D.recovery_chaos),
     ("fig2_time_breakdown", P.fig2_time_breakdown),
     ("fig6_8_angles", P.fig6_8_angles),
     ("fig10_recall_qps", P.fig10_recall_qps),
@@ -66,7 +70,8 @@ def main() -> None:
     for prefix, file in (("engine", "BENCH_engine.json"),
                          ("serve", "BENCH_serve.json"),
                          ("mutate", "BENCH_mutate.json"),
-                         ("chaos", "BENCH_chaos.json")):
+                         ("chaos", "BENCH_chaos.json"),
+                         ("recovery", "BENCH_recovery.json")):
         if any(n.startswith(prefix) for n in ran):
             path = C.persist_bench("_meta", {
                 "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),

@@ -31,14 +31,13 @@ opaque ``zipfile``/``zlib`` error.
 from __future__ import annotations
 
 import dataclasses
-import os
-import zipfile
-import zlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.fault import CorruptIndexError, failpoints as fault
+from repro.durable.atomic import (atomic_write_npz, read_npz,
+                                  verify_checksum)
+from repro.fault import CorruptIndexError
 
 from repro.core import distances as D
 from repro.core.angles import AngleProfile, sample_angle_profile
@@ -59,34 +58,6 @@ DEFAULT_SEARCH = SearchSpec(k=10, efs=100, router="crouting")
 # missing theta_nq/theta_secs.  v2: format_version + theta_corpus_n stamps.
 # v3: content ``checksum`` entry, required and verified on load.
 FORMAT_VERSION = 3
-
-
-def _payload_checksum(payload: Dict[str, np.ndarray]) -> int:
-    """CRC32 over every array's name, dtype, shape, and bytes (sorted by
-    name) — deterministic across a save/load round trip, independent of the
-    zip container, so it catches damage the container's own CRCs can miss
-    (and torn rewrites of uncompressed entries)."""
-    crc = 0
-    for name in sorted(payload):
-        a = np.ascontiguousarray(payload[name])
-        for token in (name, str(a.dtype), str(a.shape)):
-            crc = zlib.crc32(token.encode(), crc)
-        crc = zlib.crc32(a.tobytes(), crc)
-    return crc
-
-
-def _damage_file(path: str, kind: str) -> None:
-    """Apply an armed ``index.save.write`` data fault to the temp file."""
-    size = os.path.getsize(path)
-    if kind == "truncate":
-        with open(path, "r+b") as f:
-            f.truncate(max(size // 2, 1))
-        return
-    with open(path, "r+b") as f:          # "corrupt": flip a byte run
-        f.seek(size // 3)
-        chunk = bytearray(f.read(min(64, max(size - size // 3, 1))))
-        f.seek(size // 3)
-        f.write(bytes(b ^ 0xFF for b in chunk))
 
 
 @dataclasses.dataclass
@@ -162,17 +133,10 @@ class AnnIndex:
         return ids, dists, SearchStats.from_result(res, router=spec.router)
 
     # --- persistence ----------------------------------------------------------
-    def save(self, path: str):
-        """Atomically persist the index (temp file + fsync + rename).
-
-        The payload carries a content checksum; a crash at ANY point leaves
-        ``path`` holding either the previous version or the complete new
-        one — ``load`` can never silently accept a torn write.  Failpoint
-        sites: ``index.save.write`` (raise = crash mid-save; ``corrupt`` /
-        ``truncate`` = damage the bytes before publication, exercising the
-        ``load`` integrity checks) and ``index.save.rename`` (crash in the
-        write→publish window).
-        """
+    def _payload(self) -> Dict[str, np.ndarray]:
+        """The v3 .npz payload (sans checksum — the atomic writer stamps
+        it).  Shared by ``save`` and the durability checkpoints, which
+        embed this payload and extend it with mutation state."""
         g = self.graph
         payload = dict(
             format_version=np.asarray(FORMAT_VERSION),
@@ -194,31 +158,23 @@ class AnnIndex:
             payload["theta_nq"] = np.asarray(self.profile.n_sample_queries)
             payload["theta_secs"] = np.asarray(self.profile.sample_secs)
             payload["theta_corpus_n"] = np.asarray(self.profile.corpus_n)
-        payload["checksum"] = np.asarray(_payload_checksum(payload), np.uint64)
-        dirname = os.path.dirname(os.path.abspath(path))
-        os.makedirs(dirname, exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        try:
-            with open(tmp, "wb") as f:
-                np.savez_compressed(f, **payload)
-                action = fault.hit("index.save.write")
-                f.flush()
-                os.fsync(f.fileno())
-            if action in ("corrupt", "truncate"):
-                _damage_file(tmp, action)
-            fault.hit("index.save.rename")
-            os.replace(tmp, path)         # atomic publish
-            dfd = os.open(dirname, os.O_RDONLY)
-            try:
-                os.fsync(dfd)             # make the rename itself durable
-            finally:
-                os.close(dfd)
-        except BaseException:   # noqa: BLE001 — temp-file hygiene, re-raised
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        return payload
+
+    def save(self, path: str):
+        """Atomically persist the index (temp file + fsync + rename).
+
+        The payload carries a content checksum; a crash at ANY point leaves
+        ``path`` holding either the previous version or the complete new
+        one — ``load`` can never silently accept a torn write.  Failpoint
+        sites: ``index.save.write`` (raise = crash mid-save; ``corrupt`` /
+        ``truncate`` = damage the bytes before publication, exercising the
+        ``load`` integrity checks) and ``index.save.rename`` (crash in the
+        write→publish window).  The recipe lives in ``repro.durable.atomic``
+        and is shared with checkpoints and manifests (DESIGN.md §11).
+        """
+        atomic_write_npz(path, self._payload(),
+                         write_site="index.save.write",
+                         rename_site="index.save.rename")
 
     @classmethod
     def load(cls, path: str) -> "AnnIndex":
@@ -229,18 +185,19 @@ class AnnIndex:
         raise ``CorruptIndexError``.  A future ``format_version`` raises
         ``ValueError`` (an incompatibility, not damage).
         """
-        try:
-            with np.load(path, allow_pickle=False) as npz:
-                z = {k: npz[k] for k in npz.files}
-        except FileNotFoundError:
-            raise
-        except (zipfile.BadZipFile, zlib.error, OSError, EOFError,
-                KeyError, ValueError) as e:
-            raise CorruptIndexError(
-                f"{path}: unreadable index file ({type(e).__name__}: {e}); "
-                "the bytes on disk are truncated or corrupted") from e
-        # v1 files predate the stamp; anything NEWER than we know must fail
-        # loudly instead of silently defaulting fields it doesn't understand.
+        z = read_npz(path)
+        cls._check_version(z, path)
+        return cls._from_payload(z)
+
+    @staticmethod
+    def _check_version(z: Dict[str, np.ndarray], path: str) -> int:
+        """Version + checksum gate shared with the checkpoint reader.
+
+        v1 files predate the stamp; anything NEWER than we know must fail
+        loudly instead of silently defaulting fields it doesn't understand.
+        v3+ files always carry a checksum (verified here); a missing or
+        stale one means the payload was modified after the save stamped it.
+        """
         version = int(z["format_version"]) if "format_version" in z else 1
         if version > FORMAT_VERSION:
             raise ValueError(
@@ -248,20 +205,14 @@ class AnnIndex:
                 f"build understands (max {FORMAT_VERSION}); upgrade the code "
                 "or re-save the index with a compatible version")
         if version >= 3:
-            # v3 files always carry a checksum; a missing or stale one means
-            # the payload was modified after the save stamped it
-            if "checksum" not in z:
-                raise CorruptIndexError(
-                    f"{path}: format_version={version} file is missing its "
-                    "content checksum")
-            want = int(z["checksum"])
-            got = _payload_checksum(
-                {k: v for k, v in z.items() if k != "checksum"})
-            if got != want:
-                raise CorruptIndexError(
-                    f"{path}: content checksum mismatch (stored "
-                    f"{want:#010x}, computed {got:#010x}) — the payload "
-                    "was corrupted after it was written")
+            verify_checksum(path, z, required=True)
+        return version
+
+    @classmethod
+    def _from_payload(cls, z: Dict[str, np.ndarray]) -> "AnnIndex":
+        """Rebuild graph + profile from a (verified) payload dict.  Extra
+        keys (a checkpoint's mutation state) are ignored."""
+        version = int(z["format_version"]) if "format_version" in z else 1
         upper_ids = upper_nbrs = None
         if "n_upper" in z:
             k = int(z["n_upper"])

@@ -1,8 +1,11 @@
 """Deterministic failpoints: named fault-injection sites (DESIGN.md §10).
 
 A *failpoint* is a named call site threaded through the serving, mutation,
-sharding and persistence paths (``serve.dispatch``, ``shard.search``,
-``mutate.merge.build``, ``index.save.write``, ...).  Production code calls
+sharding, persistence and durability paths (``serve.dispatch``,
+``shard.search``, ``mutate.merge.build``, ``index.save.write``, and the
+ISSUE 8 WAL/checkpoint sites ``wal.append`` / ``wal.fsync`` /
+``wal.rotate`` / ``checkpoint.write`` / ``manifest.rename``).
+Production code calls
 ``hit(site)`` at each one; with nothing armed that is a single module-flag
 check and an immediate return.  Tests and the chaos harness arm sites with
 a ``FaultSpec`` describing *when* to fire (explicit hit indices, or a

@@ -36,20 +36,36 @@ class RetryPolicy:
     multiplier: float = 2.0
     jitter: float = 0.5
     seed: Optional[int] = None
+    # total-budget cap (ISSUE 8 satellite): the SUMMED backoff sleeps never
+    # exceed this — the last delay is truncated to fit and the schedule ends
+    # there, so a retry loop can't overrun e.g. a quarantine cooldown no
+    # matter how many attempts remain.  None = attempts-only bound.
+    max_elapsed_s: Optional[float] = None
 
     def __post_init__(self):
         assert self.max_attempts >= 1, "need at least one attempt"
         assert self.base_s >= 0 and self.cap_s >= 0 and self.multiplier >= 1
         assert 0.0 <= self.jitter < 1.0, "jitter is a fraction of the delay"
+        assert self.max_elapsed_s is None or self.max_elapsed_s >= 0
 
     def delays(self) -> Iterator[float]:
-        """The ``max_attempts - 1`` sleeps between attempts, in order."""
+        """The (at most ``max_attempts - 1``) sleeps between attempts, in
+        order.  With ``max_elapsed_s`` set the walk ends early once the
+        budget is spent (its last delay truncated to exactly exhaust it)."""
         rng = random.Random(self.seed)
         d = self.base_s
+        spent = 0.0
         for _ in range(self.max_attempts - 1):
             j = 1.0 + self.jitter * (2.0 * rng.random() - 1.0) \
                 if self.jitter else 1.0
-            yield min(d, self.cap_s) * j
+            s = min(d, self.cap_s) * j
+            if self.max_elapsed_s is not None:
+                remaining = self.max_elapsed_s - spent
+                if remaining <= 0:
+                    return
+                s = min(s, remaining)
+            spent += s
+            yield s
             d = min(d * self.multiplier, self.cap_s)
 
     def call(self, fn: Callable, *args,
@@ -59,10 +75,11 @@ class RetryPolicy:
              **kw):
         """Call ``fn`` under this policy, retrying on ``retry_on``.
 
-        The final attempt's exception propagates unwrapped.  ``on_retry``
-        (attempt index, exception) observes each failure before its
-        backoff sleep — telemetry's hook.  ``sleep`` is injectable for
-        tests.
+        The final attempt's exception propagates unwrapped — whether the
+        schedule ends on ``max_attempts`` or on an exhausted
+        ``max_elapsed_s`` budget.  ``on_retry`` (attempt index, exception)
+        observes each failure before its backoff sleep — telemetry's hook.
+        ``sleep`` is injectable for tests.
         """
         delays = self.delays()
         for attempt in range(self.max_attempts):
@@ -71,7 +88,11 @@ class RetryPolicy:
             except retry_on as e:
                 if attempt == self.max_attempts - 1:
                     raise
+                try:
+                    delay = next(delays)
+                except StopIteration:
+                    raise e          # noqa: B904 — budget spent: propagate
                 if on_retry is not None:
                     on_retry(attempt, e)
-                sleep(next(delays))
+                sleep(delay)
         raise AssertionError("unreachable")

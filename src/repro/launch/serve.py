@@ -50,6 +50,12 @@ def main():
                     help="per-request admission deadline (s)")
     ap.add_argument("--single", action="store_true",
                     help="serve one AnnIndex instead of sharding per device")
+    ap.add_argument("--durable-dir", default=None,
+                    help="serve a durable MutableAnnIndex (DESIGN.md §11): "
+                         "recover from DIR when it already holds state, "
+                         "else build fresh and start write-ahead logging "
+                         "there (recall is meaningful only when the build "
+                         "args match the logged corpus)")
     ap.add_argument("--m", type=int, default=16)
     ap.add_argument("--efc", type=int, default=128)
     args = ap.parse_args()
@@ -64,7 +70,25 @@ def main():
                       max_hops=2048)
 
     t0 = time.time()
-    if args.single:
+    if args.durable_dir is not None:
+        from repro.durable import has_manifest
+        from repro.mutate import MutableAnnIndex, MutateConfig
+
+        mcfg = MutateConfig(graph=args.graph)
+        if has_manifest(args.durable_dir):
+            index = MutableAnnIndex.recover(args.durable_dir, config=mcfg,
+                                            spec=spec)
+            print(f"recovered {index.n_live} live rows from "
+                  f"{args.durable_dir} (epoch {index.epoch})")
+        else:
+            base_idx = AnnIndex.build(ds.base, graph=args.graph, m=args.m,
+                                      efc=args.efc)
+            index = MutableAnnIndex(base_idx, config=mcfg, spec=spec,
+                                    durable_dir=args.durable_dir)
+            print(f"created durable state in {args.durable_dir}")
+        profile = index._state.snapshot.index.profile
+        theta = np.arccos(profile.cos_theta_star)
+    elif args.single:
         index = AnnIndex.build(ds.base, graph=args.graph, m=args.m,
                                efc=args.efc)
         theta = np.arccos(index.profile.cos_theta_star)
@@ -101,7 +125,10 @@ def main():
           f"QPS={summ['qps']:.0f} p50={lat['p50_ms']:.1f}ms "
           f"p95={lat['p95_ms']:.1f}ms p99={lat['p99_ms']:.1f}ms "
           f"recompiles_after_warmup={summ['recompiles_after_warmup']}")
+    print("health:", json.dumps(fe.health()))
     print(json.dumps(summ, indent=2))
+    if args.durable_dir is not None:
+        index.close()               # final WAL fsync + writer release
 
 
 if __name__ == "__main__":

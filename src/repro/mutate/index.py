@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Dict, Optional, Set, Tuple
 
 import numpy as np
@@ -59,6 +60,8 @@ from repro.core.index import DEFAULT_SEARCH, GRAPH_BUILDERS, AnnIndex
 from repro.core.routers import get_router
 from repro.core.search import _purge_dead_cache_entries, build_search_fn
 from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
+from repro.durable.store import DurableStore
+from repro.durable.wal import FSYNC_POLICIES, InsertRecord
 from repro.fault import MergeQuarantinedError, RetryPolicy
 from repro.fault import failpoints as fault
 from repro.mutate.delta import DeltaSegment, delta_scan_compile_count
@@ -96,12 +99,21 @@ class MutateConfig:
     merge_backoff_cap_s: float = 1.0
     quarantine_cooldown_s: float = 5.0
     seed: int = 0
+    # durability (DESIGN.md §11): WAL fsync policy ("every" fsyncs before
+    # each ack, "interval" group-commits on a wal_fsync_interval_s window,
+    # "off" acks immediately — best-effort), and whether a successful merge
+    # also rotates the log and publishes a checkpoint
+    wal_fsync: str = "every"
+    wal_fsync_interval_s: float = 0.002
+    checkpoint_on_merge: bool = True
 
     def __post_init__(self):
         assert self.graph in GRAPH_BUILDERS, f"unknown graph {self.graph!r}"
         assert self.auto_merge in ("background", "sync", "off")
         assert self.delta_capacity >= 1
         assert self.merge_retries >= 0
+        assert self.wal_fsync in FSYNC_POLICIES, \
+            f"unknown wal_fsync {self.wal_fsync!r}"
 
 
 class _Snapshot:
@@ -141,7 +153,8 @@ class MutableAnnIndex:
     """``AnnIndex`` + insert/delete/background-merge, served without downtime."""
 
     def __init__(self, index: AnnIndex, config: MutateConfig = MutateConfig(),
-                 spec: Optional[SearchSpec] = None):
+                 spec: Optional[SearchSpec] = None, *,
+                 durable_dir: Optional[str] = None):
         g = index.graph
         self.config = config
         self.default_spec = spec if spec is not None else DEFAULT_SEARCH
@@ -162,6 +175,10 @@ class MutableAnnIndex:
         self.merges_completed = 0
         self.merge_retries_used = 0          # backoff retries ever taken
         self._quarantined_until = 0.0        # time.monotonic() deadline
+        self._durable: Optional[DurableStore] = None
+        self._replaying = False              # recover() applies, no re-log
+        if durable_dir is not None:
+            self._init_durable(durable_dir)
 
     # --- convenience ------------------------------------------------------
     @classmethod
@@ -219,12 +236,19 @@ class MutableAnnIndex:
             raise ValueError(
                 f"insert of {n} rows exceeds delta_capacity="
                 f"{self.config.delta_capacity}; insert in smaller chunks")
+        lsn = None
         while True:
             with self._lock:
                 state = self._state
                 if n <= state.delta.room:
                     ids = np.arange(self._next_ext, self._next_ext + n,
                                     dtype=np.int64)
+                    if self._durable is not None and not self._replaying:
+                        # write-ahead, inside the mutation lock: LSN order
+                        # is mutation order.  A failed append leaves the
+                        # in-memory state UNtouched — the caller's error is
+                        # the non-acknowledgment.
+                        lsn = self._durable.append_insert(ids, vectors)
                     self._next_ext += n
                     self._state = dataclasses.replace(
                         state, delta=state.delta.insert(vectors, ids))
@@ -247,6 +271,10 @@ class MutableAnnIndex:
                 raise MergeQuarantinedError(
                     "delta segment full and the drain merge failed "
                     "(index now quarantined)") from e
+        if lsn is not None:
+            # acknowledgment point: outside the mutation lock (group commit
+            # batches concurrent acks under one fsync), before returning ids
+            self._durable.ack(lsn)
         self.maybe_merge()
         return ids
 
@@ -260,6 +288,7 @@ class MutableAnnIndex:
         if np.ndim(ext_ids) == 0:
             ext_ids = [ext_ids]
         ext_ids = [int(e) for e in ext_ids]
+        lsn = None
         with self._lock:
             state = self._state
             delta = state.delta
@@ -278,12 +307,19 @@ class MutableAnnIndex:
                     tomb = state.tombstone.copy()
                 tomb[row] = True
                 n_dead += 1
+            if self._durable is not None and not self._replaying:
+                # write-ahead AFTER validation (a rejected delete must not
+                # log) and BEFORE publishing the new state (log-before-apply)
+                lsn = self._durable.append_delete(
+                    np.asarray(ext_ids, np.int64))
             if tomb is not None:
                 state = dataclasses.replace(
                     state, tombstone=tomb, tombstone_dev=_tombstone_dev(tomb),
                     n_dead=n_dead)
             self._state = dataclasses.replace(state, delta=delta)
             removed = len(ext_ids)
+        if lsn is not None:
+            self._durable.ack(lsn)
         self.maybe_merge()
         return removed
 
@@ -416,6 +452,10 @@ class MutableAnnIndex:
             max_attempts=self.config.merge_retries + 1,
             base_s=self.config.merge_backoff_s,
             cap_s=self.config.merge_backoff_cap_s,
+            # total-budget cap: the whole retry schedule fits inside one
+            # quarantine cooldown, so backoff can never outlast the state
+            # it would transition into
+            max_elapsed_s=self.config.quarantine_cooldown_s,
             seed=self.config.seed)
 
         def count_retry(_attempt, _exc):
@@ -549,6 +589,15 @@ class MutableAnnIndex:
                         snapshot=new_snap, tombstone=tomb,
                         tombstone_dev=_tombstone_dev(tomb), n_dead=n_dead,
                         delta=fresh, epoch=base.epoch + 1)
+            if (self._durable is not None and not self._replaying
+                    and self.config.checkpoint_on_merge):
+                # a merged graph makes the log prefix redundant: rotate +
+                # publish so recovery replays only post-merge mutations.
+                # Failure here propagates (the merge retry/quarantine
+                # machinery owns it) — the swap above already happened and
+                # durability is unaffected: the old binding still replays
+                # the full acked history.
+                self._checkpoint_locked()
             self.merges_completed += 1
         # old snapshot is unreferenced once in-flight searches drain; drop
         # its compiled engines + device arrays (THE _purge_dead_cache_entries
@@ -578,9 +627,200 @@ class MutableAnnIndex:
                 new_snap.warm_discount[cfg] = fn._cache_size()
 
     # --- persistence ------------------------------------------------------
-    def save(self, path: str):
-        """Persist the merged view (forces a sync merge first so the file
-        is a plain ``AnnIndex`` payload: delta drained, tombstones gone)."""
+    def save(self, path: str, *, strict: bool = False):
+        """Persist the current MERGED SNAPSHOT only — a plain ``AnnIndex``
+        payload, NOT the live mutation state.
+
+        The trap (ISSUE 8): unmerged delta rows and tombstones are *not* in
+        the snapshot, so saving while they exist writes a file that silently
+        forgets acknowledged mutations.  When that would happen this method
+        warns (or raises ``ValueError`` under ``strict=True``) and still
+        writes the snapshot.  For a file that reflects everything, call
+        ``merge()`` first; for crash durability of every acknowledged
+        mutation, use ``durable_dir=`` / ``checkpoint()`` / ``recover()``
+        (DESIGN.md §11) instead of point-in-time saves.
+        """
         self.wait_for_merge()
-        self.merge()
-        self._state.snapshot.index.save(path)
+        s = self._state
+        if s.delta.count > 0 or s.n_dead > 0:
+            msg = (f"MutableAnnIndex.save: snapshot-only save is dropping "
+                   f"{s.delta.n_live} unmerged delta row(s) and "
+                   f"{s.n_dead} tombstone(s); call merge() first for a "
+                   "point-in-time file, or use checkpoint()/durable_dir= "
+                   "for crash durability")
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=2)
+        s.snapshot.index.save(path)
+
+    # --- durability (DESIGN.md §11) ---------------------------------------
+    def _init_durable(self, dirname: str):
+        """Create a fresh durable directory: initial checkpoint of the
+        current state, then an empty active WAL segment to append into."""
+        store = DurableStore.create(
+            dirname, fsync=self.config.wal_fsync,
+            fsync_interval_s=self.config.wal_fsync_interval_s,
+            meta={"kind": "mutable-index"})
+        store.publish_checkpoint(self._checkpoint_payload())
+        store.attach()
+        self._durable = store
+
+    def _checkpoint_payload(self) -> Dict[str, np.ndarray]:
+        """Full recoverable state: the snapshot's ``AnnIndex`` payload plus
+        the mutation extras (``ckpt_*``).  Dead delta rows are dropped —
+        external ids are never reused, so nothing can reference them again.
+        """
+        with self._lock:
+            state = self._state
+            next_ext = self._next_ext
+        snap = state.snapshot
+        d_vecs, d_ids = state.delta.live_rows()
+        payload = snap.index._payload()
+        payload.update(
+            ckpt_ext_ids=snap.ext_ids,
+            ckpt_tombstone=state.tombstone,
+            ckpt_delta_vectors=d_vecs,
+            ckpt_delta_ids=d_ids,
+            ckpt_next_ext=np.asarray(next_ext, np.int64),
+            ckpt_epoch=np.asarray(state.epoch, np.int64))
+        return payload
+
+    def checkpoint(self) -> str:
+        """Rotate the WAL and publish a checkpoint of the current state;
+        returns the checkpoint file name.  After it lands, recovery loads
+        the checkpoint and replays only mutations acked since this call.
+        A crash at ANY point leaves a manifest binding that still replays
+        the complete acked history (the rotation/publication state machine,
+        DESIGN.md §11)."""
+        if self._durable is None:
+            raise ValueError(
+                "index has no durable store; construct with durable_dir= "
+                "or via recover()")
+        with self._merge_lock:     # serialize with merges (and their ckpts)
+            return self._checkpoint_locked()
+
+    def _checkpoint_locked(self) -> str:
+        """Checkpoint with the merge lock already held (merge() tail)."""
+        with self._lock:
+            # the rotate boundary is a mutation-order boundary: capture the
+            # state under the SAME lock hold so the checkpoint is exactly
+            # "everything before the new segment"
+            self._durable.rotate()
+            payload = self._checkpoint_payload()
+        # the expensive write happens off the mutation lock
+        return self._durable.publish_checkpoint(payload)
+
+    @classmethod
+    def recover(cls, dirname: str, config: MutateConfig = MutateConfig(),
+                spec: Optional[SearchSpec] = None, *,
+                attach: bool = True) -> "MutableAnnIndex":
+        """Rebuild a ``MutableAnnIndex`` from a durable directory: load the
+        manifest's checkpoint, replay the bound WAL segments into delta +
+        tombstones, and (with ``attach=True``) keep appending to the log.
+
+        Replay is idempotent — an insert of an already-live id and a delete
+        of an already-dead id are skipped — and tolerant of a torn tail on
+        the final segment (those records were never acknowledged; they are
+        truncated away).  Mid-log corruption raises ``CorruptIndexError``.
+        ``attach=False`` opens the state read-write in memory but leaves
+        the log alone (export/load semantics).
+        """
+        store = DurableStore.open(
+            dirname, fsync=config.wal_fsync,
+            fsync_interval_s=config.wal_fsync_interval_s)
+        z = store.load_checkpoint()
+        index = AnnIndex._from_payload(z)
+        obj = cls(index, config=config, spec=spec)
+        snap = _Snapshot(index, np.asarray(z["ckpt_ext_ids"], np.int64))
+        tomb = np.ascontiguousarray(z["ckpt_tombstone"], bool)
+        obj._state = _State(
+            snapshot=snap, tombstone=tomb,
+            tombstone_dev=_tombstone_dev(tomb), n_dead=int(tomb.sum()),
+            delta=DeltaSegment.empty(config.delta_capacity,
+                                     index.graph.dim, index.graph.metric),
+            epoch=int(z["ckpt_epoch"]))
+        obj._next_ext = int(z["ckpt_next_ext"])
+        obj._replaying = True
+        try:
+            d_vecs = np.ascontiguousarray(z["ckpt_delta_vectors"], np.float32)
+            if d_vecs.shape[0]:
+                obj._apply_insert(
+                    np.asarray(z["ckpt_delta_ids"], np.int64), d_vecs)
+            for rec in store.replay():
+                if isinstance(rec, InsertRecord):
+                    obj._apply_insert(rec.ext_ids, rec.vectors)
+                else:
+                    obj._apply_delete(rec.ext_ids)
+        finally:
+            obj._replaying = False
+        if attach:
+            store.attach()
+            obj._durable = store
+        else:
+            store.close()
+        return obj
+
+    def _is_live(self, e: int) -> bool:
+        s = self._state
+        if s.delta.contains(e):
+            return True
+        row = s.snapshot.ext_to_row.get(e)
+        return row is not None and not s.tombstone[row]
+
+    def _apply_insert(self, ext_ids: np.ndarray, vectors: np.ndarray):
+        """Replay-side insert: ids are pre-assigned, vectors already
+        preprocessed (they were logged post-preprocessing).  Already-live
+        ids are skipped (idempotence); a full delta merges mid-replay."""
+        ext_ids = np.asarray(ext_ids, np.int64)
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        keep = [i for i, e in enumerate(ext_ids) if not self._is_live(int(e))]
+        if len(keep) != len(ext_ids):
+            ext_ids, vectors = ext_ids[keep], vectors[keep]
+        if ext_ids.size == 0:
+            return
+        i = 0
+        while i < ext_ids.size:
+            with self._lock:
+                room = self._state.delta.room
+                if room > 0:
+                    j = min(i + room, ext_ids.size)
+                    self._state = dataclasses.replace(
+                        self._state, delta=self._state.delta.insert(
+                            vectors[i:j], ext_ids[i:j]))
+                    i = j
+                    continue
+            self.merge()   # replay-time drain: no checkpoint, no retries
+        with self._lock:
+            self._next_ext = max(self._next_ext, int(ext_ids.max()) + 1)
+
+    def _apply_delete(self, ext_ids: np.ndarray):
+        """Replay-side delete: already-dead / unknown ids are skipped."""
+        with self._lock:
+            state = self._state
+            delta = state.delta
+            tomb = None
+            n_dead = state.n_dead
+            for e in map(int, np.asarray(ext_ids).ravel()):
+                delta2, found = delta.delete(e)
+                if found:
+                    delta = delta2
+                    continue
+                row = state.snapshot.ext_to_row.get(e)
+                dead = (tomb if tomb is not None else state.tombstone)
+                if row is None or dead[row]:
+                    continue
+                if tomb is None:
+                    tomb = state.tombstone.copy()
+                tomb[row] = True
+                n_dead += 1
+            if tomb is not None:
+                state = dataclasses.replace(
+                    state, tombstone=tomb, tombstone_dev=_tombstone_dev(tomb),
+                    n_dead=n_dead)
+            self._state = dataclasses.replace(state, delta=delta)
+
+    def close(self):
+        """Release the WAL writer (final fsync included).  The in-memory
+        index stays usable, but further durable mutations raise."""
+        if self._durable is not None:
+            self._durable.close()

@@ -27,6 +27,7 @@ quarantine-aware: a shard whose merge-retry budget is exhausted sits out
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from concurrent.futures import ThreadPoolExecutor, wait
 from typing import Dict, List, Optional, Tuple
@@ -35,10 +36,15 @@ import numpy as np
 
 from repro.core.index import AnnIndex
 from repro.core.spec import SearchSpec, SearchStats, resolve_search_spec
-from repro.fault import DegradedSearchError, MergeQuarantinedError
+from repro.durable.manifest import Manifest, read_manifest, write_manifest
+from repro.durable.store import DurableStore
+from repro.fault import (CorruptIndexError, DegradedSearchError,
+                         MergeQuarantinedError)
 from repro.fault import failpoints as fault
 from repro.mutate.delta import delta_scan_compile_count
 from repro.mutate.index import DEFAULT_SEARCH, MutableAnnIndex, MutateConfig
+
+_SHARD_DIR = "shard-{:d}"
 
 
 class MutableShardedAnnIndex:
@@ -47,22 +53,12 @@ class MutableShardedAnnIndex:
     def __init__(self, indexes: List[AnnIndex],
                  config: MutateConfig = MutateConfig(),
                  spec: Optional[SearchSpec] = None, *,
-                 shard_timeout_s: Optional[float] = None):
+                 shard_timeout_s: Optional[float] = None,
+                 durable_dir: Optional[str] = None):
         if not indexes:
             raise ValueError("need at least one shard")
         child_cfg = dataclasses.replace(config, auto_merge="off")
-        self.config = config
-        self.default_spec = spec if spec is not None else DEFAULT_SEARCH
-        self.shard_timeout_s = shard_timeout_s
-        self.shards: List[MutableAnnIndex] = []
-        self._ext_to_shard: Dict[int, int] = {}
-        self._next_ext = 0
-        self._merge_threads: Dict[int, threading.Thread] = {}
-        # pool only when a timeout is configured: the serial path has no
-        # per-search executor overhead and identical degradation semantics
-        self._pool = (ThreadPoolExecutor(
-            max_workers=len(indexes), thread_name_prefix="shard-search")
-            if shard_timeout_s is not None else None)
+        self._init_common(config, spec, len(indexes), shard_timeout_s)
         for s, idx in enumerate(indexes):
             child = MutableAnnIndex(idx, config=child_cfg, spec=spec)
             # children hand out their own ids starting at their local n;
@@ -73,6 +69,37 @@ class MutableShardedAnnIndex:
                 self._ext_to_shard[ge] = s
                 self._next_ext += 1
             self.shards.append(child)
+        if durable_dir is not None:
+            # per-shard stores attach AFTER the remap above, so the initial
+            # checkpoints capture GLOBAL ids; the parent manifest lands
+            # last — its existence implies every shard dir is complete
+            for s, child in enumerate(self.shards):
+                child._init_durable(
+                    os.path.join(durable_dir, _SHARD_DIR.format(s)))
+            write_manifest(durable_dir, self._parent_manifest())
+
+    def _init_common(self, config: MutateConfig, spec: Optional[SearchSpec],
+                     n_shards: int, shard_timeout_s: Optional[float]):
+        """Field setup shared by ``__init__`` and ``recover``."""
+        self.config = config
+        self.default_spec = spec if spec is not None else DEFAULT_SEARCH
+        self.shard_timeout_s = shard_timeout_s
+        self.shards: List[MutableAnnIndex] = []
+        self._ext_to_shard: Dict[int, int] = {}
+        self._next_ext = 0
+        self._merge_threads: Dict[int, threading.Thread] = {}
+        # pool only when a timeout is configured: the serial path has no
+        # per-search executor overhead and identical degradation semantics
+        self._pool = (ThreadPoolExecutor(
+            max_workers=n_shards, thread_name_prefix="shard-search")
+            if shard_timeout_s is not None else None)
+
+    def _parent_manifest(self) -> Manifest:
+        """The parent binding: no checkpoint/segments of its own — the
+        per-shard truth lives in ``shard-*/MANIFEST``."""
+        return Manifest(checkpoint=None, segments=[],
+                        meta={"kind": "mutable-sharded",
+                              "n_shards": len(self.shards)})
 
     @staticmethod
     def _remap_child_ext(child: MutableAnnIndex, old: int, new: int):
@@ -277,3 +304,67 @@ class MutableShardedAnnIndex:
     @property
     def epochs(self) -> Tuple[int, ...]:
         return tuple(sh.epoch for sh in self.shards)
+
+    # --- persistence (DESIGN.md §11) --------------------------------------
+    def save(self, dirname: str):
+        """Export the full live state to a fresh durable directory: one
+        checkpoint + empty WAL per shard under ``shard-<i>/``, bound by a
+        parent ``MANIFEST``.  Unlike ``MutableAnnIndex.save`` this loses
+        NOTHING — unmerged deltas and tombstones ride in the checkpoints.
+        ``load`` (or ``recover``) reads it back; refuses a directory that
+        already holds durable state.
+        """
+        self.wait_for_merges()
+        for s, child in enumerate(self.shards):
+            sd = os.path.join(dirname, _SHARD_DIR.format(s))
+            store = DurableStore.create(
+                sd, fsync=self.config.wal_fsync,
+                fsync_interval_s=self.config.wal_fsync_interval_s,
+                meta={"kind": "mutable-index"})
+            store.publish_checkpoint(child._checkpoint_payload())
+            store.close()
+        write_manifest(dirname, self._parent_manifest())
+
+    @classmethod
+    def load(cls, dirname: str, config: MutateConfig = MutateConfig(),
+             spec: Optional[SearchSpec] = None, *,
+             shard_timeout_s: Optional[float] = None
+             ) -> "MutableShardedAnnIndex":
+        """Read a ``save``d (or crashed durable) directory WITHOUT taking
+        over its log: the result mutates in memory only."""
+        return cls.recover(dirname, config=config, spec=spec,
+                           shard_timeout_s=shard_timeout_s, attach=False)
+
+    @classmethod
+    def recover(cls, dirname: str, config: MutateConfig = MutateConfig(),
+                spec: Optional[SearchSpec] = None, *,
+                shard_timeout_s: Optional[float] = None,
+                attach: bool = True) -> "MutableShardedAnnIndex":
+        """Rebuild every shard from ``shard-<i>/`` (checkpoint + WAL
+        replay, see ``MutableAnnIndex.recover``) and re-derive the parent's
+        routing state: ``_ext_to_shard`` from each shard's live ids and the
+        global id allocator from the max of the shards' allocators.  With
+        ``attach=True`` the shards keep logging into their WALs."""
+        m = read_manifest(dirname)
+        n_shards = int(m.meta.get("n_shards", 0))
+        if m.meta.get("kind") != "mutable-sharded" or n_shards <= 0:
+            raise CorruptIndexError(
+                f"{dirname}: parent manifest is not a mutable-sharded "
+                f"binding (meta={m.meta!r})")
+        child_cfg = dataclasses.replace(config, auto_merge="off")
+        obj = cls.__new__(cls)
+        obj._init_common(config, spec, n_shards, shard_timeout_s)
+        for s in range(n_shards):
+            child = MutableAnnIndex.recover(
+                os.path.join(dirname, _SHARD_DIR.format(s)),
+                config=child_cfg, spec=spec, attach=attach)
+            for e in child.live_ids():
+                obj._ext_to_shard[int(e)] = s
+            obj._next_ext = max(obj._next_ext, child._next_ext)
+            obj.shards.append(child)
+        return obj
+
+    def close(self):
+        """Release every shard's WAL writer (final fsync included)."""
+        for sh in self.shards:
+            sh.close()

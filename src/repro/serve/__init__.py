@@ -18,14 +18,15 @@ from repro.serve.backends import (MutableIndexSession,
                                   make_session)
 from repro.serve.bucketing import (DEFAULT_BUCKETS, bucket_for, pad_to_bucket,
                                    validate_buckets)
-from repro.serve.frontend import (DeadlineExceeded, QueueFull,
-                                  RequestRejected, ServeFrontend,
+from repro.serve.frontend import (DeadlineExceeded, FrontendStopped,
+                                  QueueFull, RequestRejected, ServeFrontend,
                                   WorkerFailure)
 from repro.serve.telemetry import BucketStats, ServeTelemetry
 
 __all__ = [
     "ServeFrontend", "ServeTelemetry", "BucketStats",
     "RequestRejected", "QueueFull", "DeadlineExceeded", "WorkerFailure",
+    "FrontendStopped",
     "DEFAULT_BUCKETS", "bucket_for", "pad_to_bucket", "validate_buckets",
     "SingleIndexSession", "ShardedIndexSession", "MutableIndexSession",
     "MutableShardedIndexSession",

@@ -66,6 +66,10 @@ class SingleIndexSession:
     def compile_count(self) -> int:
         return self._fn._cache_size()
 
+    def health(self) -> dict:
+        return {"kind": "single", "n": int(self.index.graph.n),
+                "degraded": False}
+
     def sample_query(self) -> np.ndarray:
         return np.asarray(self.index.graph.vectors[0], np.float32)
 
@@ -102,6 +106,11 @@ class ShardedIndexSession:
 
     def compile_count(self) -> int:
         return self._fn._cache_size()
+
+    def health(self) -> dict:
+        return {"kind": "sharded",
+                "n_shards": int(self.index.arrays.vectors.shape[0]),
+                "degraded": False}
 
     def sample_query(self) -> np.ndarray:
         return np.asarray(self.index.arrays.vectors[0, 0], np.float32)
@@ -146,6 +155,16 @@ class MutableIndexSession:
         # engines across every snapshot generation + the delta-scan kernels
         return self.index.compile_count()
 
+    def health(self) -> dict:
+        idx = self.index
+        return {"kind": "mutable", "n_live": int(idx.n_live),
+                "epoch": int(idx.epoch),
+                "quarantined": bool(idx.quarantined),
+                "degraded": bool(idx.quarantined),
+                "merge_error": (repr(idx.merge_error)
+                                if idx.merge_error is not None else None),
+                "durable": idx._durable is not None}
+
     def sample_query(self) -> np.ndarray:
         g = self.index._state.snapshot.index.graph
         return np.asarray(g.vectors[0], np.float32)
@@ -187,6 +206,16 @@ class MutableShardedIndexSession:
         # per-shard engines across snapshot generations + the (shared)
         # delta-scan kernels counted once
         return self.index.compile_count()
+
+    def health(self) -> dict:
+        idx = self.index
+        quarantined = list(idx.quarantined_shards)
+        return {"kind": "mutable-sharded", "n_live": int(idx.n_live),
+                "n_shards": len(idx.shards),
+                "epochs": [int(e) for e in idx.epochs],
+                "quarantined_shards": quarantined,
+                "degraded": bool(quarantined),
+                "durable": any(sh._durable is not None for sh in idx.shards)}
 
     def sample_query(self) -> np.ndarray:
         g = self.index.shards[0]._state.snapshot.index.graph

@@ -64,6 +64,11 @@ class DeadlineExceeded(RequestRejected):
     """The request's deadline passed while it waited in the queue."""
 
 
+class FrontendStopped(RequestRejected):
+    """``submit()`` after ``stop()``: the frontend is no longer accepting
+    requests.  ``start()`` reopens it."""
+
+
 class WorkerFailure(RuntimeError):
     """The background flush loop itself failed (NOT a per-batch engine
     error — those resolve onto their batch's futures).  Stored on the
@@ -110,6 +115,7 @@ class ServeFrontend:
         self._worker: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._wake = threading.Event()
+        self._stopped = False                   # stop() called, no start() yet
         self.worker_error: Optional[BaseException] = None
         self._base = self._session(spec)
         if warmup:
@@ -173,6 +179,9 @@ class ServeFrontend:
         admission deadline.  Raises ``RequestRejected``/``QueueFull``
         synchronously — an admitted future always resolves.
         """
+        if self._stopped:
+            raise FrontendStopped(
+                "frontend is stopped; call start() to accept requests again")
         self._raise_worker_error()
         with self._lock:
             self.telemetry.submitted += 1
@@ -334,9 +343,32 @@ class ServeFrontend:
                 t1 - r.t_submit, t0 - r.t_submit)
             lo = hi
 
+    # --- health -----------------------------------------------------------
+    def health(self) -> dict:
+        """Operational state as a plain dict (launcher/monitoring surface):
+        acceptance + worker liveness, queue depth, any stored worker error,
+        and the backend session's own degraded/quarantined state."""
+        with self._lock:
+            h = {
+                "stopped": self._stopped,
+                "worker_alive": (self._worker is not None
+                                 and self._worker.is_alive()),
+                "queue_depth_rows": self._pending_rows,
+                "queued_requests": sum(len(s.queue)
+                                       for s in self._sessions.values()),
+                "sessions": len(self._sessions),
+                "worker_error": (repr(self.worker_error)
+                                 if self.worker_error is not None else None),
+                "worker_errors_total": self.telemetry.worker_errors,
+            }
+        h["backend"] = self._base.engine.health()
+        return h
+
     # --- background worker --------------------------------------------------
     def start(self, poll_s: float = 0.05) -> "ServeFrontend":
-        """Spawn the daemon flush loop ("serve forever" mode)."""
+        """Spawn the daemon flush loop ("serve forever" mode).  Also
+        reopens a ``stop()``ed frontend for submissions."""
+        self._stopped = False
         if self._worker is not None:
             return self
         self._stop.clear()
@@ -361,13 +393,18 @@ class ServeFrontend:
         return self
 
     def stop(self):
-        """Stop the worker and drain what is still queued."""
-        if self._worker is None:
+        """Stop accepting requests, stop the worker, and drain what is
+        still queued (an admitted future always resolves).  Idempotent —
+        a second ``stop()`` is a no-op; ``submit()`` afterwards raises
+        ``FrontendStopped`` until ``start()`` reopens the frontend."""
+        if self._stopped:
             return
-        self._stop.set()
-        self._wake.set()
-        self._worker.join()
-        self._worker = None
+        self._stopped = True
+        if self._worker is not None:
+            self._stop.set()
+            self._wake.set()
+            self._worker.join()
+            self._worker = None
         self.flush()
 
     def __enter__(self) -> "ServeFrontend":

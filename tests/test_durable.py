@@ -1,0 +1,458 @@
+"""Durable mutations (ISSUE 8 tentpole): WAL framing + recovery rules,
+fsync policies, checkpoint/rotation state machine, sharded persistence,
+and the kill-at-every-site chaos suite proving zero acknowledged loss and
+zero deleted-id resurrection across crash + recover."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import fault
+from repro.core.index import AnnIndex
+from repro.core.spec import SearchSpec
+from repro.durable import (Manifest, SegmentWriter, WalFailedError,
+                           damage_file, read_manifest, read_npz_verified,
+                           read_segment, write_manifest)
+from repro.durable import wal
+from repro.fault import CorruptIndexError, FaultInjected
+from repro.mutate import MutableAnnIndex, MutableShardedAnnIndex, MutateConfig
+
+SPEC = SearchSpec(k=5, efs=24, router="crouting")
+HNSW_KW = dict(m=8, efc=48)
+
+
+@pytest.fixture(autouse=True)
+def _disarm_all():
+    yield
+    fault.disarm()
+
+
+@pytest.fixture(scope="module")
+def base_index(small_ds):
+    return AnnIndex.build(small_ds.base[:400], graph="hnsw", **HNSW_KW)
+
+
+def _cfg(**kw):
+    base = dict(delta_capacity=64, auto_merge="off", graph="hnsw",
+                graph_kw=dict(HNSW_KW))
+    base.update(kw)
+    return MutateConfig(**base)
+
+
+def _durable(base_index, dirname, **cfg_kw):
+    cfg = _cfg(**cfg_kw)
+    return MutableAnnIndex(base_index, config=cfg,
+                           durable_dir=str(dirname)), cfg
+
+
+# --------------------------------------------------------------------------
+# WAL unit: framing, CRC, torn-tail vs mid-log rules
+# --------------------------------------------------------------------------
+def test_wal_roundtrip_insert_delete(tmp_path):
+    p = str(tmp_path / "w.log")
+    w = SegmentWriter(p, fsync="every")
+    vecs = np.arange(12, dtype=np.float32).reshape(3, 4)
+    l0 = w.append(wal.encode_insert, np.array([7, 8, 9]), vecs)
+    l1 = w.append(wal.encode_delete, np.array([8]))
+    w.wait_durable(l1)
+    w.close()
+    recs, valid_len, torn = read_segment(p, final=True)
+    assert not torn and valid_len == os.path.getsize(p)
+    assert [r.lsn for r in recs] == [l0, l1] == [0, 1]
+    np.testing.assert_array_equal(recs[0].ext_ids, [7, 8, 9])
+    np.testing.assert_array_equal(recs[0].vectors, vecs)
+    np.testing.assert_array_equal(recs[1].ext_ids, [8])
+
+
+def test_torn_tail_tolerated_only_on_final_segment(tmp_path):
+    p = str(tmp_path / "w.log")
+    w = SegmentWriter(p, fsync="off")
+    w.append(wal.encode_delete, np.array([1]))
+    w.append(wal.encode_delete, np.array([2]))
+    w.close()
+    good = os.path.getsize(p)
+    with open(p, "ab") as f:          # half a frame: a torn write
+        f.write(wal.frame(wal.encode_delete(2, np.array([3])))[:9])
+    recs, valid_len, torn = read_segment(p, final=True)
+    assert torn and valid_len == good and len(recs) == 2
+    # the SAME bytes in a non-final segment are mid-log corruption
+    with pytest.raises(CorruptIndexError, match="non-final"):
+        read_segment(p, final=False)
+
+
+def test_crc_damage_midlog_raises_final_frame_tolerated(tmp_path):
+    p = str(tmp_path / "w.log")
+    w = SegmentWriter(p, fsync="off")
+    for i in range(3):
+        w.append(wal.encode_delete, np.array([i]))
+    w.close()
+    size = os.path.getsize(p)
+    frame_len = size // 3
+    # flip a payload byte of the LAST frame: torn in-place write -> tolerated
+    with open(p, "r+b") as f:
+        f.seek(size - 1)
+        b = f.read(1)
+        f.seek(size - 1)
+        f.write(bytes([b[0] ^ 0xFF]))
+    recs, valid_len, torn = read_segment(p, final=True)
+    assert torn and len(recs) == 2 and valid_len == 2 * frame_len
+    # flip a byte of the FIRST frame: valid bytes follow -> corruption
+    with open(p, "r+b") as f:
+        f.seek(frame_len - 1)
+        b = f.read(1)
+        f.seek(frame_len - 1)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(CorruptIndexError, match="mid-log"):
+        read_segment(p, final=True)
+
+
+@pytest.mark.parametrize("policy", ["every", "interval", "off"])
+def test_fsync_policies_ack_and_replay(tmp_path, policy):
+    p = str(tmp_path / "w.log")
+    w = SegmentWriter(p, fsync=policy, interval_s=0.001)
+    lsns = [w.append(wal.encode_delete, np.array([i])) for i in range(5)]
+    for lsn in lsns:
+        w.wait_durable(lsn)          # the ack point, whatever the policy
+    w.close()
+    recs, _, torn = read_segment(p, final=True)
+    assert not torn and [r.lsn for r in recs] == lsns
+
+
+def test_group_commit_concurrent_acks(tmp_path):
+    """N threads append+ack concurrently; every ack returns and the log
+    holds every record exactly once, in LSN order."""
+    p = str(tmp_path / "w.log")
+    w = SegmentWriter(p, fsync="interval", interval_s=0.002)
+    errs = []
+
+    def one(i):
+        try:
+            w.wait_durable(w.append(wal.encode_delete, np.array([i])))
+        except Exception as e:   # noqa: BLE001 — collected for the assert
+            errs.append(e)
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    w.close()
+    assert not errs
+    recs, _, torn = read_segment(p, final=True)
+    assert not torn
+    assert [r.lsn for r in recs] == list(range(16))
+
+
+def test_fsync_failure_poisons_writer(tmp_path):
+    p = str(tmp_path / "w.log")
+    w = SegmentWriter(p, fsync="every")
+    lsn = w.append(wal.encode_delete, np.array([1]))
+    fault.arm("wal.fsync", kind="raise", hits={0})
+    with pytest.raises(FaultInjected):
+        w.wait_durable(lsn)
+    fault.disarm()
+    # poisoned: the in-memory side may be ahead of the log
+    with pytest.raises(WalFailedError):
+        w.append(wal.encode_delete, np.array([2]))
+    with pytest.raises(WalFailedError):
+        w.wait_durable(lsn)
+
+
+# --------------------------------------------------------------------------
+# manifest
+# --------------------------------------------------------------------------
+def test_manifest_roundtrip_and_damage(tmp_path):
+    d = str(tmp_path)
+    m = Manifest(checkpoint="checkpoint-00000001.npz",
+                 segments=["wal-00000001.log"], next_lsn=17,
+                 meta={"kind": "mutable-index"})
+    write_manifest(d, m)
+    back = read_manifest(d)
+    assert back == m
+    path = os.path.join(d, "MANIFEST")
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:       # flip a digit inside the JSON body
+        f.write(raw.replace(b"17", b"18"))
+    with pytest.raises(CorruptIndexError, match="CRC"):
+        read_manifest(d)
+    with open(path, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(CorruptIndexError):
+        read_manifest(d)
+
+
+def test_checkpoint_write_damage_detected(tmp_path, base_index):
+    mi, cfg = _durable(base_index, tmp_path / "d")
+    name = mi.checkpoint()
+    mi.close()
+    path = str(tmp_path / "d" / name)
+    damage_file(path, "truncate")
+    with pytest.raises(CorruptIndexError):
+        read_npz_verified(path)
+    with pytest.raises(CorruptIndexError):
+        MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+
+
+# --------------------------------------------------------------------------
+# recovery basics: roundtrip, torn tail via the truncate failpoint kind,
+# double recovery, checkpoint rotation + prune
+# --------------------------------------------------------------------------
+def test_recover_roundtrip_inserts_deletes(tmp_path, small_ds, base_index):
+    mi, cfg = _durable(base_index, tmp_path / "d")
+    ids = mi.insert(small_ds.base[400:430])
+    mi.delete([0, 5, int(ids[2])])
+    mi.close()
+    back = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    assert back.n_live == mi.n_live == 400 + 30 - 3
+    np.testing.assert_array_equal(back.live_ids(), mi.live_ids())
+    assert back._next_ext == mi._next_ext
+    # recovered index searches (and its profile came along)
+    out, _, _ = back.search(small_ds.queries[:4], spec=SPEC)
+    assert (out >= 0).all()
+
+
+def test_torn_tail_recovery_via_truncate_failpoint(tmp_path, small_ds,
+                                                   base_index):
+    """ISSUE 8 satellite: the existing ``truncate`` failpoint kind writes
+    half a frame (a torn write) — recovery truncates it away and keeps
+    exactly the acked history."""
+    mi, cfg = _durable(base_index, tmp_path / "d")
+    mi.insert(small_ds.base[400:420])          # acked
+    acked = mi.live_ids()
+    fault.arm("wal.append", kind="truncate", hits={0})
+    with pytest.raises(FaultInjected):
+        mi.insert(small_ds.base[420:425])      # torn mid-frame, never acked
+    fault.disarm()
+    # the writer is poisoned — even in-memory acks now refuse
+    with pytest.raises(WalFailedError):
+        mi.insert(small_ds.base[425:430])
+    back = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    np.testing.assert_array_equal(back.live_ids(), acked)
+    # the torn bytes were truncated off the segment on disk: a second
+    # recovery reads a clean log
+    back.close()
+    again = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    np.testing.assert_array_equal(again.live_ids(), acked)
+
+
+def test_double_recovery_idempotence(tmp_path, small_ds, base_index):
+    """recover -> mutate -> crash -> recover again replays the combined
+    log onto the same checkpoint without duplicating or resurrecting."""
+    mi, cfg = _durable(base_index, tmp_path / "d")
+    ids = mi.insert(small_ds.base[400:420])
+    mi.delete([int(ids[0]), 3])
+    mi.close()                                  # "crash" #1
+    r1 = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    ids2 = r1.insert(small_ds.base[420:430])
+    r1.delete([int(ids2[1]), int(ids[5]), 9])
+    want = r1.live_ids()
+    r1.close()                                  # "crash" #2
+    r2 = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    np.testing.assert_array_equal(r2.live_ids(), want)
+    assert r2._next_ext == r1._next_ext
+    # and the tombstoned ids stay dead
+    for e in (int(ids[0]), 3, int(ids2[1]), int(ids[5]), 9):
+        with pytest.raises(KeyError):
+            r2.delete([e])
+
+
+def test_checkpoint_rotates_and_prunes(tmp_path, small_ds, base_index):
+    mi, cfg = _durable(base_index, tmp_path / "d")
+    mi.insert(small_ds.base[400:420])
+    name = mi.checkpoint()
+    files = set(os.listdir(tmp_path / "d"))
+    # exactly one checkpoint + one (fresh) segment survive the prune
+    assert files == {"MANIFEST", name, "wal-00000002.log"}
+    m = read_manifest(str(tmp_path / "d"))
+    assert m.checkpoint == name and m.segments == ["wal-00000002.log"]
+    # post-checkpoint mutations land in the new segment and recover fine
+    mi.delete([0])
+    mi.close()
+    back = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    np.testing.assert_array_equal(back.live_ids(), mi.live_ids())
+
+
+def test_merge_checkpoints_and_recovers(tmp_path, small_ds, base_index):
+    """checkpoint_on_merge: a successful merge rotates + publishes, so
+    recovery replays only post-merge mutations onto the merged graph."""
+    mi, cfg = _durable(base_index, tmp_path / "d")
+    mi.insert(small_ds.base[400:440])
+    mi.delete(list(range(10)))
+    mi.merge()
+    m = read_manifest(str(tmp_path / "d"))
+    assert m.checkpoint == "checkpoint-00000002.npz"
+    mi.insert(small_ds.base[440:450])
+    mi.close()
+    back = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    assert back.epoch == mi.epoch == 1
+    np.testing.assert_array_equal(back.live_ids(), mi.live_ids())
+    # the recovered delta holds only the post-checkpoint rows
+    assert back._state.delta.count == 10
+
+
+def test_replay_merges_when_delta_overflows(tmp_path, small_ds, base_index):
+    """A log longer than the delta capacity replays through mid-recovery
+    merges instead of failing."""
+    mi, cfg = _durable(base_index, tmp_path / "d", delta_capacity=16,
+                       checkpoint_on_merge=False)
+    for i in range(5):
+        mi.insert(small_ds.base[400 + 10 * i:410 + 10 * i])
+        if mi._state.delta.room < 10:
+            mi.merge()          # no checkpoint: the log keeps everything
+    mi.close()
+    back = MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+    np.testing.assert_array_equal(back.live_ids(), mi.live_ids())
+
+
+def test_create_refuses_existing_state(tmp_path, base_index):
+    _durable(base_index, tmp_path / "d")
+    with pytest.raises(ValueError, match="already holds durable state"):
+        _durable(base_index, tmp_path / "d")
+
+
+def test_mutations_without_durable_dir_unchanged(base_index, small_ds):
+    """No durable_dir -> no WAL anywhere near the mutation path."""
+    mi = MutableAnnIndex(base_index, config=_cfg())
+    mi.insert(small_ds.base[400:410])
+    assert mi._durable is None
+    with pytest.raises(ValueError, match="durable store"):
+        mi.checkpoint()
+
+
+# --------------------------------------------------------------------------
+# kill-at-every-site chaos suite: zero acked loss, zero resurrections
+# --------------------------------------------------------------------------
+CHAOS_SITES = ["wal.append", "wal.fsync", "wal.rotate", "checkpoint.write",
+               "manifest.rename"]
+
+
+def _chaos_run(site, dirname, small_ds, base_index):
+    """Acked mutations -> seeded crash at ``site`` -> recover.  Returns
+    (acked_live_ids, deleted_ids, recovered_index)."""
+    mi, cfg = _durable(base_index, dirname)
+    ids = mi.insert(small_ds.base[400:430])     # acked
+    deleted = [int(ids[1]), int(ids[7]), 11]
+    mi.delete(deleted)                          # acked
+    acked = mi.live_ids()
+    fault.arm(site, kind="raise", hits={0})
+    crashed = False
+    try:
+        mi.insert(small_ds.base[430:440])       # never acked if it raises
+    except (FaultInjected, WalFailedError):
+        crashed = True
+    if not crashed:
+        # sites on the checkpoint path only fire there
+        try:
+            mi.checkpoint()
+        except (FaultInjected, WalFailedError):
+            crashed = True
+    assert crashed, f"failpoint {site} never fired"
+    fault.disarm()
+    back = MutableAnnIndex.recover(str(dirname), config=cfg)
+    return acked, deleted, back
+
+
+@pytest.mark.parametrize("site", CHAOS_SITES)
+def test_chaos_kill_site_zero_acked_loss(site, tmp_path, small_ds,
+                                         base_index):
+    acked, deleted, back = _chaos_run(site, tmp_path / "d", small_ds,
+                                      base_index)
+    recovered = set(map(int, back.live_ids()))
+    # zero acknowledged loss: every acked-live id survives recovery
+    missing = set(map(int, acked)) - recovered
+    assert not missing, f"{site}: lost acked ids {sorted(missing)}"
+    # zero resurrection: every acked delete stays dead
+    raised = recovered & set(deleted)
+    assert not raised, f"{site}: resurrected deleted ids {sorted(raised)}"
+    # the recovered index is fully operational (mutate + search + ack)
+    back.insert(small_ds.base[440:442])
+    out, _, _ = back.search(small_ds.queries[:2], spec=SPEC)
+    assert (out >= 0).all()
+
+
+def test_chaos_midlog_corruption_refuses_replay(tmp_path, small_ds,
+                                                base_index):
+    """The ``corrupt`` kind damages a frame while appends continue —
+    recovery must refuse the log instead of silently dropping acked
+    records."""
+    mi, cfg = _durable(base_index, tmp_path / "d", wal_fsync="off")
+    mi.insert(small_ds.base[400:410])
+    fault.arm("wal.append", kind="corrupt", hits={0})
+    mi.insert(small_ds.base[410:415])           # damaged frame
+    fault.disarm()
+    mi.insert(small_ds.base[415:420])           # valid bytes AFTER it
+    mi.close()
+    with pytest.raises(CorruptIndexError, match="mid-log|CRC"):
+        MutableAnnIndex.recover(str(tmp_path / "d"), config=cfg)
+
+
+# --------------------------------------------------------------------------
+# sharded persistence + sharded chaos
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def shard_indexes(small_ds):
+    return [AnnIndex.build(small_ds.base[s * 150:(s + 1) * 150],
+                           graph="hnsw", **HNSW_KW) for s in range(3)]
+
+
+def test_sharded_save_load_roundtrip(tmp_path, small_ds, shard_indexes):
+    cfg = _cfg()
+    ms = MutableShardedAnnIndex(shard_indexes, config=cfg)
+    ids = ms.insert(small_ds.base[450:470])
+    ms.delete([0, 160, int(ids[3])])
+    d = str(tmp_path / "exp")
+    ms.save(d)
+    back = MutableShardedAnnIndex.load(d, config=cfg)
+    assert back.n_live == ms.n_live
+    for sh_a, sh_b in zip(ms.shards, back.shards):
+        np.testing.assert_array_equal(sh_a.live_ids(), sh_b.live_ids())
+        assert sh_b._durable is None           # load does not take the log
+    assert back._next_ext == ms._next_ext
+    # a loaded index keeps serving and mutating (in memory)
+    back.insert(small_ds.base[470:475])
+    out, _, _ = back.search(small_ds.queries[:3], spec=SPEC)
+    assert (out >= 0).all()
+
+
+def test_sharded_durable_recover_and_routing(tmp_path, small_ds,
+                                             shard_indexes):
+    cfg = _cfg()
+    d = str(tmp_path / "d")
+    ms = MutableShardedAnnIndex(shard_indexes, config=cfg, durable_dir=d)
+    ids = ms.insert(small_ds.base[450:480])
+    ms.delete([int(ids[0]), 5, 310])
+    ms.close()
+    back = MutableShardedAnnIndex.recover(d, config=cfg)
+    assert back.n_live == ms.n_live
+    l1 = np.sort(np.concatenate([sh.live_ids() for sh in ms.shards]))
+    l2 = np.sort(np.concatenate([sh.live_ids() for sh in back.shards]))
+    np.testing.assert_array_equal(l1, l2)
+    # routing state rebuilt: deletes find their shard, allocation resumes
+    # globally unique
+    back.delete([int(ids[4])])
+    new = back.insert(small_ds.base[480:485])
+    assert int(new[0]) >= ms._next_ext
+
+
+@pytest.mark.parametrize("site", ["wal.append", "wal.fsync"])
+def test_sharded_chaos_zero_acked_loss(site, tmp_path, small_ds,
+                                       shard_indexes):
+    cfg = _cfg()
+    d = str(tmp_path / "d")
+    ms = MutableShardedAnnIndex(shard_indexes, config=cfg, durable_dir=d)
+    ids = ms.insert(small_ds.base[450:480])     # acked
+    deleted = [int(ids[2]), 7, 320]
+    ms.delete(deleted)                          # acked
+    acked = np.sort(np.concatenate([sh.live_ids() for sh in ms.shards]))
+    fault.arm(site, kind="raise", hits={0})
+    with pytest.raises((FaultInjected, WalFailedError)):
+        ms.insert(small_ds.base[480:490])       # crashes in one shard's WAL
+    fault.disarm()
+    back = MutableShardedAnnIndex.recover(d, config=cfg)
+    recovered = set(
+        int(e) for sh in back.shards for e in sh.live_ids())
+    missing = set(map(int, acked)) - recovered
+    assert not missing, f"{site}: lost acked ids {sorted(missing)}"
+    raised = recovered & set(deleted)
+    assert not raised, f"{site}: resurrected deleted ids {sorted(raised)}"

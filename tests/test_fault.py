@@ -154,6 +154,38 @@ def test_retry_call_recovers_then_propagates():
     assert calls["n"] == 4
 
 
+def test_retry_max_elapsed_truncates_budget():
+    """ISSUE 8 satellite: the summed backoff sleeps never exceed
+    ``max_elapsed_s`` — the last delay is truncated to exactly exhaust
+    the budget, then the schedule stops."""
+    p = RetryPolicy(max_attempts=10, base_s=0.04, cap_s=0.04, jitter=0.0,
+                    max_elapsed_s=0.10, seed=0)
+    ds = list(p.delays())
+    assert ds == [0.04, 0.04, pytest.approx(0.02)]
+    assert sum(ds) == pytest.approx(0.10)
+    # deterministic: the schedule replays identically
+    assert list(p.delays()) == ds
+
+    # the budget also bounds call(): attempts stop once sleeps exhaust it
+    sleeps, calls = [], {"n": 0}
+
+    def always_fails():
+        calls["n"] += 1
+        raise ValueError("transient")
+
+    with pytest.raises(ValueError, match="transient"):
+        p.call(always_fails, sleep=sleeps.append)
+    assert calls["n"] == 4 and sum(sleeps) == pytest.approx(0.10)
+
+    # a zero budget degenerates to a single attempt, raw error out
+    p0 = RetryPolicy(max_attempts=10, base_s=0.04, max_elapsed_s=0.0)
+    assert list(p0.delays()) == []
+    calls["n"] = 0
+    with pytest.raises(ValueError):
+        p0.call(always_fails, sleep=sleeps.append)
+    assert calls["n"] == 1
+
+
 def test_retry_on_filters_exception_types():
     def bad():
         raise KeyError("not transient")

@@ -2,6 +2,7 @@
 merge + snapshot swap, serving across a merge with zero recompiles, cache
 hygiene over many merge cycles, and per-shard delta staggering."""
 import dataclasses
+import warnings
 
 import numpy as np
 import pytest
@@ -212,12 +213,25 @@ def test_profile_refresh_policy(mds):
     assert p2 is not p0 and p2.corpus_n == 1400
 
 
-def test_save_forces_merge_and_roundtrips(tmp_path, mds):
+def test_save_is_snapshot_only_and_warns(tmp_path, mds):
+    """ISSUE 8 satellite: ``save`` persists only the merged snapshot and
+    must say so — warning (or raising under ``strict=True``) whenever
+    unmerged delta rows / tombstones would be silently dropped."""
     mi = _mutable(mds, 900, auto="off", cap=64)
     mi.insert(mds.base[900:940])
     mi.delete(list(range(0, 20)))
     path = str(tmp_path / "mut.npz")
-    mi.save(path)
+    with pytest.warns(UserWarning, match="snapshot-only"):
+        mi.save(path)
+    back = AnnIndex.load(path)
+    assert back.graph.n == 900          # pre-merge snapshot: mutations absent
+    with pytest.raises(ValueError, match="snapshot-only"):
+        mi.save(path, strict=True)
+    # after an explicit merge the save is complete — and silent
+    mi.merge()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mi.save(path)
     back = AnnIndex.load(path)
     assert back.graph.n == 920          # 900 - 20 + 40, delta drained
     assert mi.epoch >= 1

@@ -276,6 +276,44 @@ def test_worker_thread_serves(built, queries):
     assert [o[0].shape[0] for o in outs] == [1, 3, 8]
 
 
+def test_health_reports_frontend_and_backend(built, queries):
+    """ISSUE 8 satellite: one structured health() dict for probes."""
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    h = fe.health()
+    assert h["stopped"] is False and h["worker_alive"] is False
+    assert h["queue_depth_rows"] == 0 and h["queued_requests"] == 0
+    assert h["worker_error"] is None and h["worker_errors_total"] == 0
+    assert h["backend"]["kind"] == "single"
+    assert h["backend"]["degraded"] is False
+    fe.submit(queries[:3])                       # queued, worker not running
+    h = fe.health()
+    assert h["queue_depth_rows"] == 3 and h["queued_requests"] == 1
+    with fe:
+        assert fe.health()["worker_alive"] is True
+    h = fe.health()
+    assert h["stopped"] is True and h["worker_alive"] is False
+
+
+def test_stop_idempotent_and_submit_after_stop_rejected(built, queries):
+    from repro.serve import FrontendStopped
+
+    fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
+    fe.start()
+    fut = fe.submit(queries[:2])
+    fe.stop()
+    assert fut.result(timeout=30)[0].shape[0] == 2   # drained on stop
+    fe.stop()                                        # idempotent: no error
+    fe.stop()
+    with pytest.raises(FrontendStopped):
+        fe.submit(queries[:1])
+    # FrontendStopped is a RequestRejected: admission-error handlers catch it
+    assert issubclass(FrontendStopped, RequestRejected)
+    # start() reopens the frontend
+    with fe.start():
+        out = fe.submit(queries[:2]).result(timeout=30)
+    assert out[0].shape[0] == 2
+
+
 def test_telemetry_summary_folds_search_stats(built, queries):
     fe = _frontend(built, SearchSpec(efs=32, router="crouting"))
     for n in (1, 3, 8):
