@@ -1,7 +1,8 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
 .PHONY: verify test lint bench bench-engine bench-smoke bench-serve-smoke \
-	bench-mutate-smoke bench-chaos-smoke bench-recovery-smoke
+	bench-mutate-smoke bench-chaos-smoke bench-recovery-smoke \
+	bench-autotune-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -36,6 +37,14 @@ bench-smoke:
 bench-serve-smoke:
 	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
 		python -m benchmarks.run --only serve
+
+# CI tier: shrunk two-phase shifting trace through the autotuned frontend —
+# screen/probe/decide/pre-warm-then-switch all exercised per-PR with the
+# zero-recompile invariant asserted.  Results go to .cache/, never to
+# BENCH_autotune.json.
+bench-autotune-smoke:
+	BENCH_SMOKE=1 BENCH_Q=32 PYTHONPATH=src timeout 420 \
+		python -m benchmarks.run --only autotune
 
 # CI tier: tiny streaming insert+delete trace through the mutable index
 # behind the frontend, spanning a background merge — keeps the delta +

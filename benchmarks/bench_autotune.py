@@ -1,0 +1,199 @@
+"""Autotune benchmark (persisted to committed BENCH_autotune.json).
+
+A two-phase shifting workload replayed against the same index (ISSUE 9
+acceptance):
+
+* **calm**  — solo-flushed small requests: an idle server where every
+  candidate spec meets the SLO, so the best static config is the richest
+  (highest-recall) one;
+* **burst** — groups of ``BURST_DEPTH`` near-top-bucket requests submitted
+  together: each request is its own dispatch, so the tail of a group waits
+  behind the whole queue and the rich spec's p99 blows the SLO.
+
+The SLO is probe-calibrated (``2.5 x`` the richest candidate's solo probe
+latency), so the phase structure — rich spec comfortably feasible solo,
+infeasible under burst queueing, a cheaper candidate feasible under both —
+holds on any machine rather than encoding one box's milliseconds.
+
+Baseline to beat: the **static-best-of-phase-1** grid config (every
+candidate replayed through the full trace on its own frontend).  That
+config degrades after the shift; the autotuned frontend must reach >= its
+SLO attainment on BOTH phases, serve phase-1 recall within 0.01 of it, and
+keep ``recompiles_after_warmup == 0`` across every controller switch.
+``BENCH_SMOKE=1`` shrinks the trace and diverts the JSON to .cache/.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (SMOKE, cached_index, dataset, emit,
+                               persist_bench, smoke_scale)
+from repro.autotune import AutotuneDriver, Objective, RecallProxy, TuneSpace
+from repro.autotune.space import spec_key
+from repro.core.spec import SearchSpec
+from repro.data.vectors import exact_ground_truth, recall_at_k
+from repro.serve import ServeFrontend
+
+BUCKETS = (1, 4, 8) if SMOKE else (1, 8, 32)
+N_CALM = 8 if SMOKE else 24          # phase-1 solo requests
+N_BURST_GROUPS = 3 if SMOKE else 8   # phase-2 groups
+BURST_DEPTH = 4                      # requests per burst group
+CALM_STEP_EVERY = 4                  # controller cadence in phase 1
+SLO_FACTOR = 2.5                     # SLO = factor x rich solo probe lat
+
+
+def _two_phase_trace(top: int, seed: int = 11):
+    """Deterministic request sizes: calm singletons, then burst groups of
+    near-top-bucket requests (each > top/2 rows, so no two coalesce into
+    one dispatch — the queueing is what shifts the workload)."""
+    rng = np.random.default_rng(seed)
+    calm = [int(rng.integers(1, max(2, top // 4) + 1))
+            for _ in range(N_CALM)]
+    bursts = [[int(rng.integers(top // 2 + 1, top + 1))
+               for _ in range(BURST_DEPTH)]
+              for _ in range(N_BURST_GROUPS)]
+    return calm, bursts
+
+
+def _replay_phases(fe: ServeFrontend, queries, gt, calm, bursts,
+                   slo_ms: float, step=None) -> dict:
+    """Replay calm then burst; per-phase SLO attainment + served recall.
+
+    ``step`` (the autotuned run) fires between groups — after every
+    ``CALM_STEP_EVERY`` calm requests, after every burst group — so the
+    controller consumes epoch deltas exactly where an online loop would.
+    """
+    tm = fe.telemetry
+    qpos = 0
+    phases = {}
+    plan = [("calm", [[n] for n in calm], CALM_STEP_EVERY),
+            ("burst", bursts, 1)]
+    for name, groups, step_every in plan:
+        snap0 = tm.window_snapshot()
+        ids_all, gt_all = [], []
+        for gi, group in enumerate(groups):
+            futs = []
+            for n in group:
+                futs.append((fe.submit(queries[qpos:qpos + n]),
+                             gt[qpos:qpos + n]))
+                qpos += n
+            fe.flush()
+            for f, g in futs:
+                ids, _, _ = f.result()
+                ids_all.append(ids)
+                gt_all.append(g)
+            if step is not None and (gi + 1) % step_every == 0:
+                step()
+        snap1 = tm.window_snapshot()
+        served = int(snap1["served"]) - int(snap0["served"])
+        lat = snap1["_lat_s"]
+        ms = np.asarray(lat[len(lat) - min(served, len(lat)):]) * 1e3
+        phases[name] = {
+            "requests": served,
+            "attainment": round(float(np.mean(ms <= slo_ms)), 4),
+            "p50_ms": round(float(np.percentile(ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(ms, 99)), 3),
+            "recall": round(float(recall_at_k(
+                np.concatenate(ids_all), np.concatenate(gt_all), 10)), 4),
+        }
+    return phases
+
+
+def bench_autotune():
+    """Autotuned frontend vs the static grid on the two-phase trace."""
+    # deep-synth + a deliberately weak graph (m=8, efc=48): recall must NOT
+    # saturate across the efs ladder, or every candidate ties at 1.0 and
+    # "best static of phase 1" stops meaning the rich spec
+    ds = dataset("deep-synth", n_base=smoke_scale(6000, 600))
+    idx = cached_index(ds, m=8, efc=48)
+    gt = exact_ground_truth(ds, k=10)
+    top = BUCKETS[-1]
+    calm, bursts = _two_phase_trace(top)
+    need = sum(calm) + sum(map(sum, bursts))
+    q = np.take(ds.queries, np.arange(need) % len(ds.queries), axis=0)
+    gtr = np.take(gt, np.arange(need) % len(ds.queries), axis=0)
+
+    base = SearchSpec(efs=32, k=10, router="crouting")
+    space = TuneSpace.default(base, efs=(32, 64, 128), beam_width=(1, 2))
+    cands = space.candidates()
+    # one probe set + exact GT shared by the SLO calibration and the driver
+    proxy = RecallProxy.for_index(idx, queries=ds.queries[:top],
+                                  gt=gt[:top], buckets=BUCKETS)
+    rich = cands[-1]                 # enumeration order: costliest last
+    lat_rich_ms = proxy.evaluate(rich, replays=3).lat_s * 1e3
+    slo_ms = round(SLO_FACTOR * lat_rich_ms, 3)
+
+    # --- baseline: every static config through the full trace ------------
+    static = {}
+    for spec in cands:
+        fe = ServeFrontend(idx, spec, buckets=BUCKETS,
+                           max_pending_rows=8 * top)
+        static[spec_key(spec)] = _replay_phases(fe, q, gtr, calm, bursts,
+                                                slo_ms)
+        assert fe.telemetry.recompiles_after_warmup == 0
+    # "best static config of phase 1": attainment first, then recall
+    best_key = max(static, key=lambda k: (static[k]["calm"]["attainment"],
+                                          static[k]["calm"]["recall"]))
+    best = static[best_key]
+
+    # --- autotuned: one frontend, controller stepped along the trace ------
+    fe = ServeFrontend(idx, base, buckets=BUCKETS, max_pending_rows=8 * top)
+    drv = AutotuneDriver.attach(fe, Objective(slo_p99_ms=slo_ms),
+                                space=space, proxy=proxy, seed=0)
+    incumbent_phase1 = drv.controller.incumbent
+    tuned = _replay_phases(fe, q, gtr, calm, bursts, slo_ms, step=drv.step)
+    assert fe.telemetry.recompiles_after_warmup == 0, \
+        "a controller switch compiled on the request path"
+
+    # decisions-to-recover: switches after the burst shift began
+    n_calm_steps = 1 + N_CALM // CALM_STEP_EVERY      # screen + calm epochs
+    post_shift = drv.decision_log()[n_calm_steps:]
+    recover = next((i + 1 for i, d in enumerate(post_shift)
+                    if d["kind"] == "switch"), None)
+
+    acceptance = {
+        "attainment_calm": [tuned["calm"]["attainment"],
+                            best["calm"]["attainment"]],
+        "attainment_burst": [tuned["burst"]["attainment"],
+                             best["burst"]["attainment"]],
+        "recall_gap_phase1": round(
+            best["calm"]["recall"] - tuned["calm"]["recall"], 4),
+        "decisions_to_recover": recover,
+        "recompiles_after_warmup": fe.telemetry.recompiles_after_warmup,
+    }
+    assert tuned["calm"]["attainment"] >= best["calm"]["attainment"], \
+        acceptance
+    assert tuned["burst"]["attainment"] >= best["burst"]["attainment"], \
+        acceptance
+    assert acceptance["recall_gap_phase1"] <= 0.01, acceptance
+
+    payload = {
+        "slo_p99_ms": slo_ms,
+        "slo_calibration": {"factor": SLO_FACTOR, "rich_key": spec_key(rich),
+                            "rich_probe_lat_ms": round(lat_rich_ms, 3)},
+        "space": space.describe(),
+        "trace": {"calm_requests": len(calm),
+                  "burst_groups": len(bursts), "burst_depth": BURST_DEPTH,
+                  "rows": int(need), "buckets": list(BUCKETS)},
+        "static": static,
+        "static_best_phase1": best_key,
+        "autotuned": {
+            "phases": tuned,
+            "screen_incumbent": incumbent_phase1,
+            "final_incumbent": drv.controller.incumbent,
+            "switches": drv.switches,
+            "failures": drv.failures,
+            "proxy_gt_secs": round(proxy.gt_secs, 3),
+            "decisions": drv.decision_log(),
+        },
+        "acceptance": acceptance,
+        "n_base": int(ds.base.shape[0]),
+    }
+    emit("autotune_two_phase", 0.0, {
+        "slo_ms": slo_ms,
+        "calm": acceptance["attainment_calm"],
+        "burst": acceptance["attainment_burst"],
+        "recall_gap": acceptance["recall_gap_phase1"],
+        "switches": drv.switches, "recover": recover})
+    persist_bench("autotune_two_phase", payload, file="BENCH_autotune.json")
+    return payload

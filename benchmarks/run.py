@@ -9,6 +9,7 @@ import sys
 import time
 import traceback
 
+from benchmarks import bench_autotune as A
 from benchmarks import bench_chaos as C_
 from benchmarks import bench_engine as E
 from benchmarks import bench_paper as P
@@ -25,6 +26,7 @@ BENCHES = [
     ("engine_pallas_parity", E.engine_pallas_parity),
     ("serve_single", S.serve_single),
     ("serve_sharded", S.serve_sharded),
+    ("autotune_two_phase", A.bench_autotune),
     ("mutate_streaming", M.mutate_streaming),
     ("chaos_serving", C_.chaos_serving),
     ("recovery_ingest", D.recovery_ingest),
@@ -69,6 +71,7 @@ def main() -> None:
     from benchmarks import common as C
     for prefix, file in (("engine", "BENCH_engine.json"),
                          ("serve", "BENCH_serve.json"),
+                         ("autotune", "BENCH_autotune.json"),
                          ("mutate", "BENCH_mutate.json"),
                          ("chaos", "BENCH_chaos.json"),
                          ("recovery", "BENCH_recovery.json")):

@@ -12,9 +12,9 @@ This is the user-facing entry point of the CRouting system:
 
 ``SearchSpec`` is the single request object (router registry name, beam
 width, engine, estimate strategy, ...); ``stats`` is a typed
-``SearchStats``.  The pre-registry kwarg style
-(``idx.search(q, k=10, router="crouting")``) completed its one-release
-deprecation window and now raises ``TypeError``.
+``SearchStats``.  ``search`` accepts a ``SearchSpec`` or ``None`` only —
+kwarg-style configuration (``idx.search(q, k=10, router="crouting")``)
+raises ``TypeError``.
 
 Index persistence is a plain .npz (content-addressed in benchmarks' cache)
 stamped with ``format_version``; ``load`` refuses files newer than it knows
@@ -93,8 +93,8 @@ class AnnIndex:
         prune at theta*=90 degrees and quietly tanked recall; non-pruning
         routers (which never read the threshold) keep the ``0.0``
         placeholder.  Slots with no result carry id -1 and distance +inf.
-        Anything other than a ``SearchSpec`` raises ``TypeError`` (the
-        legacy kwargs completed their deprecation window).
+        Anything other than a ``SearchSpec`` (or ``None``) raises
+        ``TypeError``.
         """
         import jax.numpy as jnp
 

@@ -1,13 +1,22 @@
 """Typed search configuration + statistics for the whole search stack.
 
-``SearchSpec`` is THE search-request object: one frozen dataclass subsuming
-the old ``EngineConfig`` plus the kwarg soup (``router=/cos_theta=/
-beam_width=/...``) that used to be copy-plumbed through ``AnnIndex.search``,
-``ShardedAnnIndex``, NSG candidate acquisition, the model-cell builder,
-benchmarks and examples.  The one-release deprecation shims from that
-migration (legacy search kwargs, the ``EngineConfig`` alias, dict-style
-stats access) are gone: callers pass ``spec=SearchSpec(...)`` or get a
-``TypeError``.
+``SearchSpec`` is THE search-request object: one frozen dataclass carried
+through ``AnnIndex.search``, ``ShardedAnnIndex``, NSG candidate
+acquisition, the model-cell builder, the serving frontend, benchmarks and
+examples.  Callers pass ``spec=SearchSpec(...)``; anything else (including
+the pre-``SearchSpec`` kwarg style) raises ``TypeError``.
+
+The fields split into two cost classes, and ``canonical()`` is the
+authority on which is which (the autotune controller derives its knob
+cost classes from it — ``repro.autotune.space``):
+
+* engine-shaping fields (``efs``/``beam_width``/``engine``/``estimate``/
+  ``router``/...) key the compiled-engine cache: changing one means a new
+  executable per batch shape, so a serving frontend must pre-warm before
+  switching;
+* request-only fields (``k``/``cos_theta``) never re-trace: ``k`` slices
+  the returned pool post-hoc and ``cos_theta`` is a traced scalar
+  argument, so they retune instantly.
 
 ``SearchStats`` is the typed result-statistics record replacing the ad-hoc
 ``info`` dict ``AnnIndex.search`` used to return.  It carries the fixed
@@ -32,6 +41,21 @@ ESTIMATES = ("exact", "angle", "sq8", "both")
 BEAM_PRUNE_POLICIES = ("best", "all")
 
 _K_DEFAULT = 10
+
+# Enumerable knob domains (the autotune search space, repro.autotune.space).
+# The categorical fields enumerate exactly; the integer fields are open-ended
+# so these ladders are *recommended* discrete rungs, not hard validation —
+# chosen to roughly double engine cost per step.  Router names live in the
+# registry (repro.core.routers.available_routers), not here.
+EFS_LADDER = (32, 48, 64, 96, 128, 192)
+BEAM_LADDER = (1, 2, 4, 8)
+KNOB_DOMAINS: Dict[str, tuple] = {
+    "efs": EFS_LADDER,
+    "beam_width": BEAM_LADDER,
+    "engine": ENGINES,
+    "estimate": ESTIMATES,
+    "beam_prune": BEAM_PRUNE_POLICIES,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,13 +129,37 @@ class SearchSpec:
         return dataclasses.replace(self, **changes)
 
 
+def is_request_only(field: str) -> bool:
+    """True iff changing ``field`` can never re-jit a compiled engine.
+
+    Derived from ``canonical()`` itself, not from a parallel list that
+    could drift: a field is request-only exactly when perturbing it leaves
+    the canonical (compiled-engine cache key) form unchanged.  This is the
+    contract the serving frontend and the autotune controller's knob cost
+    classes rest on.
+    """
+    base = SearchSpec()
+    probe = {"k": base.k + 1, "cos_theta": 0.25,
+             "efs": base.efs + 8, "beam_width": base.beam_width + 1,
+             "max_hops": base.max_hops + 1, "engine": "pallas",
+             "estimate": "sq8", "beam_prune": "all", "router": "crouting",
+             "metric": "ip", "use_hierarchy": not base.use_hierarchy}
+    if field not in probe:
+        raise KeyError(f"unknown SearchSpec field {field!r}")
+    return base.replace(**{field: probe[field]}).canonical() == \
+        base.canonical()
+
+
+REQUEST_ONLY_FIELDS = ("k", "cos_theta")
+assert all(is_request_only(f) for f in REQUEST_ONLY_FIELDS)
+
+
 def resolve_search_spec(spec: Optional["SearchSpec"],
                         default: "SearchSpec", owner: str) -> "SearchSpec":
     """Validate a per-call ``spec`` (or fall back to ``default``).
 
-    The legacy-kwarg shim that used to live here shipped its one promised
-    release in PR 3 and is gone: anything that is not a ``SearchSpec`` (or
-    ``None``) raises ``TypeError``.
+    Anything that is not a ``SearchSpec`` (or ``None``) raises
+    ``TypeError`` — there is no kwarg fallback.
     """
     if spec is None:
         return default
@@ -123,7 +171,7 @@ def resolve_search_spec(spec: Optional["SearchSpec"],
 
 @dataclasses.dataclass
 class SearchStats:
-    """Typed per-search statistics (replaces the legacy ``info`` dict).
+    """Typed per-search statistics returned by every search entry point.
 
     On the single-index path the counter fields are per-query ``[B]`` int
     arrays; on the sharded path they are batch totals already reduced across

@@ -1,10 +1,12 @@
 """Deterministic failpoints: named fault-injection sites (DESIGN.md §10).
 
 A *failpoint* is a named call site threaded through the serving, mutation,
-sharding, persistence and durability paths (``serve.dispatch``,
-``shard.search``, ``mutate.merge.build``, ``index.save.write``, and the
+sharding, persistence, durability and autotune paths (``serve.dispatch``,
+``shard.search``, ``mutate.merge.build``, ``index.save.write``, the
 ISSUE 8 WAL/checkpoint sites ``wal.append`` / ``wal.fsync`` /
-``wal.rotate`` / ``checkpoint.write`` / ``manifest.rename``).
+``wal.rotate`` / ``checkpoint.write`` / ``manifest.rename``, and the
+ISSUE 9 controller sites ``autotune.step`` / ``autotune.probe`` — both
+fail-open: a fired fault leaves the last-good spec serving).
 Production code calls
 ``hit(site)`` at each one; with nothing armed that is a single module-flag
 check and an immediate return.  Tests and the chaos harness arm sites with

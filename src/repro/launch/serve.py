@@ -8,7 +8,12 @@ bucket) through ``repro.serve.ServeFrontend`` with the background worker
 running, then prints the telemetry digest: recall, p50/p95/p99 latency, QPS,
 and per-bucket compile counts — zero compiles may land on the request path
 (every bucket is pre-jitted at startup).  ``--single`` serves one global
-``AnnIndex`` instead of the device-sharded layout.
+``AnnIndex`` instead of the device-sharded layout.  ``--autotune
+--slo-p99-ms 250`` attaches the SLO-driven controller (DESIGN.md §12): the
+held-out queries + exact ground truth become the recall-proxy probe set
+(so any backend works), the knob space is screened at startup, and the
+controller keeps re-deciding on a background thread while the trace
+replays, printing its structured decision log at the end.
 """
 from __future__ import annotations
 
@@ -50,6 +55,12 @@ def main():
                     help="per-request admission deadline (s)")
     ap.add_argument("--single", action="store_true",
                     help="serve one AnnIndex instead of sharding per device")
+    ap.add_argument("--autotune", action="store_true",
+                    help="attach the SLO-driven controller (DESIGN.md §12): "
+                         "screen the knob space at startup, then re-decide "
+                         "on a background thread while the trace replays")
+    ap.add_argument("--slo-p99-ms", type=float, default=250.0,
+                    help="p99 latency SLO the autotune controller enforces")
     ap.add_argument("--durable-dir", default=None,
                     help="serve a durable MutableAnnIndex (DESIGN.md §11): "
                          "recover from DIR when it already holds state, "
@@ -107,16 +118,37 @@ def main():
           f"({fe.telemetry.summary()['compiles_total']} bucket compiles)")
 
     gt = exact_ground_truth(ds, k=args.k)
+    drv = None
+    if args.autotune:
+        # explicit probe queries + GT: works against every backend here
+        # (sharded/durable indexes expose no single corpus to synthesize
+        # probes from)
+        from repro.autotune import AutotuneDriver, Objective
+
+        t0 = time.time()
+        n_probe = min(64, len(ds.queries))
+        drv = AutotuneDriver.attach(
+            fe, Objective(slo_p99_ms=args.slo_p99_ms),
+            probe_queries=ds.queries[:n_probe], probe_gt=gt[:n_probe],
+            seed=0)
+        print(f"autotune attached in {time.time()-t0:.1f}s: "
+              f"incumbent {drv.controller.incumbent} "
+              f"(SLO p99<={args.slo_p99_ms:.0f}ms, "
+              f"{len(drv.controller.quarantined)} quarantined)")
     offsets = np.concatenate([[0], np.cumsum(sizes)])
     # QueueFull backpressure: capped exponential backoff with jitter
     # (decorrelates many clients) instead of a hand-rolled fixed-sleep spin
     backoff = RetryPolicy(max_attempts=64, base_s=0.005, cap_s=0.25, seed=1)
     with fe:                                     # background flush worker
+        if drv is not None:
+            drv.start(period_s=0.5)              # controller epochs
         futs = []
         for i in range(len(sizes)):
             q = ds.queries[offsets[i]:offsets[i + 1]]
             futs.append(backoff.call(fe.submit, q, retry_on=QueueFull))
         done = [f.result() for f in futs]
+        if drv is not None:
+            drv.stop()
     rec = recall_at_k(np.concatenate([ids for ids, _, _ in done]), gt, args.k)
 
     summ = fe.telemetry.summary()
@@ -125,6 +157,10 @@ def main():
           f"QPS={summ['qps']:.0f} p50={lat['p50_ms']:.1f}ms "
           f"p95={lat['p95_ms']:.1f}ms p99={lat['p99_ms']:.1f}ms "
           f"recompiles_after_warmup={summ['recompiles_after_warmup']}")
+    if drv is not None:
+        print(f"autotune: {drv.switches} switches, {drv.failures} failures, "
+              f"final spec {drv.controller.incumbent}")
+        print("decisions:", json.dumps(drv.decision_log()))
     print("health:", json.dumps(fe.health()))
     print(json.dumps(summ, indent=2))
     if args.durable_dir is not None:

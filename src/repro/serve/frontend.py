@@ -117,6 +117,7 @@ class ServeFrontend:
         self._wake = threading.Event()
         self._stopped = False                   # stop() called, no start() yet
         self.worker_error: Optional[BaseException] = None
+        self.autotune = None        # AutotuneDriver.attach registers itself
         self._base = self._session(spec)
         if warmup:
             self.warmup()
@@ -136,6 +137,31 @@ class ServeFrontend:
                 return self._sessions[key]
             self._sessions[key] = s
             return s
+
+    def activate_spec(self, spec: SearchSpec) -> SearchSpec:
+        """Hot-swap the default session: pre-warm, THEN atomically switch.
+
+        The autotune controller's promotion path (DESIGN.md §12).  The new
+        spec's session compiles every bucket rung off the request path
+        (under the dispatch lock only — concurrent submits keep flowing
+        into the old default), and only then does the default-session
+        pointer flip, under the state lock.  Requests already queued on the
+        old session still dispatch through it — an admitted future always
+        resolves — and the old session stays warm for an instant switch
+        back.  Returns the activated session's resolved spec.
+        """
+        if spec is None:
+            raise TypeError("activate_spec requires an explicit SearchSpec")
+        sess = self._session(spec)
+        self._warm_session(sess)                # no-op if already warm
+        with self._lock:
+            self._base = sess
+        return sess.spec
+
+    @property
+    def active_spec(self) -> SearchSpec:
+        """The default session's resolved spec (what ``spec=None`` gets)."""
+        return self._base.spec
 
     def warmup(self):
         """Pre-jit every bucket rung of every session (compile off the
@@ -347,8 +373,11 @@ class ServeFrontend:
     def health(self) -> dict:
         """Operational state as a plain dict (launcher/monitoring surface):
         acceptance + worker liveness, queue depth, any stored worker error,
-        and the backend session's own degraded/quarantined state."""
+        the active canonical spec + windowed p99 (what the autotune loop
+        acts on), the attached controller's own state, and the backend
+        session's degraded/quarantined state."""
         with self._lock:
+            base = self._base
             h = {
                 "stopped": self._stopped,
                 "worker_alive": (self._worker is not None
@@ -361,7 +390,16 @@ class ServeFrontend:
                                  if self.worker_error is not None else None),
                 "worker_errors_total": self.telemetry.worker_errors,
             }
-        h["backend"] = self._base.engine.health()
+        h["active_spec"] = dataclasses.asdict(base.spec.canonical())
+        snap = self.telemetry.window_snapshot()
+        h["latency_window"] = {
+            "p99_ms": snap["latency"]["p99_ms"],
+            "qps": snap["window_qps"],
+            "served": snap["served"],
+        }
+        h["autotune"] = (self.autotune.health()
+                         if self.autotune is not None else None)
+        h["backend"] = base.engine.health()
         return h
 
     # --- background worker --------------------------------------------------

@@ -12,10 +12,21 @@ The compile counters are the serving frontend's key invariant: after
 must stay 0 across any ragged request trace — a nonzero value means a batch
 shape escaped the bucket ladder and paid an XLA compile on the request path
 (asserted in benchmarks/bench_serve.py and tests/test_serve.py).
+
+Windowed snapshots (the autotune feed, DESIGN.md §12): the controller
+does not read the lifetime digest — it diffs *epochs*.
+``window_snapshot()`` captures the cumulative counters plus a copy of the
+bounded sample window at one instant; ``window_delta(prev, cur)`` turns
+two snapshots into the epoch between them (requests served, epoch QPS,
+and p50/p95/p99 over exactly the epoch's own latency samples — valid
+while an epoch serves fewer than ``WINDOW`` requests, asserted there).
+The observation hooks and snapshots share one lock, so a controller
+thread can snapshot mid-trace without tearing a deque.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Deque, Dict, Optional
@@ -86,6 +97,12 @@ class ServeTelemetry:
         self._stats: Deque[SearchStats] = _window()
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+        # completion timestamps (same window as request_lat_s): windowed QPS
+        self._done_t: Deque[float] = _window()
+        # guards the sample deques: the dispatch thread appends while a
+        # controller thread snapshots (list(deque) during a concurrent
+        # append can raise); counters alone would be fine under the GIL
+        self._obs_lock = threading.Lock()
 
     # --- recording hooks (called by the frontend) -------------------------
     def mark_warm(self):
@@ -99,28 +116,35 @@ class ServeTelemetry:
         (a probe's latency IS the XLA compile — folding it into the bucket
         percentiles would misreport the served trace)."""
         bs = self.buckets.setdefault(bucket, BucketStats())
-        bs.compiles += compiled
-        if stats is None:
-            return
-        # a compile during a REAL dispatch after warmup = a batch shape that
-        # escaped the ladder and paid XLA on the request path (warmup probes
-        # — including a late-created session's — never count)
-        if compiled and self._warm:
-            self.recompiles_after_warmup += compiled
-        bs.dispatches += 1
-        bs.rows_valid += n_valid
-        bs.rows_padded += bucket - n_valid
-        bs.lat_s.append(secs)
-        self._stats.append(stats)
-        now = time.perf_counter()
-        if self._t_first is None:
-            self._t_first = now - secs
-        self._t_last = now
+        with self._obs_lock:
+            bs.compiles += compiled
+            if stats is None:
+                return
+            # a compile during a REAL dispatch after warmup = a batch shape
+            # that escaped the ladder and paid XLA on the request path
+            # (warmup probes — including a late-created session's — never
+            # count)
+            if compiled and self._warm:
+                self.recompiles_after_warmup += compiled
+            bs.dispatches += 1
+            bs.rows_valid += n_valid
+            bs.rows_padded += bucket - n_valid
+            bs.lat_s.append(secs)
+            self._stats.append(stats)
+            now = time.perf_counter()
+            if self._t_first is None:
+                self._t_first = now - secs
+            self._t_last = now
 
-    def observe_request_done(self, total_s: float, wait_s: float):
-        self.served += 1
-        self.request_lat_s.append(total_s)
-        self.queue_wait_s.append(wait_s)
+    def observe_request_done(self, total_s: float, wait_s: float,
+                             now: Optional[float] = None):
+        """``now`` overrides the completion timestamp (``perf_counter``
+        seconds) — the windowed-QPS regression tests inject exact times."""
+        with self._obs_lock:
+            self.served += 1
+            self.request_lat_s.append(total_s)
+            self.queue_wait_s.append(wait_s)
+            self._done_t.append(time.perf_counter() if now is None else now)
 
     def observe_dispatch_failure(self, n_requests: int):
         """A whole engine call failed: its requests RESOLVED with the
@@ -128,11 +152,68 @@ class ServeTelemetry:
         self.dispatch_failures += 1
         self.failed += n_requests
 
+    # --- windowed snapshots (the autotune epoch feed) ---------------------
+    def window_snapshot(self) -> Dict[str, object]:
+        """One instant's view: cumulative counters + a copy of the bounded
+        sample window.  Two snapshots diff into an epoch via
+        ``window_delta``; the latency/QPS entries here are *window*-scoped
+        (last ``WINDOW`` requests), the counters lifetime-scoped.
+        """
+        with self._obs_lock:
+            lat = tuple(self.request_lat_s)
+            wait = tuple(self.queue_wait_s)
+            done_t = tuple(self._done_t)
+            snap: Dict[str, object] = {
+                "t": time.perf_counter(),
+                "served": self.served, "submitted": self.submitted,
+                "failed": self.failed, "expired": self.expired,
+                "rejected": self.rejected,
+                "recompiles_after_warmup": self.recompiles_after_warmup,
+            }
+        snap["latency"] = _pcts(lat)
+        snap["queue_wait"] = _pcts(wait)
+        snap["window_qps"] = (
+            round(len(done_t) / (done_t[-1] - done_t[0]), 1)
+            if len(done_t) >= 2 and done_t[-1] > done_t[0] else None)
+        snap["_lat_s"] = lat          # raw samples: window_delta's input
+        snap["_done_t"] = done_t
+        return snap
+
+    @staticmethod
+    def window_delta(prev: Dict[str, object],
+                     cur: Dict[str, object]) -> Dict[str, object]:
+        """The epoch between two snapshots, JSON-ready.
+
+        Percentiles cover exactly the requests served in the epoch (the
+        trailing ``served_delta`` window samples) — correct as long as the
+        epoch served fewer than ``WINDOW`` requests; past that the oldest
+        epoch samples have rolled off and the digest degrades to the
+        window, flagged via ``clipped``.
+        """
+        served = int(cur["served"]) - int(prev["served"])
+        dt = float(cur["t"]) - float(prev["t"])
+        lat = cur["_lat_s"]
+        n = min(served, len(lat))
+        out: Dict[str, object] = {
+            "dt_s": round(dt, 4), "served": served,
+            "failed": int(cur["failed"]) - int(prev["failed"]),
+            "expired": int(cur["expired"]) - int(prev["expired"]),
+            "rejected": int(cur["rejected"]) - int(prev["rejected"]),
+            "recompiles": (int(cur["recompiles_after_warmup"])
+                           - int(prev["recompiles_after_warmup"])),
+            "qps": round(served / dt, 1) if dt > 0 and served else None,
+            "clipped": served > len(lat),
+        }
+        out.update(_pcts(lat[len(lat) - n:] if n else ()))
+        return out
+
     # --- reporting --------------------------------------------------------
     def merged_stats(self) -> Optional[SearchStats]:
         """Engine stats folded over the sample window (last WINDOW
         dispatches)."""
-        return SearchStats.merge(self._stats) if self._stats else None
+        with self._obs_lock:
+            stats = list(self._stats)
+        return SearchStats.merge(stats) if stats else None
 
     def qps(self) -> Optional[float]:
         """Real rows served per second of serving wall-clock."""
@@ -147,14 +228,17 @@ class ServeTelemetry:
         benchmarks persist."""
         merged = self.merged_stats()
         qps = self.qps()
+        with self._obs_lock:
+            lat = tuple(self.request_lat_s)
+            wait = tuple(self.queue_wait_s)
         out: Dict[str, object] = {
             "requests": {"submitted": self.submitted, "served": self.served,
                          "rejected": self.rejected, "expired": self.expired,
                          "failed": self.failed},
             "dispatch_failures": self.dispatch_failures,
             "worker_errors": self.worker_errors,
-            "latency": _pcts(self.request_lat_s),
-            "queue_wait": _pcts(self.queue_wait_s),
+            "latency": _pcts(lat),
+            "queue_wait": _pcts(wait),
             "qps": round(qps, 1) if qps else None,
             "compiles_total": sum(b.compiles for b in self.buckets.values()),
             "recompiles_after_warmup": self.recompiles_after_warmup,

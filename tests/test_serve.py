@@ -333,6 +333,94 @@ def test_telemetry_summary_folds_search_stats(built, queries):
 
 
 # --------------------------------------------------------------------------
+# windowed telemetry (ISSUE 9 satellite): wraparound-correct epochs
+# --------------------------------------------------------------------------
+def test_telemetry_window_wraparound_percentiles_and_qps():
+    """Regression: after the WINDOW-bounded deques wrap, the windowed
+    percentiles and QPS must cover exactly the last WINDOW requests —
+    early samples roll off instead of poisoning the digest.  Completion
+    timestamps are injected so the numbers are exact."""
+    from repro.serve.telemetry import WINDOW, ServeTelemetry
+
+    tm = ServeTelemetry()
+    # 600 poisoned 100ms samples that must roll off entirely...
+    for i in range(600):
+        tm.observe_request_done(0.100, 0.0, now=float(i))
+    # ...then a full WINDOW of 10ms samples at exactly 1000 QPS
+    prev = None
+    for i in range(WINDOW):
+        if i == WINDOW - 100:
+            prev = tm.window_snapshot()
+        tm.observe_request_done(0.010, 0.0, now=1000.0 + i * 1e-3)
+    snap = tm.window_snapshot()
+    assert snap["served"] == 600 + WINDOW        # lifetime counter keeps all
+    assert len(snap["_lat_s"]) == WINDOW         # sample window stays bounded
+    assert snap["latency"]["p50_ms"] == 10.0     # no 100ms survivor anywhere
+    assert snap["latency"]["p99_ms"] == 10.0
+    assert snap["window_qps"] == pytest.approx(1000.0, rel=0.01)
+    # epoch diff across the wrap: exactly the last 100 requests
+    delta = ServeTelemetry.window_delta(prev, snap)
+    assert delta["served"] == 100 and not delta["clipped"]
+    assert delta["p99_ms"] == 10.0 and delta["qps"] is not None
+    # an epoch longer than WINDOW degrades to the window — and says so
+    for i in range(WINDOW + 50):
+        tm.observe_request_done(0.005, 0.0, now=2000.0 + i * 1e-3)
+    delta = ServeTelemetry.window_delta(snap, tm.window_snapshot())
+    assert delta["served"] == WINDOW + 50 and delta["clipped"]
+    assert delta["p99_ms"] == 5.0
+
+
+def test_health_exposes_active_spec_window_and_autotune(built, queries):
+    """ISSUE 9 satellite: health() carries the active canonical spec, the
+    windowed latency digest, and the attached controller's state (None
+    when nothing is attached)."""
+    import dataclasses as dc
+
+    spec = SearchSpec(k=10, efs=32, router="crouting")
+    fe = _frontend(built, spec)
+    h = fe.health()
+    assert h["autotune"] is None
+    assert set(h["active_spec"]) == {f.name for f in dc.fields(SearchSpec)}
+    assert h["active_spec"]["efs"] == 32
+    assert h["active_spec"]["router"] == "crouting"
+    assert h["latency_window"] == {"p99_ms": None, "qps": None, "served": 0}
+    for n in (1, 3, 8):
+        fe.search(queries[:n])
+    h = fe.health()
+    assert h["latency_window"]["served"] == 3
+    assert h["latency_window"]["p99_ms"] > 0
+    # a hot-swap shows up immediately
+    fe.activate_spec(spec.replace(efs=48))
+    assert fe.health()["active_spec"]["efs"] == 48
+
+
+def test_hot_swap_mid_trace_completes_every_request(built, queries):
+    """ISSUE 9 satellite: a ragged trace concurrent with controller spec
+    switches (the ``activate_spec`` promotion path) completes every
+    admitted request — no dropped futures, zero request-path recompiles,
+    pre-warm strictly off the request path."""
+    spec = SearchSpec(k=10, efs=32, router="crouting")
+    fe = _frontend(built, spec)
+    rich = spec.replace(efs=48)
+    sizes = [RAGGED[i % len(RAGGED)] for i in range(30)]
+    with fe:
+        futs = []
+        for i, n in enumerate(sizes):
+            futs.append(fe.submit(queries[:n]))
+            if i == 10:       # mid-trace upgrade: new session, cold
+                assert fe.activate_spec(rich).canonical().efs == 48
+            if i == 20:       # and back: old session still warm
+                fe.activate_spec(spec)
+        outs = [f.result(timeout=60) for f in futs]
+    assert [o[0].shape[0] for o in outs] == sizes
+    assert fe.telemetry.served == len(sizes)
+    assert fe.telemetry.expired == 0 and fe.telemetry.failed == 0
+    assert fe.telemetry.recompiles_after_warmup == 0
+    assert len(fe._sessions) == 2
+    assert fe.active_spec.canonical() == spec.canonical()
+
+
+# --------------------------------------------------------------------------
 # bucketing helpers
 # --------------------------------------------------------------------------
 def test_bucket_ladder_helpers():
