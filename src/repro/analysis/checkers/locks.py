@@ -1,0 +1,263 @@
+"""Lock discipline: ``# guarded by:`` annotations and the lock-order table.
+
+**guarded-by.**  An attribute assigned in ``__init__`` (or at module level)
+with a trailing ``# guarded by: self._lock`` comment declares a guard: every
+read or write of that attribute in the class's OTHER methods (or, for module
+globals, in any module function) must sit lexically inside a ``with`` on the
+named lock.  The analysis is intraprocedural and method-level — a method
+that runs with the lock already held by its caller states that with an
+inline ``# repolint: ignore[guarded-by] caller holds <lock> (...)``, which
+doubles as documentation of the calling contract.  ``__init__`` itself is
+exempt (the object is unpublished), and a nested ``def`` resets the held
+set: a ``with`` in the enclosing scope does NOT protect a closure that runs
+later on another thread.
+
+**lock-order.**  ``LOCK_ORDER_TABLE`` declares the acquisition order of
+each class's locks (DESIGN.md §13 carries the same table with its
+cross-module edges).  Within one function, acquiring lock B while holding
+lock A flags an inversion whenever the declared chain puts B before A —
+the deadlock shape every one of the five thread domains must avoid.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.core import Finding, Project, SourceFile, register_checker
+
+# applied to comment text only (tokenize-extracted), so no '#' anchor —
+# prose may precede the marker within the comment
+GUARDED_RE = re.compile(r"guarded by:\s*(self\.)?(\w+)")
+
+# Declared acquisition order per class: when two of a chain's locks nest in
+# one function, the outer one must come earlier in the tuple.  Cross-module
+# edges (mutate _lock -> WAL write lock via append_insert, frontend
+# _dispatch_lock -> telemetry _obs_lock) span call boundaries this
+# intraprocedural pass cannot see; they are documented in DESIGN.md §13.
+LOCK_ORDER_TABLE: Dict[str, Tuple[str, ...]] = {
+    "ServeFrontend": ("_lock", "_dispatch_lock"),
+    "MutableAnnIndex": ("_merge_lock", "_lock", "_engine_lock"),
+    "MutableShardedAnnIndex": ("_merge_lock", "_lock", "_engine_lock"),
+    "SegmentWriter": ("_write_lock", "_cond"),
+    "DurableStore": ("_lock",),
+    "AutotuneDriver": ("_lock",),
+    "ServeTelemetry": ("_obs_lock",),
+}
+
+
+def _with_lock_names(node: ast.With, *, selfish: bool) -> List[str]:
+    """Lock attribute names acquired by one ``with`` statement.
+
+    ``selfish=True`` matches ``self.X`` context managers (instance locks),
+    ``False`` matches bare names (module-level locks)."""
+    out = []
+    for item in node.items:
+        ctx = item.context_expr
+        if selfish:
+            if (isinstance(ctx, ast.Attribute)
+                    and isinstance(ctx.value, ast.Name)
+                    and ctx.value.id == "self"):
+                out.append(ctx.attr)
+        elif isinstance(ctx, ast.Name):
+            out.append(ctx.id)
+    return out
+
+
+class _LockWalk:
+    """Walk one function body tracking the stack of held locks."""
+
+    def __init__(self, sf: SourceFile, relpath: str, *, selfish: bool,
+                 guarded: Dict[str, str], order: Tuple[str, ...],
+                 owner: str):
+        self.sf = sf
+        self.relpath = relpath
+        self.selfish = selfish
+        self.guarded = guarded          # attr/global -> lock name
+        self.order = order
+        self.owner = owner              # "Class.method" for messages
+        self.findings: List[Finding] = []
+
+    def run(self, fn: ast.AST):
+        for stmt in getattr(fn, "body", []):
+            self._visit(stmt, held=())
+
+    def _visit(self, node: ast.AST, held: Tuple[str, ...]):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # a closure runs later, possibly on another thread: the
+            # enclosing with-block does not protect it
+            for child in ast.iter_child_nodes(node):
+                self._visit(child, held=())
+            return
+        if isinstance(node, ast.With):
+            acquired = _with_lock_names(node, selfish=self.selfish)
+            for name in acquired:
+                self._check_order(node, held, name)
+            inner = held + tuple(a for a in acquired if a not in held)
+            for item in node.items:
+                self._visit(item.context_expr, held)
+            for stmt in node.body:
+                self._visit(stmt, inner)
+            return
+        self._check_access(node, held)
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held)
+
+    def _check_order(self, node: ast.With, held: Tuple[str, ...],
+                     acquiring: str):
+        if acquiring not in self.order:
+            return
+        for h in held:
+            if h not in self.order:
+                continue
+            if self.order.index(h) > self.order.index(acquiring):
+                self.findings.append(Finding(
+                    checker="lock-order", path=self.relpath,
+                    line=node.lineno,
+                    message=f"{self.owner} acquires {acquiring!r} while "
+                            f"holding {h!r}; the declared order is "
+                            f"{' -> '.join(self.order)}",
+                    hint="restructure so locks nest in declared order, or "
+                         "release the inner lock first (deadlock hazard)"))
+
+    def _check_access(self, node: ast.AST, held: Tuple[str, ...]):
+        name = None
+        if self.selfish:
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "self"
+                    and node.attr in self.guarded):
+                name = node.attr
+        elif isinstance(node, ast.Name) and node.id in self.guarded:
+            name = node.id
+        if name is None:
+            return
+        lock = self.guarded[name]
+        if lock in held:
+            return
+        ref = f"self.{name}" if self.selfish else name
+        lockref = f"self.{lock}" if self.selfish else lock
+        self.findings.append(Finding(
+            checker="guarded-by", path=self.relpath, line=node.lineno,
+            message=f"{self.owner} touches {ref} outside `with {lockref}` "
+                    f"(declared '# guarded by: {lockref}')",
+            hint=f"wrap the access in `with {lockref}:`, or suppress with "
+                 "# repolint: ignore[guarded-by] <why the lock is not "
+                 "needed here>"))
+
+
+def _guard_match(sf: SourceFile, lineno: int):
+    """The ``guarded by:`` annotation on an assign: trailing comment on
+    the assign's own line, or a comment-only line directly above it."""
+    m = GUARDED_RE.search(sf.comment_on(lineno))
+    if m is not None:
+        return m
+    above = sf.comment_on(lineno - 1)
+    if above and lineno >= 2 \
+            and sf.lines[lineno - 2].lstrip().startswith("#"):
+        return GUARDED_RE.search(above)
+    return None
+
+
+def _declared_guards(sf: SourceFile, body: Iterable[ast.stmt], *,
+                     selfish: bool) -> Dict[str, str]:
+    """attr -> lock from ``# guarded by:`` comments on assigns."""
+    guarded: Dict[str, str] = {}
+    for stmt in body:
+        if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            continue
+        m = _guard_match(sf, stmt.lineno)
+        if not m:
+            continue
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for t in targets:
+            if selfish:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    guarded[t.attr] = m.group(2)
+            elif isinstance(t, ast.Name):
+                guarded[t.id] = m.group(2)
+    return guarded
+
+
+def _check_class(sf: SourceFile, cls: ast.ClassDef) -> List[Finding]:
+    init = next((n for n in cls.body
+                 if isinstance(n, ast.FunctionDef) and n.name == "__init__"),
+                None)
+    guarded: Dict[str, str] = {}
+    # trailing comments can sit on assigns nested under ifs in __init__ too
+    if init is not None:
+        for stmt in ast.walk(init):
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                guarded.update(_declared_guards(sf, [stmt], selfish=True))
+    if not guarded:
+        return []
+    findings: List[Finding] = []
+    for meth in cls.body:
+        if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if meth.name == "__init__":
+            continue            # unpublished object: no guard needed yet
+        # order=() — inversions are check_lock_order's job (one finding
+        # per site, not one per checker)
+        walk = _LockWalk(sf, sf.relpath, selfish=True, guarded=guarded,
+                         order=(), owner=f"{cls.name}.{meth.name}")
+        walk.run(meth)
+        findings.extend(walk.findings)
+    return findings
+
+
+def _check_module_globals(sf: SourceFile, tree: ast.Module) -> List[Finding]:
+    guarded = _declared_guards(sf, tree.body, selfish=False)
+    if not guarded:
+        return []
+    findings: List[Finding] = []
+    for fn in tree.body:
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            walk = _LockWalk(sf, sf.relpath, selfish=False, guarded=guarded,
+                             order=(), owner=fn.name)
+            walk.run(fn)
+            findings.extend(walk.findings)
+    return findings
+
+
+@register_checker(
+    "guarded-by",
+    "attributes annotated '# guarded by: <lock>' are only touched under "
+    "a `with` on that lock (intraprocedural, method-level)")
+def check_guarded_by(project: Project) -> Iterable[Finding]:
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        yield from _check_module_globals(sf, sf.tree)
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from _check_class(sf, node)
+
+
+@register_checker(
+    "lock-order",
+    "nested `with self.<lock>` acquisitions follow the declared per-class "
+    "lock-order table (deadlock prevention)")
+def check_lock_order(project: Project) -> Iterable[Finding]:
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        for cls in ast.walk(sf.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            order = LOCK_ORDER_TABLE.get(cls.name, ())
+            if len(order) < 2:
+                continue
+            for meth in cls.body:
+                if not isinstance(meth, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                walk = _LockWalk(sf, sf.relpath, selfish=True, guarded={},
+                                 order=order,
+                                 owner=f"{cls.name}.{meth.name}")
+                walk.run(meth)
+                yield from walk.findings

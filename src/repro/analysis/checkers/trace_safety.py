@@ -1,0 +1,309 @@
+"""trace-safety: Python control flow on traced values inside jit contexts.
+
+Inside a function that JAX traces — a ``@jax.jit`` body, a ``pallas_call``
+kernel, a ``lax.while_loop``/``cond``/``scan`` branch — the arguments are
+abstract tracers.  ``if x > 0:``, ``while n:``, ``bool(x)`` or ``int(x)``
+on such a value raises ``ConcretizationTypeError`` at trace time, or worse,
+silently bakes one Python-level branch into the compiled artifact and
+recompiles per distinct value.  This checker finds those sites.
+
+Taint model (intraprocedural, per traced function):
+
+* taint sources: the traced function's parameters (minus names listed in
+  ``static_argnames=``/``static_argnums``-exempted positions are NOT
+  tracked — any name in ``static_argnames`` is clean), and any value built
+  from ``jnp.*`` / ``lax.*`` / ``pl.load`` / ``pl.dot`` calls;
+* taint propagates through arithmetic/subscripts/calls and simple
+  ``name = expr`` assignment;
+* sanitizers (shape-level facts are concrete under tracing): ``.shape``,
+  ``.ndim``, ``.dtype``, ``.size``, ``len()``, ``isinstance()``, and
+  ``x is None`` / ``x is not None`` comparisons.
+
+Flagged sinks on tainted values: ``if``/``while``/``assert`` tests,
+``bool()`` / ``int()`` / ``float()`` casts, and ``and``/``or``/``not``
+(which call ``__bool__``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.core import (Finding, Project, dotted_name,
+                                 register_checker)
+
+# call heads whose nth argument (or fn= kwarg) is traced
+_TRACING_CALLS = {
+    "jax.jit": [0],
+    "jit": [0],
+    "pl.pallas_call": [0],
+    "pallas_call": [0],
+    "lax.while_loop": [0, 1],
+    "jax.lax.while_loop": [0, 1],
+    "lax.cond": [1, 2],
+    "jax.lax.cond": [1, 2],
+    "lax.scan": [0],
+    "jax.lax.scan": [0],
+    "lax.fori_loop": [2],
+    "jax.lax.fori_loop": [2],
+    "jax.vmap": [0],
+    "vmap": [0],
+}
+
+_JIT_DECORATORS = ("jax.jit", "jit", "pl.pallas_call", "pallas_call")
+
+_ARRAY_NAMESPACES = ("jnp.", "jax.numpy.", "lax.", "jax.lax.", "pl.")
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+_SANITIZER_CALLS = {"len", "isinstance", "type", "id", "repr", "str"}
+
+
+def _static_names(call: Optional[ast.Call]) -> Set[str]:
+    """Names listed in ``static_argnames=`` of a jit/partial call."""
+    out: Set[str] = set()
+    if call is None:
+        return out
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for node in ast.walk(kw.value):
+                if (isinstance(node, ast.Constant)
+                        and isinstance(node.value, str)):
+                    out.add(node.value)
+    return out
+
+
+def _decorator_jit_call(dec: ast.AST) -> Optional[ast.Call]:
+    """The jit-ish Call of a decorator, if the decorator makes fn traced.
+
+    Handles ``@jax.jit``, ``@jax.jit(...)``, and
+    ``@functools.partial(jax.jit, static_argnames=...)``."""
+    if isinstance(dec, ast.Call):
+        head = dotted_name(dec.func)
+        if head in _JIT_DECORATORS:
+            return dec
+        if head in ("functools.partial", "partial") and dec.args:
+            inner = dotted_name(dec.args[0])
+            if inner in _JIT_DECORATORS:
+                return dec
+    return None
+
+
+def _is_jit_decorated(fn: ast.AST) -> Optional[ast.Call]:
+    for dec in getattr(fn, "decorator_list", []):
+        if dotted_name(dec) in _JIT_DECORATORS:
+            return ast.Call(func=dec, args=[], keywords=[])  # no kwargs
+        call = _decorator_jit_call(dec)
+        if call is not None:
+            return call
+    return None
+
+
+class _TaintWalk:
+    """Track tainted names through one traced function body."""
+
+    def __init__(self, relpath: str, fn_name: str, tainted: Set[str]):
+        self.relpath = relpath
+        self.fn_name = fn_name
+        self.tainted = set(tainted)
+        self.findings: List[Finding] = []
+
+    # -- taint query -------------------------------------------------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SHAPE_ATTRS:
+                return False                      # shape facts are concrete
+            dn = dotted_name(node)
+            if dn is not None and dn.startswith(_ARRAY_NAMESPACES):
+                return False                      # e.g. jnp.inf, jnp.float32
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            head = dotted_name(node.func)
+            if head in _SANITIZER_CALLS:
+                return False
+            if head is not None and head.startswith(_ARRAY_NAMESPACES):
+                return True                       # jnp.* returns a tracer
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("item", "tolist")):
+                # .item() inside a traced fn is itself a concretization
+                # hazard, but that is the sink's job to flag, not taint's
+                return self.is_tainted(node.func.value)
+            return any(self.is_tainted(a) for a in node.args) or \
+                any(self.is_tainted(k.value) for k in node.keywords)
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in node.ops):
+                return False                      # `x is None` is concrete
+            return (self.is_tainted(node.left)
+                    or any(self.is_tainted(c) for c in node.comparators))
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        return False
+
+    # -- walk --------------------------------------------------------------
+    def run(self, fn: ast.AST):
+        body = getattr(fn, "body", [])
+        if isinstance(body, ast.expr):        # Lambda: body is one expr
+            self._visit_expr(body)
+            return
+        for stmt in body:
+            self._visit(stmt)
+
+    def _assign_targets(self, target: ast.AST, tainted: bool):
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign_targets(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign_targets(target.value, tainted)
+
+    def _flag(self, node: ast.AST, what: str):
+        self.findings.append(Finding(
+            checker="trace-safety", path=self.relpath, line=node.lineno,
+            message=f"{what} on a traced value inside {self.fn_name} "
+                    "(ConcretizationError / silent-recompile hazard)",
+            hint="branch with lax.cond/lax.select or jnp.where, loop with "
+                 "lax.while_loop/fori_loop, or hoist the value out of the "
+                 "traced function (static_argnames)"))
+
+    def _check_test(self, test: ast.AST, kind: str) -> bool:
+        if self.is_tainted(test):
+            self._flag(test, f"Python `{kind}` test")
+            return True
+        return False
+
+    def _visit(self, node: ast.AST):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return          # nested defs get their own context if traced
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = node.value
+            tainted = value is not None and self.is_tainted(value)
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            if isinstance(node, ast.AugAssign):
+                tainted = tainted or self.is_tainted(node.target)
+            if value is not None:
+                self._visit_expr(value)
+            for t in targets:
+                self._assign_targets(t, tainted)
+            return
+        if isinstance(node, ast.If):
+            if not self._check_test(node.test, "if"):
+                self._visit_expr(node.test)
+            for s in node.body + node.orelse:
+                self._visit(s)
+            return
+        if isinstance(node, ast.While):
+            if not self._check_test(node.test, "while"):
+                self._visit_expr(node.test)
+            for s in node.body + node.orelse:
+                self._visit(s)
+            return
+        if isinstance(node, ast.Assert):
+            if not self._check_test(node.test, "assert"):
+                self._visit_expr(node.test)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._visit_expr(child)
+            else:
+                self._visit(child)
+
+    def _visit_expr(self, node: ast.AST):
+        if isinstance(node, ast.Call):
+            head = dotted_name(node.func)
+            if head in ("bool", "int", "float") and node.args \
+                    and self.is_tainted(node.args[0]):
+                self._flag(node, f"`{head}()` cast")
+        if isinstance(node, ast.IfExp) and self.is_tainted(node.test):
+            self._flag(node, "conditional expression test")
+        if isinstance(node, ast.BoolOp) and self.is_tainted(node):
+            self._flag(node, "`and`/`or` (implicit __bool__)")
+            return          # don't double-report on operands
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit_expr(child)
+
+
+def _fn_params(fn: ast.AST) -> List[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def _traced_functions(tree: ast.AST):
+    """Yield (fn_node, static_names) for every traced function in a file.
+
+    Sources: jit/pallas decorators, and function references passed to the
+    tracing call heads in ``_TRACING_CALLS`` (by Name, resolved lexically
+    to a sibling/nearby ``def``, or as an inline ``lambda``)."""
+    defs = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+    seen = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            call = _is_jit_decorated(node)
+            if call is not None and id(node) not in seen:
+                seen.add(id(node))
+                yield node, _static_names(call if call.keywords else None)
+        if isinstance(node, ast.Call):
+            head = dotted_name(node.func)
+            if head not in _TRACING_CALLS:
+                continue
+            statics = _static_names(node)
+            for idx in _TRACING_CALLS[head]:
+                if idx >= len(node.args):
+                    continue
+                arg = node.args[idx]
+                target = None
+                if isinstance(arg, ast.Name):
+                    target = defs.get(arg.id)
+                elif isinstance(arg, ast.Lambda):
+                    target = arg
+                if target is not None and id(target) not in seen:
+                    seen.add(id(target))
+                    yield target, statics
+
+
+@register_checker(
+    "trace-safety",
+    "no Python if/while/bool()/int() on traced values inside jit, "
+    "pallas_call, or lax control-flow bodies")
+def check_trace_safety(project: Project) -> Iterable[Finding]:
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        for fn, statics in _traced_functions(sf.tree):
+            params = [p for p in _fn_params(fn)
+                      if p not in statics and p != "self"]
+            name = getattr(fn, "name", "<lambda>")
+            walk = _TaintWalk(sf.relpath, f"traced fn {name!r}",
+                              set(params))
+            walk.run(fn)
+            yield from walk.findings

@@ -1,0 +1,234 @@
+"""repolint core: findings, parsed sources, suppressions, checker registry.
+
+A *checker* is a function ``(project: Project) -> Iterable[Finding]``
+registered under a stable id.  The runner parses every target file once
+(AST + per-line comments via ``tokenize``), hands the whole ``Project`` to
+each checker, then applies the suppression rules to the combined finding
+list — checkers never need to know about ``# repolint: ignore``.
+
+Suppression grammar (DESIGN.md §13)::
+
+    # repolint: ignore[checker-id] one-line justification
+    # repolint: ignore[id-a,id-b] shared justification
+
+A suppression silences findings of the named checker(s) on its own line,
+or — when the comment stands alone — on the next non-comment line.  A
+suppression with an EMPTY justification silences nothing and is itself
+reported under the ``suppression`` checker id: the justification is the
+reviewable artifact, not the tag.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repolint:\s*ignore\[([A-Za-z0-9_,\- ]+)\]\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One defect: a stable checker id, a location, a claim, a fix hint."""
+
+    checker: str
+    path: str            # repo-relative, "/"-separated
+    line: int            # 1-based
+    message: str
+    hint: str = ""
+
+    def text(self) -> str:
+        s = f"{self.path}:{self.line}: [{self.checker}] {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"checker": self.checker, "path": self.path,
+                "line": self.line, "message": self.message,
+                "hint": self.hint}
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int            # line the comment sits on
+    checkers: Tuple[str, ...]
+    justification: str
+    standalone: bool     # comment-only line: applies to the NEXT code line
+
+
+class SourceFile:
+    """One parsed Python file: text, AST, per-line comments, suppressions."""
+
+    def __init__(self, path: str, relpath: str, text: str):
+        self.path = path
+        self.relpath = relpath.replace(os.sep, "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree = ast.parse(text, filename=relpath)
+        except SyntaxError as e:
+            self.parse_error = f"{e.msg} (line {e.lineno})"
+        # line -> comment text (with leading '#'), from tokenize so that
+        # '#' inside string literals never miscounts as a comment
+        self.comments: Dict[int, str] = {}
+        self._comment_only: Dict[int, bool] = {}
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+                if tok.type == tokenize.COMMENT:
+                    ln = tok.start[0]
+                    self.comments[ln] = tok.string
+                    self._comment_only[ln] = \
+                        self.lines[ln - 1].lstrip().startswith("#")
+        except tokenize.TokenizeError:
+            pass
+        self.suppressions: List[Suppression] = []
+        for ln, comment in sorted(self.comments.items()):
+            m = SUPPRESS_RE.search(comment)
+            if m:
+                ids = tuple(c.strip() for c in m.group(1).split(",")
+                            if c.strip())
+                self.suppressions.append(Suppression(
+                    line=ln, checkers=ids,
+                    justification=m.group(2).strip(),
+                    standalone=self._comment_only.get(ln, False)))
+
+    @classmethod
+    def load(cls, path: str, root: str) -> "SourceFile":
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        return cls(path, os.path.relpath(path, root), text)
+
+    def comment_on(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def _next_code_line(self, line: int) -> int:
+        """First non-blank, non-comment line after ``line``."""
+        ln = line + 1
+        while ln <= len(self.lines):
+            stripped = self.lines[ln - 1].strip()
+            if stripped and not stripped.startswith("#"):
+                return ln
+            ln += 1
+        return ln
+
+    def _suppressed_lines(self, checker: str, justified: bool
+                          ) -> Iterable[int]:
+        for s in self.suppressions:
+            if checker not in s.checkers:
+                continue
+            if bool(s.justification) != justified:
+                continue
+            # a standalone comment covers the next CODE line (continuation
+            # comment lines may wrap the justification); an inline comment
+            # covers its own line
+            yield self._next_code_line(s.line) if s.standalone else s.line
+
+    def is_suppressed(self, checker: str, line: int) -> bool:
+        """Justified suppressions only — bare tags never silence."""
+        return line in set(self._suppressed_lines(checker, justified=True))
+
+
+class Project:
+    """Everything one analysis run sees: parsed files + the repo root."""
+
+    def __init__(self, root: str, files: List[SourceFile]):
+        self.root = root
+        self.files = files
+        self.by_relpath = {f.relpath: f for f in files}
+
+    def find(self, suffix: str) -> Optional[SourceFile]:
+        """The unique file whose relpath ends with ``suffix`` (or None)."""
+        hits = [f for f in self.files if f.relpath.endswith(suffix)]
+        return hits[0] if len(hits) == 1 else None
+
+    def read_text(self, relpath: str) -> Optional[str]:
+        """Non-Python project file (e.g. DESIGN.md), if present."""
+        p = os.path.join(self.root, relpath)
+        if not os.path.exists(p):
+            return None
+        with open(p, encoding="utf-8") as f:
+            return f.read()
+
+
+CheckerFn = Callable[[Project], Iterable[Finding]]
+
+# id -> (fn, one-line description).  Insertion order = report order.
+CHECKERS: Dict[str, Tuple[CheckerFn, str]] = {}
+
+
+def register_checker(checker_id: str, description: str
+                     ) -> Callable[[CheckerFn], CheckerFn]:
+    """Decorator: add a checker to the registry under a stable id."""
+
+    def deco(fn: CheckerFn) -> CheckerFn:
+        if checker_id in CHECKERS:
+            raise ValueError(f"duplicate checker id {checker_id!r}")
+        CHECKERS[checker_id] = (fn, description)
+        return fn
+
+    return deco
+
+
+def apply_suppressions(project: Project, findings: List[Finding]
+                       ) -> Tuple[List[Finding], List[Finding]]:
+    """Split into (active, suppressed) and report defective suppressions.
+
+    Appends a ``suppression`` finding for every bare (justification-less)
+    tag — those silence nothing by design — and for every justified tag
+    that matches no finding and no registered checker id (a typo'd id
+    would otherwise silently stop guarding anything).
+    """
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    for fi in findings:
+        sf = project.by_relpath.get(fi.path)
+        if sf is not None and sf.is_suppressed(fi.checker, fi.line):
+            suppressed.append(fi)
+        else:
+            active.append(fi)
+    for sf in project.files:
+        for s in sf.suppressions:
+            if not s.justification:
+                active.append(Finding(
+                    checker="suppression", path=sf.relpath, line=s.line,
+                    message="suppression without a justification "
+                            f"(ignore[{','.join(s.checkers)}]) — bare tags "
+                            "silence nothing",
+                    hint="append a one-line reason: # repolint: "
+                         "ignore[id] <why this is safe>"))
+                continue
+            unknown = [c for c in s.checkers
+                       if c not in CHECKERS and c != "suppression"]
+            if unknown:
+                active.append(Finding(
+                    checker="suppression", path=sf.relpath, line=s.line,
+                    message=f"suppression names unknown checker id(s) "
+                            f"{', '.join(repr(u) for u in unknown)}",
+                    hint="valid ids: " + ", ".join(sorted(CHECKERS))))
+    return active, suppressed
+
+
+# --- shared AST helpers ------------------------------------------------------
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

@@ -1,0 +1,124 @@
+"""repolint runner: discover files, run checkers, report text/JSON.
+
+``run_analysis`` is the library entry point (tests drive it directly);
+``repro.analysis.__main__`` wraps it in a CLI.  Non-strict runs always
+exit 0 (a report, not a gate); ``--strict`` exits 1 on any active finding
+— that is the CI mode, where every known-deliberate exception must carry
+a justified inline suppression.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import repro.analysis.checkers  # noqa: F401  — registers the checker ids
+from repro.analysis.core import (CHECKERS, Finding, Project, SourceFile,
+                                 apply_suppressions)
+
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache"}
+
+
+def discover_files(root: str, paths: Sequence[str]) -> List[SourceFile]:
+    out: List[SourceFile] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full):
+            out.append(SourceFile.load(full, root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS)
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(SourceFile.load(os.path.join(dirpath, fn),
+                                               root))
+    return out
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: List[Finding]              # active (unsuppressed)
+    suppressed: List[Finding]
+    parse_errors: List[Finding]
+    files_scanned: int
+    checks_run: List[str]
+
+    @property
+    def exit_code_strict(self) -> int:
+        return 1 if (self.findings or self.parse_errors) else 0
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "files_scanned": self.files_scanned,
+            "checks_run": self.checks_run,
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "parse_errors": [f.to_dict() for f in self.parse_errors],
+        }
+
+
+def run_analysis(root: Optional[str] = None,
+                 paths: Sequence[str] = ("src",),
+                 checks: Optional[Iterable[str]] = None) -> AnalysisResult:
+    """Run the registered checkers over ``paths`` (relative to ``root``).
+
+    ``root`` defaults to the repo root inferred from this file's location
+    (four levels up: src/repro/analysis/runner.py), which also anchors
+    DESIGN.md lookups; pass it explicitly for fixture trees.
+    """
+    if root is None:
+        root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                            "..", "..", ".."))
+    files = discover_files(root, paths)
+    project = Project(root, files)
+
+    parse_errors = [
+        Finding(checker="parse", path=sf.relpath, line=1,
+                message=f"syntax error: {sf.parse_error}",
+                hint="repolint skipped this file — fix the parse first")
+        for sf in files if sf.parse_error is not None
+    ]
+
+    wanted = list(checks) if checks is not None else list(CHECKERS)
+    unknown = [c for c in wanted if c not in CHECKERS]
+    if unknown:
+        raise SystemExit(
+            f"unknown checker id(s): {', '.join(unknown)} "
+            f"(valid: {', '.join(sorted(CHECKERS))})")
+
+    findings: List[Finding] = []
+    for cid in wanted:
+        fn, _ = CHECKERS[cid]
+        findings.extend(fn(project))
+    active, suppressed = apply_suppressions(project, findings)
+    active.sort(key=lambda f: (f.path, f.line, f.checker))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.checker))
+    return AnalysisResult(findings=active, suppressed=suppressed,
+                          parse_errors=parse_errors,
+                          files_scanned=len(files), checks_run=wanted)
+
+
+def render_text(result: AnalysisResult, *, show_suppressed: bool = False
+                ) -> str:
+    lines: List[str] = []
+    for f in result.parse_errors + result.findings:
+        lines.append(f.text())
+    if show_suppressed and result.suppressed:
+        lines.append("")
+        lines.append(f"suppressed ({len(result.suppressed)}):")
+        for f in result.suppressed:
+            lines.append("  " + f.text().splitlines()[0])
+    n = len(result.findings) + len(result.parse_errors)
+    lines.append("")
+    lines.append(
+        f"repolint: {result.files_scanned} files, "
+        f"{len(result.checks_run)} checkers, {n} finding(s), "
+        f"{len(result.suppressed)} suppressed")
+    return "\n".join(lines).lstrip("\n")
+
+
+def write_json(result: AnalysisResult, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(result.to_dict(), f, indent=2, sort_keys=True)
+        f.write("\n")

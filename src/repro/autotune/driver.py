@@ -49,7 +49,8 @@ class AutotuneDriver:
         self.last_error: Optional[str] = None
         self._worker: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        self._snap = None                      # previous epoch's snapshot
+        # previous epoch's snapshot -- guarded by: self._lock
+        self._snap = None
         self._lock = threading.Lock()          # serializes step()
         frontend.autotune = self               # health() surface
 

@@ -489,6 +489,9 @@ def _search_batch(arrays, queries, cos_theta, cfg: SearchSpec, valid=None,
                 max_degree=M)
             est_rank, extra_inc = rt.estimate_rank(ctx)
             prune = try_prune & (est_rank >= upper[:, None])
+            # repolint: ignore[trace-safety] extra_inc is a host dict of
+            # counter names (Router.extra_counters), not a tracer — its
+            # truthiness is concrete during tracing
             extras = {key: extras[key] + extra_inc.get(key, 0)
                       for key in extras} if extra_inc else extras
 

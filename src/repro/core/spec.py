@@ -153,6 +153,17 @@ def is_request_only(field: str) -> bool:
 REQUEST_ONLY_FIELDS = ("k", "cos_theta")
 assert all(is_request_only(f) for f in REQUEST_ONLY_FIELDS)
 
+# Engine-shaping fields that are NOT autotune knobs: `router` names a
+# registry entry the operator picks, `metric`/`use_hierarchy` are index
+# properties the graph overwrites, and `max_hops` is a hard budget, not a
+# quality/cost dial.  Together with KNOB_DOMAINS and REQUEST_ONLY_FIELDS
+# this classifies every SearchSpec field into exactly one cost class — the
+# `cache-key` static checker (repro.analysis) enforces the partition stays
+# total as fields are added.
+STRUCTURAL_FIELDS = ("router", "metric", "max_hops", "use_hierarchy")
+assert not (set(STRUCTURAL_FIELDS) & set(KNOB_DOMAINS)
+            | set(STRUCTURAL_FIELDS) & set(REQUEST_ONLY_FIELDS))
+
 
 def resolve_search_spec(spec: Optional["SearchSpec"],
                         default: "SearchSpec", owner: str) -> "SearchSpec":

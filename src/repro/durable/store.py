@@ -67,8 +67,8 @@ class DurableStore:
         self.dir = os.path.abspath(dirname)
         self.fsync = fsync
         self.fsync_interval_s = float(fsync_interval_s)
-        self._manifest = manifest
-        self._writer: Optional[wal.SegmentWriter] = None
+        self._manifest = manifest            # guarded by: self._lock
+        self._writer: Optional[wal.SegmentWriter] = None  # guarded by: self._lock
         self._lock = threading.Lock()        # manifest + writer swaps
         self._replayed_next_lsn: Optional[int] = None
 
@@ -106,7 +106,8 @@ class DurableStore:
 
     @property
     def manifest(self) -> Manifest:
-        return self._manifest
+        with self._lock:
+            return self._manifest
 
     def path(self, name: str) -> str:
         return os.path.join(self.dir, name)
@@ -119,7 +120,8 @@ class DurableStore:
 
     # --- mutation logging -------------------------------------------------
     def _require_writer(self) -> wal.SegmentWriter:
-        w = self._writer
+        with self._lock:
+            w = self._writer
         if w is None:
             raise wal.WalFailedError(
                 "store has no active WAL writer (not attached, or closed)")
@@ -141,8 +143,10 @@ class DurableStore:
 
     @property
     def next_lsn(self) -> int:
-        w = self._writer
-        return w.next_lsn if w is not None else self._manifest.next_lsn
+        with self._lock:
+            w = self._writer
+            manifest = self._manifest
+        return w.next_lsn if w is not None else manifest.next_lsn
 
     # --- checkpoint protocol ----------------------------------------------
     def rotate(self) -> None:
@@ -152,7 +156,11 @@ class DurableStore:
         is acked into it."""
         fault.hit("wal.rotate")
         with self._lock:
-            writer = self._require_writer()
+            writer = self._writer
+            if writer is None:
+                raise wal.WalFailedError(
+                    "store has no active WAL writer (not attached, or "
+                    "closed)")
             next_lsn = writer.next_lsn
             writer.close(do_fsync=True)   # no torn tail behind a successor
             self._writer = None
@@ -187,9 +195,11 @@ class DurableStore:
             name = _CKPT_FMT.format(seq)
             atomic_write_npz(self.path(name), payload,
                              write_site="checkpoint.write")
+            w = self._writer
             manifest = Manifest(
                 checkpoint=name, segments=[old.segments[-1]],
-                next_lsn=self.next_lsn, meta=old.meta)
+                next_lsn=w.next_lsn if w is not None else old.next_lsn,
+                meta=old.meta)
             write_manifest(self.dir, manifest)
             self._manifest = manifest
         self.prune()
@@ -214,7 +224,7 @@ class DurableStore:
     # --- recovery ---------------------------------------------------------
     def load_checkpoint(self) -> Dict[str, np.ndarray]:
         """Read + verify the manifest's checkpoint payload."""
-        name = self._manifest.checkpoint
+        name = self.manifest.checkpoint
         if name is None:
             raise CorruptIndexError(
                 f"{self.dir}: manifest has no checkpoint — creation "
@@ -233,7 +243,7 @@ class DurableStore:
         legitimately overlaps state the caller already holds.
         """
         records: List[wal.WalRecord] = []
-        segments = self._manifest.segments
+        segments = self.manifest.segments
         for i, seg in enumerate(segments):
             path = self.path(seg)
             final = i == len(segments) - 1
@@ -250,7 +260,7 @@ class DurableStore:
                     f"{self.dir}: WAL replay out of order (lsn {r.lsn} "
                     f"after {last}) — segment files were tampered with")
             last = r.lsn
-        self._replayed_next_lsn = max(last + 1, self._manifest.next_lsn)
+        self._replayed_next_lsn = max(last + 1, self.manifest.next_lsn)
         return records
 
     def attach(self) -> None:

@@ -216,9 +216,12 @@ class SegmentWriter:
         self._f: Optional[BinaryIO] = open(path, "ab")
         self._write_lock = threading.Lock()
         self._cond = threading.Condition()
-        self._next_lsn = next_lsn
-        self._synced_lsn = next_lsn - 1
-        self._sync_in_progress = False
+        self._next_lsn = next_lsn                # guarded by: self._write_lock
+        self._synced_lsn = next_lsn - 1          # guarded by: self._cond
+        self._sync_in_progress = False           # guarded by: self._cond
+        # poison marker; read on BOTH lock paths (append under _write_lock,
+        # wait_durable under _cond) so it carries no single-lock annotation:
+        # a stale read only delays the WalFailedError by one call
         self._failed: Optional[BaseException] = None
 
     # -- append -----------------------------------------------------------
@@ -309,7 +312,8 @@ class SegmentWriter:
     # -- lifecycle ---------------------------------------------------------
     @property
     def next_lsn(self) -> int:
-        return self._next_lsn
+        with self._write_lock:
+            return self._next_lsn
 
     def close(self, *, do_fsync: bool = True) -> None:
         """Flush (+fsync) and close.  Rotation closes the old segment with

@@ -97,8 +97,34 @@ class _Armed:
 
 
 _LOCK = threading.Lock()
-_SITES: Dict[str, _Armed] = {}
+_SITES: Dict[str, _Armed] = {}   # guarded by: _LOCK
 _ACTIVE = False          # fast path: hit() is one bool check when disarmed
+
+# Every PRODUCTION failpoint site, one name per `fault.hit(...)` call site
+# (the `write_site=`/`rename_site=` kwargs of the atomic-write helpers
+# count — the literal lives at the caller).  This registry is PASSIVE:
+# `arm()` accepts any name so tests can use scratch sites; the list exists
+# for the `failpoint-sync` static checker (repro.analysis), which keeps it
+# and the DESIGN.md §10 site table agreeing with the code in both
+# directions.  Adding a `hit()` call means adding a name here AND a §10
+# table row, or `make analyze` fails.
+DECLARED_SITES = frozenset({
+    "serve.dispatch",
+    "serve.worker",
+    "shard.search",
+    "sharded.search",
+    "mutate.merge.build",
+    "mutate.merge.swap",
+    "index.save.write",
+    "index.save.rename",
+    "wal.append",
+    "wal.fsync",
+    "wal.rotate",
+    "checkpoint.write",
+    "manifest.rename",
+    "autotune.step",
+    "autotune.probe",
+})
 
 
 def arm(site: str, spec: Optional[FaultSpec] = None, **kw) -> None:

@@ -164,17 +164,20 @@ class MutableAnnIndex:
             snapshot=snap, tombstone=tomb, tombstone_dev=_tombstone_dev(tomb),
             n_dead=0, epoch=0,
             delta=DeltaSegment.empty(config.delta_capacity, g.dim, g.metric))
-        self._next_ext = g.n
+        self._next_ext = g.n                  # guarded by: self._lock
         self._lock = threading.RLock()        # state swaps + mutation ops
         self._merge_lock = threading.Lock()   # one merge at a time
         self._engine_lock = threading.Lock()  # engine ledger + retired count
-        self._retired = 0                     # compiles owned by dead snapshots
-        self._noted: Dict[SearchSpec, Set[int]] = {}   # cfg -> batch sizes
-        self._merge_thread: Optional[threading.Thread] = None
-        self.merge_error: Optional[BaseException] = None
+        # compiles owned by dead snapshots -- guarded by: self._engine_lock
+        self._retired = 0
+        # cfg -> batch sizes -- guarded by: self._engine_lock
+        self._noted: Dict[SearchSpec, Set[int]] = {}
+        self._merge_thread: Optional[threading.Thread] = None  # guarded by: self._lock
+        self.merge_error: Optional[BaseException] = None  # guarded by: self._lock
         self.merges_completed = 0
         self.merge_retries_used = 0          # backoff retries ever taken
-        self._quarantined_until = 0.0        # time.monotonic() deadline
+        # time.monotonic() deadline -- guarded by: self._lock
+        self._quarantined_until = 0.0
         self._durable: Optional[DurableStore] = None
         self._replaying = False              # recover() applies, no re-log
         if durable_dir is not None:
@@ -214,9 +217,13 @@ class MutableAnnIndex:
 
     # --- mutation ---------------------------------------------------------
     def _check_merge_error(self):
-        if self.merge_error is not None:
+        # read-and-clear must be atomic against a concurrent merge failure
+        # storing a new error between our read and our reset
+        with self._lock:
+            if self.merge_error is None:
+                return
             err, self.merge_error = self.merge_error, None
-            raise RuntimeError("background merge failed") from err
+        raise RuntimeError("background merge failed") from err
 
     def insert(self, vectors: np.ndarray) -> np.ndarray:
         """Add rows; returns their assigned external ids (int64 [n]).
@@ -259,10 +266,12 @@ class MutableAnnIndex:
                 raise ValueError(
                     "delta segment full and auto_merge='off'; call merge()")
             if self.quarantined:
+                with self._lock:
+                    left = self._quarantined_until - time.monotonic()
                 raise MergeQuarantinedError(
                     "delta segment full while merges are quarantined "
-                    f"({self._quarantined_until - time.monotonic():.1f}s of "
-                    "cooldown left); retry later or clear_quarantine()")
+                    f"({left:.1f}s of cooldown left); retry later or "
+                    "clear_quarantine()")
             try:
                 self._merge_with_retry()
             except Exception as e:   # noqa: BLE001 — typed backpressure
@@ -430,7 +439,8 @@ class MutableAnnIndex:
     def quarantined(self) -> bool:
         """True while the quarantine cooldown from an exhausted merge-retry
         budget is running: no merge attempts, pre-merge snapshot serves."""
-        return time.monotonic() < self._quarantined_until
+        with self._lock:
+            return time.monotonic() < self._quarantined_until
 
     def clear_quarantine(self):
         """Operator override: forget the quarantine and its stored error."""
@@ -488,6 +498,9 @@ class MutableAnnIndex:
             def run():
                 try:
                     self._merge_with_retry()
+                # repolint: ignore[fail-open] _merge_with_retry stored the
+                # failure (merge_error + quarantine cooldown) before raising;
+                # this wrapper only keeps the daemon thread quiet
                 except Exception:   # noqa: BLE001 — recorded as quarantine
                     pass            # merge_error + cooldown already set
 
@@ -498,6 +511,9 @@ class MutableAnnIndex:
     def wait_for_merge(self):
         """Block until a background merge (if any) finishes, then re-raise
         any failure it left behind."""
+        # repolint: ignore[guarded-by] volatile read: join() on a stale
+        # thread ref is benign (it already finished), and holding the
+        # mutation lock across a join would deadlock against the merge swap
         t = self._merge_thread
         if t is not None:
             t.join()

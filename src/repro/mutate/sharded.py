@@ -191,6 +191,9 @@ class MutableShardedAnnIndex:
         def run():
             try:
                 sh._merge_with_retry()
+            # repolint: ignore[fail-open] _merge_with_retry stored the failure
+            # (shard merge_error + quarantine) before raising; the wrapper
+            # only keeps the daemon thread quiet
             except Exception:   # noqa: BLE001 — recorded as shard quarantine
                 pass
 

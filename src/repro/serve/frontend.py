@@ -110,7 +110,8 @@ class ServeFrontend:
         self.telemetry = ServeTelemetry()
         self._lock = threading.RLock()          # queue + session state
         self._dispatch_lock = threading.Lock()  # serializes engine calls
-        self._pending_rows = 0
+        self._pending_rows = 0                  # guarded by: self._lock
+        # spec -> session -- guarded by: self._lock
         self._sessions: Dict[SearchSpec, _Session] = {}
         self._worker: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -304,6 +305,8 @@ class ServeFrontend:
         admitted: List[_Request] = []
         while sess.queue:
             r = sess.queue.popleft()
+            # repolint: ignore[guarded-by] calling contract (see docstring):
+            # flush() and the worker loop invoke _drain under self._lock
             self._pending_rows -= r.n
             if r.deadline is not None and now > r.deadline:
                 self.telemetry.expired += 1

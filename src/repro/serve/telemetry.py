@@ -83,8 +83,8 @@ class ServeTelemetry:
 
     def __init__(self):
         self.buckets: Dict[int, BucketStats] = {}
-        self.request_lat_s: Deque[float] = _window()
-        self.queue_wait_s: Deque[float] = _window()
+        self.request_lat_s: Deque[float] = _window()  # guarded by: self._obs_lock
+        self.queue_wait_s: Deque[float] = _window()   # guarded by: self._obs_lock
         self.submitted = 0
         self.served = 0
         self.rejected = 0           # oversized / backpressure, at submit
@@ -94,10 +94,11 @@ class ServeTelemetry:
         self.worker_errors = 0      # background flush-loop failures
         self.recompiles_after_warmup = 0
         self._warm = False
-        self._stats: Deque[SearchStats] = _window()
+        self._stats: Deque[SearchStats] = _window()   # guarded by: self._obs_lock
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
-        # completion timestamps (same window as request_lat_s): windowed QPS
+        # completion timestamps (same window as request_lat_s): windowed
+        # QPS -- guarded by: self._obs_lock
         self._done_t: Deque[float] = _window()
         # guards the sample deques: the dispatch thread appends while a
         # controller thread snapshots (list(deque) during a concurrent

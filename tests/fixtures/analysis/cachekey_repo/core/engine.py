@@ -1,0 +1,13 @@
+"""Unhashable / array-bearing / request-only cache keys (cache-key fixture)."""
+import jax.numpy as jnp
+
+_ENGINE_CACHE = {}
+
+
+def lookup(spec, arr):
+    key = (spec.efs, [1, 2], jnp.asarray(arr), spec.k)
+    return _ENGINE_CACHE.get(key)   # expect[cache-key,cache-key,cache-key]
+
+
+def store(spec, fn):
+    _ENGINE_CACHE[(spec.efs, spec.metric)] = fn   # hashable scalars: clean

@@ -1,0 +1,21 @@
+"""Bad SearchSpec classification + canonical() drift (cache-key fixture)."""
+import dataclasses
+
+KNOB_DOMAINS = {                    # expect[cache-key] stale_knob not a field
+    "efs": (32, 64),
+    "stale_knob": (1, 2),
+}
+REQUEST_ONLY_FIELDS = ("k",)
+STRUCTURAL_FIELDS = ("metric",)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    efs: int = 64
+    metric: str = "l2"
+    k: int = 10
+    cos_theta: float = 0.0          # expect[cache-key] unclassified
+
+    def canonical(self):
+        # resets a knob, forgets the request-only field: two findings
+        return dataclasses.replace(self, efs=64)  # expect[cache-key,cache-key]

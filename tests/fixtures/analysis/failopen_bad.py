@@ -1,0 +1,52 @@
+"""Deliberately state-free broad excepts (the fail-open contract)."""
+
+
+class Worker:
+    def __init__(self):
+        self.err = None
+        self.failures = 0
+
+    def swallow_pass(self):
+        try:
+            self.step()
+        except Exception:   # noqa: BLE001    expect[fail-open]
+            pass
+
+    def swallow_compute_only(self):
+        try:
+            self.step()
+        except Exception as e:   # noqa: BLE001   expect[fail-open]
+            str(e)                # computes, records nothing
+
+    def bare_except(self):
+        try:
+            self.step()
+        except:                                # expect[fail-open]
+            pass
+
+    def records_field(self):
+        try:
+            self.step()
+        except Exception as e:   # noqa: BLE001 — stored: no finding
+            self.err = e
+
+    def records_counter(self):
+        try:
+            self.step()
+        except Exception:   # noqa: BLE001 — counted: no finding
+            self.failures += 1
+
+    def reraises(self):
+        try:
+            self.step()
+        except Exception as e:   # noqa: BLE001 — wrapped: no finding
+            raise RuntimeError("boom") from e
+
+    def narrow_is_ignored(self):
+        try:
+            self.step()
+        except ValueError:      # not broad: no finding
+            pass
+
+    def step(self):
+        raise ValueError("x")

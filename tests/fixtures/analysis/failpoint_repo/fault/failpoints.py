@@ -1,0 +1,10 @@
+"""Mini failpoint registry (failpoint-sync fixture)."""
+
+DECLARED_SITES = frozenset({
+    "svc.ok",
+    "svc.dead",     # expect[failpoint-sync,failpoint-sync] dead + undocumented
+})
+
+
+def hit(site, sub=None):
+    return None

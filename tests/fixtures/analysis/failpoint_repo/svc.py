@@ -1,0 +1,7 @@
+"""Service module with one good and one undeclared failpoint site."""
+from fault import failpoints as fault
+
+
+def go():
+    fault.hit("svc.ok")
+    fault.hit("svc.undeclared")     # expect[failpoint-sync,failpoint-sync]

@@ -1,0 +1,40 @@
+"""Deliberately broken lock discipline (guarded-by + lock-order).
+
+Lines carrying an ``expect[checker-id]`` comment are asserted to produce
+exactly that finding (see tests/test_analysis.py::fixture_expectations).
+"""
+import threading
+
+
+class ServeFrontend:          # name is in the declared lock-order table
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._dispatch_lock = threading.Lock()
+        self._pending_rows = 0    # guarded by: self._lock
+        # spec -> session -- guarded by: self._lock
+        self._sessions = {}
+        self._unguarded = 0       # no annotation: never checked
+
+    def ok_read(self):
+        with self._lock:
+            return self._pending_rows + len(self._sessions)
+
+    def bad_read(self):
+        return self._pending_rows          # expect[guarded-by]
+
+    def bad_write(self):
+        self._sessions = {}                # expect[guarded-by]
+
+    def closure_leak(self):
+        with self._lock:
+            def worker():
+                self._pending_rows += 1    # expect[guarded-by]
+            return worker
+
+    def inverted(self):
+        with self._dispatch_lock:
+            with self._lock:               # expect[lock-order]
+                return self._pending_rows
+
+    def unannotated_ok(self):
+        return self._unguarded

@@ -1,0 +1,30 @@
+"""Suppression semantics: justified silences, bare does not, typos flagged.
+
+This fixture is asserted with explicit line numbers in
+tests/test_analysis.py (a bare tag cannot carry an inline marker —
+trailing text would become its justification).  Keep the layout stable.
+"""
+import threading
+
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.val = 0    # guarded by: self._lock
+
+    def silenced(self):
+        # a justified suppression silences the finding on the next code line
+        # repolint: ignore[guarded-by] read-only snapshot for logs; a stale
+        # value is acceptable here
+        return self.val
+
+    def silenced_inline(self):
+        return self.val  # repolint: ignore[guarded-by] monitoring read, staleness ok
+
+    def bare_tag_does_not_silence(self):
+        return self.val  # repolint: ignore[guarded-by]
+
+    def unknown_id(self):
+        with self._lock:
+            # repolint: ignore[gaurded-by] typo'd checker id
+            return self.val

@@ -1,0 +1,54 @@
+"""Deliberate trace-safety hazards: Python control flow on traced values."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def branch_on_arg(x):
+    if x > 0:                              # expect[trace-safety]
+        return x
+    return -x
+
+
+@jax.jit
+def loop_and_cast(x):
+    total = x * 2
+    while total > 0:                       # expect[trace-safety]
+        total = total - 1
+    return int(total)                      # expect[trace-safety]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def static_is_exempt(x, mode):
+    if mode == "l2":                       # static_argnames: no finding
+        return jnp.sum(x * x)
+    return jnp.sum(jnp.abs(x))
+
+
+@jax.jit
+def shape_facts_are_concrete(x):
+    y = jnp.asarray(x)
+    if y.shape[0] > 4:                     # shape: no finding
+        return y
+    if y is None:                          # identity: no finding
+        return y
+    return y
+
+
+def body(state):
+    i, acc = state
+    flag = bool(acc)                       # expect[trace-safety]
+    return i + 1, acc + jnp.float32(flag)
+
+
+def cond(state):
+    i, _ = state
+    return i < 8
+
+
+def run():
+    # body/cond resolved by name: their params are traced
+    return lax.while_loop(cond, body, (0, jnp.float32(0)))

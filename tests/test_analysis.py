@@ -1,0 +1,183 @@
+"""repolint framework tests: fixtures, suppression semantics, real tree.
+
+Fixture convention: a line comment containing ``expect[id]`` (or
+``expect[id-a,id-b]`` for several findings on one line) asserts that the
+analyzer produces exactly those findings at that line — no more, no fewer,
+nowhere else in the fixture.  Suppression fixtures cannot carry markers
+(trailing text after ``ignore[...]`` becomes the justification), so
+``tests/fixtures/analysis/suppress.py`` is asserted by explicit line
+numbers instead.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import CHECKERS, run_analysis
+from repro.analysis.core import SourceFile
+from repro.analysis.runner import render_text
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "fixtures", "analysis")
+
+EXPECT_RE = re.compile(r"expect\[([a-z\-]+(?:\s*,\s*[a-z\-]+)*)\]")
+
+
+def _markers(root, relpaths):
+    """Sorted (relpath, line, checker-id) multiset from expect[] comments."""
+    out = []
+    for rel in relpaths:
+        sf = SourceFile.load(os.path.join(root, rel), root)
+        for ln, comment in sf.comments.items():
+            m = EXPECT_RE.search(comment)
+            if m:
+                for cid in m.group(1).split(","):
+                    out.append((rel, ln, cid.strip()))
+    return sorted(out)
+
+
+def _found(result):
+    return sorted((f.path, f.line, f.checker) for f in result.findings)
+
+
+def _run_fixture(relpaths, root=FIXTURES):
+    result = run_analysis(root=root, paths=relpaths)
+    assert result.parse_errors == [], result.parse_errors
+    return result
+
+
+# --- one fixture per checker -------------------------------------------------
+def test_locks_fixture_matches_markers():
+    rels = ["locks_bad.py"]
+    result = _run_fixture(rels)
+    assert _found(result) == _markers(FIXTURES, rels)
+    # both lock checkers fired (guarded-by accesses + the inversion)
+    ids = {f.checker for f in result.findings}
+    assert ids == {"guarded-by", "lock-order"}
+
+
+def test_trace_fixture_matches_markers():
+    rels = ["trace_bad.py"]
+    result = _run_fixture(rels)
+    assert _found(result) == _markers(FIXTURES, rels)
+    assert all(f.checker == "trace-safety" for f in result.findings)
+
+
+def test_failopen_fixture_matches_markers():
+    rels = ["failopen_bad.py"]
+    result = _run_fixture(rels)
+    assert _found(result) == _markers(FIXTURES, rels)
+    # the pass-only handler is called out as such
+    by_line = {f.line: f for f in result.findings}
+    assert "bare `pass`" in by_line[12].message
+
+
+def test_cachekey_fixture_matches_markers():
+    rels = ["cachekey_repo/core/spec.py", "cachekey_repo/core/engine.py"]
+    result = _run_fixture(rels)
+    assert _found(result) == _markers(FIXTURES, rels)
+    msgs = " | ".join(f.message for f in result.findings)
+    assert "stale classification" in msgs          # stale_knob
+    assert "unclassified" in msgs                  # cos_theta
+    assert "does not reset request-only" in msgs   # canonical misses k
+    assert "resets 'efs'" in msgs                  # canonical strips a knob
+    assert "unhashable list" in msgs               # [1, 2] in key
+    assert "array value" in msgs                   # jnp.asarray in key
+    assert "request-only field .k" in msgs         # .k in key
+
+
+def test_failpoint_fixture_matches_markers():
+    root = os.path.join(FIXTURES, "failpoint_repo")
+    rels = ["svc.py", "fault/failpoints.py"]
+    result = _run_fixture(["."], root=root)
+    doc = [f for f in result.findings if f.path == "DESIGN.md"]
+    rest = sorted((f.path, f.line, f.checker)
+                  for f in result.findings if f.path != "DESIGN.md")
+    assert rest == _markers(root, rels)
+    # the ghost documentation row is flagged at its own table line
+    assert [(f.line, f.checker) for f in doc] == [(8, "failpoint-sync")]
+    assert "doc.ghost" in doc[0].message and "not declared" in doc[0].message
+
+
+# --- suppression semantics ---------------------------------------------------
+def test_suppressions():
+    result = _run_fixture(["suppress.py"])
+    # justified suppressions (standalone multi-line + inline) silence the
+    # guarded-by findings but keep them visible in the suppressed list
+    assert sorted((f.line, f.checker) for f in result.suppressed) == [
+        (19, "guarded-by"),     # standalone comment covers next code line
+        (22, "guarded-by"),     # inline comment covers its own line
+    ]
+    # the bare tag silences nothing AND is itself a finding; the typo'd
+    # checker id is reported so it cannot silently guard nothing
+    assert sorted((f.line, f.checker) for f in result.findings) == [
+        (25, "guarded-by"),     # finding survives the bare tag
+        (25, "suppression"),    # the bare tag itself
+        (29, "suppression"),    # unknown id 'gaurded-by'
+    ]
+    by = {(f.line, f.checker): f for f in result.findings}
+    assert "without a justification" in by[(25, "suppression")].message
+    assert "gaurded-by" in by[(29, "suppression")].message
+
+
+# --- the real tree is clean under --strict -----------------------------------
+def test_real_tree_is_clean():
+    result = run_analysis()     # root inferred, paths=("src",)
+    assert result.parse_errors == []
+    assert result.findings == [], "\n" + "\n".join(
+        f.text() for f in result.findings)
+    assert result.exit_code_strict == 0
+    # the justified exceptions stay visible as suppressed, not vanished
+    assert result.suppressed, "expected the documented suppressions"
+    assert all(f.checker in CHECKERS for f in result.suppressed)
+
+
+def test_registry_has_the_five_checkers():
+    assert set(CHECKERS) == {"guarded-by", "lock-order", "trace-safety",
+                             "cache-key", "failpoint-sync", "fail-open"}
+
+
+def test_unknown_checker_id_rejected():
+    with pytest.raises(SystemExit):
+        run_analysis(root=FIXTURES, paths=["suppress.py"],
+                     checks=["no-such-checker"])
+
+
+def test_render_text_summary_line():
+    result = _run_fixture(["locks_bad.py"])
+    text = render_text(result)
+    assert "locks_bad.py:23: [guarded-by]" in text
+    assert re.search(r"repolint: 1 files, \d+ checkers, 4 finding\(s\), "
+                     r"0 suppressed", text)
+
+
+# --- CLI ---------------------------------------------------------------------
+def _cli(args, cwd=REPO_ROOT):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", "repro.analysis"] + args,
+                          cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_strict_fails_on_fixture(tmp_path):
+    report = tmp_path / "report.json"
+    proc = _cli(["--root", FIXTURES, "locks_bad.py", "--strict",
+                 "--json", str(report)])
+    assert proc.returncode == 1
+    assert "[guarded-by]" in proc.stdout and "[lock-order]" in proc.stdout
+    data = json.loads(report.read_text())
+    assert data["files_scanned"] == 1
+    assert len(data["findings"]) == 4
+    assert {"checker", "path", "line", "message", "hint"} <= \
+        set(data["findings"][0])
+
+
+def test_cli_non_strict_always_exits_zero():
+    proc = _cli(["--root", FIXTURES, "locks_bad.py"])
+    assert proc.returncode == 0
+    assert "4 finding(s)" in proc.stdout
